@@ -1,0 +1,55 @@
+"""Fig. 10 (MBIW charge-injection / leakage) and Fig. 20-21 (distortion vs
+C_in, RMS vs supply) behavioural checks."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import digital_ref as dr
+from repro.core import noise_model as nm
+from repro.core.cim_macro import cim_macro_forward
+from repro.core.hw import CIMMacroConfig, DEFAULT_MACRO
+from repro.core.noise_model import NO_NOISE, NoiseConfig
+
+
+def run_fig10():
+    """Charge-injection error map: bounded by ~1 LSB8, bilinear in
+    (V_in, V_acc) with a zero-error locus."""
+    noise = NoiseConfig()
+    cfg = DEFAULT_MACRO
+    vs = jnp.linspace(0.1, 0.7, 13)
+    grid = np.asarray([[float(nm.charge_injection_error(
+        jnp.float32(vi), jnp.float32(va), noise, cfg))
+        for va in vs] for vi in vs])
+    lsb8 = nm.lsb8_volts(cfg)
+    return float(np.abs(grid).max() / lsb8), float(np.abs(grid).min())
+
+
+def run_fig20(c_in: int):
+    """Zero-valued-DP distortion under clustered weights (paper's stress
+    pattern): inputs zero-complement, half +1 / half -1 weights."""
+    k = c_in * 9
+    x = jnp.full((1, k), 255, jnp.int32)
+    w = jnp.concatenate([jnp.ones((k // 2, 8)), -jnp.ones((k - k // 2, 8))])
+    planes = dr.encode_weight_planes(w.astype(jnp.int32), 1)
+    code = cim_macro_forward(x, planes, r_in=8, r_out=8, gamma=1.0,
+                             noise=NoiseConfig(), key=jax.random.PRNGKey(0))
+    return float(jnp.mean(jnp.abs(code.astype(jnp.float32) - 128.0)))
+
+
+def main():
+    t0 = time.time()
+    max_lsb, _ = run_fig10()
+    print(f"fig10_charge_injection,{(time.time()-t0)*1e6:.0f},"
+          f"max_{max_lsb:.2f}lsb8(paper<=1)")
+    assert max_lsb < 2.0
+    for c_in in (4, 16, 64, 128):
+        t0 = time.time()
+        inl = run_fig20(c_in)
+        print(f"fig20_zero_dp_cin{c_in},{(time.time()-t0)*1e6:.0f},"
+              f"inl_{inl:.1f}codes")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Fig. 22/23 + Table I: energy-efficiency / throughput trade-offs."""
+import time
+
+from repro.core.mapping import LayerSpec
+from repro.perfmodel import AcceleratorPerfModel, EnergyModel
+from repro.perfmodel.macro_perf import cim_eval_time_ns
+
+
+def run_fig22a():
+    """EE vs throughput for (r_in, r_out) combos, 1b weights, C_in=128."""
+    em = EnergyModel()
+    rows = []
+    for r_in, r_out in ((1, 1), (2, 2), (4, 4), (8, 8), (1, 8), (8, 1)):
+        spec = LayerSpec(m=1, k=1152, n=256, r_in=r_in, r_w=1, r_out=r_out,
+                         kernel=(3, 3))
+        ee = em.macro_tops_per_watt(spec)            # raw POPS/W
+        tp = em.macro_throughput_tops(spec)
+        rows.append((r_in, r_out, ee / 1e3, tp))
+    return rows
+
+
+def run_fig22b():
+    """8b energy/op vs C_in: ADC amortization."""
+    em = EnergyModel()
+    rows = []
+    for c_in in (4, 16, 64, 128):
+        spec = LayerSpec(m=1, k=c_in * 9, n=256, r_in=8, r_w=1, r_out=8,
+                         kernel=(3, 3))
+        from repro.core.mapping import map_layer
+        mp = map_layer(spec)
+        e = em.macro_energy_pj(spec, mp)
+        ops = em.macro_ops_per_eval(spec, mp)
+        rows.append((c_in, e / ops * 1e3))            # fJ/op
+    return rows
+
+
+def run_fig23_system():
+    """System-level EE with I/O transfer overheads (Eqs. 8-10)."""
+    ap = AcceleratorPerfModel()
+    rows = []
+    for c_in in (4, 16, 64, 128):
+        spec = LayerSpec(m=32 * 32, k=c_in * 9, n=64, r_in=8, r_w=4,
+                         r_out=8, kernel=(3, 3))
+        rep = ap.layer_report(spec)
+        rows.append((c_in, rep["system_tops_per_w_8b"],
+                     rep["macro_fraction"], rep["tops_8b_norm"]))
+    return rows
+
+
+def main():
+    t0 = time.time()
+    for r_in, r_out, pops, tops in run_fig22a():
+        print(f"fig22a_ee_tp_rin{r_in}_rout{r_out},0,"
+              f"{pops:.2f}POPSpW_{tops:.2f}TOPS")
+    for c_in, fj in run_fig22b():
+        print(f"fig22b_energy_cin{c_in},0,{fj:.0f}fJ/op")
+    for c_in, ee, frac, tops in run_fig23_system():
+        print(f"fig23_system_cin{c_in},0,{ee:.1f}TOPSpW8b"
+              f"_macrofrac{frac:.2f}_{tops:.3f}TOPS")
+    us = (time.time() - t0) * 1e6
+    print(f"fig22_23_total,{us:.0f},done")
+
+
+if __name__ == "__main__":
+    main()

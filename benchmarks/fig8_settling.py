@@ -1,0 +1,37 @@
+"""Fig. 8(b): DP linearity error vs DP duration (settling model)."""
+import time
+
+from repro.core.noise_model import NoiseConfig, settle_fraction
+from repro.core.hw import DEFAULT_MACRO
+from repro.core import digital_ref as dr
+
+
+def run():
+    noise = NoiseConfig()
+    cfg = DEFAULT_MACRO
+    rows = []
+    for t_dp in (2.0, 3.0, 5.0, 7.0, 10.0):
+        # worst-case: full array, max dp -> deviation alpha*N*VDDL
+        frac = settle_fraction(cfg.n_units, t_dp, noise)
+        v_full = cfg.swing_efficiency(cfg.n_units) * cfg.vddl
+        err_v = (1 - frac) * v_full
+        lsb = cfg.alpha_adc() * cfg.vddh / 2 ** 7
+        rows.append((t_dp, err_v / lsb))
+    return rows
+
+
+def main():
+    t0 = time.time()
+    rows = run()
+    us = (time.time() - t0) * 1e6
+    for t_dp, err_lsb in rows:
+        print(f"fig8_settling_tdp{t_dp:.0f}ns,{us/len(rows):.1f},"
+              f"inl_{err_lsb:.2f}lsb")
+    # paper: T_dp = 5ns keeps INL below ~1 LSB
+    err5 = [e for t, e in rows if t == 5.0][0]
+    assert err5 < 1.2, err5
+    print(f"fig8_summary,0,inl_at_5ns_{err5:.2f}lsb(paper<1)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Pallas cim_mbiw kernel micro-benchmark (interpret mode on CPU: checks
+dispatch overhead + correctness at benchmark shapes; wall-clock here is NOT
+TPU performance — the TPU projection is the roofline analysis)."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import digital_ref as dr
+from repro.core.hw import DEFAULT_MACRO
+from repro.kernels.cim_mbiw import ops
+from repro.kernels.cim_mbiw.ref import cim_matmul_ref
+
+
+def bench(m, k, n, r_in=8, r_w=4, r_out=8, iters=3):
+    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.randint(kx, (m, k), 0, 2 ** r_in).astype(jnp.int32)
+    w = dr.quantize_weight_odd(
+        jax.random.randint(kw, (k, n), -(2 ** r_w - 1), 2 ** r_w), r_w)
+    gamma = jnp.full((n,), 16.0)
+    beta = jnp.zeros((n,))
+    cfg = DEFAULT_MACRO
+    units = cfg.units_for_rows(min(k, cfg.n_rows))
+    g0 = dr.adc_gain_factor(r_in, r_w, r_out, units * cfg.rows_per_unit,
+                            cfg.swing_efficiency(units), cfg.alpha_adc())
+
+    out = ops.cim_matmul(x, w, gamma, beta, r_in=r_in, r_out=r_out, g0=g0)
+    out.block_until_ready()
+    t0 = time.time()
+    for _ in range(iters):
+        out = ops.cim_matmul(x, w, gamma, beta, r_in=r_in, r_out=r_out,
+                             g0=g0)
+        out.block_until_ready()
+    t_kernel = (time.time() - t0) / iters
+
+    ref = cim_matmul_ref(x, w, gamma, beta, g0=g0, r_out=r_out)
+    match = bool(jnp.all(out == ref))
+    return t_kernel * 1e6, match
+
+
+def main():
+    for (m, k, n) in ((128, 1152, 64), (256, 1152, 256), (512, 512, 128)):
+        us, match = bench(m, k, n)
+        print(f"kernel_cim_mbiw_{m}x{k}x{n},{us:.0f},match{match}")
+
+
+if __name__ == "__main__":
+    main()

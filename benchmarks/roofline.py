@@ -1,0 +1,133 @@
+"""Roofline analysis from the dry-run JSONs (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh):
+    compute term    = HLO_FLOPs / peak_FLOPs            (per device)
+    memory term     = HLO_bytes / HBM_bw
+    collective term = collective_bytes / (links * link_bw)
+plus MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) and the useful-
+compute ratio.  Hardware: TPU v5e-class, 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (hw.TPU_V5E).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import all_archs, get_config
+from repro.configs.base import SHAPES
+from repro.core.hw import TPU_V5E
+from repro.models import transformer as tf
+
+# ICI links per chip used by our meshes: 2D torus -> ~4 usable links, but we
+# conservatively model 3 effective links for mixed AG/AR traffic patterns.
+EFFECTIVE_LINKS = 3.0
+
+
+def model_flops(arch_mod: str, shape_name: str) -> float:
+    """Analytic useful FLOPs for the whole step (all devices), fwd+bwd for
+    train (x3 of fwd), fwd for prefill, per-token for decode."""
+    import jax
+    import numpy as np
+    cfg = get_config(arch_mod)
+    shape = SHAPES[shape_name]
+    params = jax.eval_shape(lambda: tf.init_params(cfg, jax.random.PRNGKey(0)))
+
+    def leaf_count(tree):
+        return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tree))
+
+    n_total = leaf_count(params)
+    # active params: for MoE, experts beyond top_k are inactive per token
+    if cfg.family == "moe":
+        moe_leaves = jax.tree_util.tree_map_with_path(
+            lambda p, l: l if any("moe" in str(getattr(k, "key", ""))
+                                  for k in p) else None, params)
+        n_moe = sum(int(np.prod(l.shape))
+                    for l in jax.tree.leaves(moe_leaves) if l is not None)
+        # router + shared stay active; experts scale by top_k / E
+        n_active = (n_total - n_moe) + n_moe * cfg.moe_top_k / cfg.moe_experts
+    else:
+        n_active = n_total
+
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def load_cells(dryrun_dir: str = "experiments/dryrun") -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def roofline_row(cell: Dict) -> Optional[Dict]:
+    if cell.get("status") != "ok":
+        return None
+    chips = 512 if cell["mesh"] == "multi" else 256
+    flops_dev = cell.get("hlo_flops", 0.0)
+    bytes_dev = cell.get("hlo_bytes", 0.0)
+    coll_dev = cell.get("collective_bytes", 0.0)
+    t_compute = flops_dev / TPU_V5E.peak_bf16_flops
+    t_memory = bytes_dev / TPU_V5E.hbm_bw
+    t_coll = coll_dev / (EFFECTIVE_LINKS * TPU_V5E.ici_bw_per_link)
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+
+    from repro.launch.dryrun import ALIAS
+    arch_mod = ALIAS.get(cell["arch"], cell["arch"])
+    mf = model_flops(arch_mod, cell["shape"])
+    mf_dev = mf / chips
+    useful_ratio = mf_dev / flops_dev if flops_dev else 0.0
+    # roofline fraction: time the useful FLOPs would take at peak vs the
+    # bound imposed by the dominant term
+    frac = (mf_dev / TPU_V5E.peak_bf16_flops) / bound if bound else 0.0
+    return {
+        "arch": cell["arch"], "shape": cell["shape"], "mesh": cell["mesh"],
+        "cim": cell.get("cim_mode", "bypass"),
+        "t_compute": t_compute, "t_memory": t_memory, "t_collective": t_coll,
+        "dominant": dominant, "model_flops": mf,
+        "useful_ratio": useful_ratio, "roofline_frac": frac,
+        "step_time_bound_s": bound,
+    }
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute (s) | memory (s) | collective (s)"
+           " | dominant | useful/HLO | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute']:.3f} | {r['t_memory']:.3f} "
+            f"| {r['t_collective']:.3f} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_frac']:.3f} |")
+    return hdr + "\n".join(lines)
+
+
+def main(dryrun_dir: str = "experiments/dryrun",
+         out: str = "experiments/roofline.json"):
+    rows = []
+    for cell in load_cells(dryrun_dir):
+        r = roofline_row(cell)
+        if r is not None:
+            rows.append(r)
+    rows.sort(key=lambda r: (r["mesh"], r["arch"], r["shape"]))
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(markdown_table(rows))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

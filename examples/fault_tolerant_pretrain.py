@@ -1,0 +1,73 @@
+"""Fault-tolerant ~100M-param pretraining run: trains an OLMo-style model
+for a few hundred steps on the synthetic LM stream with checkpoint/restart,
+then kills itself twice mid-run to prove recovery (deliverable (b): the
+end-to-end train driver).
+
+  PYTHONPATH=src python examples/fault_tolerant_pretrain.py \
+      [--steps 300] [--d-model 512 --layers 8]
+"""
+import argparse
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.cim_layers import CIMConfig
+from repro.data.lm_data import LMDataConfig, SyntheticLM
+from repro.launch.steps import init_train_state, make_train_step
+from repro.optim import AdamWConfig
+from repro.runtime.fault_tolerance import (FTConfig, TrainDriver,
+                                           make_fault_injector)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--d-model", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ft_pretrain")
+    args = ap.parse_args()
+
+    shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+    cfg = get_config("olmo_1b").replace(
+        n_layers=args.layers, d_model=args.d_model,
+        n_heads=8, n_kv_heads=8, d_ff=4 * args.d_model,
+        vocab_size=8192, cim=CIMConfig(mode="bypass"), remat=False)
+    data = SyntheticLM(LMDataConfig(vocab_size=cfg.vocab_size,
+                                    seq_len=args.seq_len,
+                                    global_batch=args.batch))
+
+    def batch_fn(step):
+        toks, labels = data.batch_at(step)
+        return {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels)}
+
+    step_fn = jax.jit(make_train_step(cfg, AdamWConfig(lr=3e-4),
+                                      total_steps=args.steps, warmup=30),
+                      donate_argnums=(0,))
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    n_params = sum(int(np.prod(p.shape))
+                   for p in jax.tree.leaves(state["params"]))
+    print(f"model: {n_params/1e6:.0f}M params "
+          f"({args.layers}L x {args.d_model})")
+
+    driver = TrainDriver(
+        FTConfig(ckpt_dir=args.ckpt_dir, ckpt_every=50, max_restarts=5),
+        step_fn, batch_fn, state_template=state)
+    injector = make_fault_injector({args.steps // 3: 1,
+                                    2 * args.steps // 3: 1})
+    state, hist = driver.run(state, args.steps, fault_injector=injector)
+
+    first = np.mean([h.loss for h in hist[:20]])
+    last = np.mean([h.loss for h in hist[-20:]])
+    print(f"steps={len(hist)} restarts={driver.restarts} "
+          f"loss {first:.3f} -> {last:.3f}")
+    assert driver.restarts == 2 and last < first
+    print("fault-tolerant pretraining: OK")
+
+
+if __name__ == "__main__":
+    main()

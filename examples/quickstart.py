@@ -1,0 +1,37 @@
+"""Quickstart: the paper's technique in 30 lines.
+
+A CIM-quantized linear layer with distribution-aware reshaping (ABN),
+compared against (a) full precision and (b) unity-gain quantization —
+reproducing the paper's Fig. 3 argument on one matmul.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core.cim_layers import CIMConfig, cim_linear_apply, init_cim_linear
+
+key = jax.random.PRNGKey(0)
+cfg = CIMConfig(mode="fakequant")          # 8b in, 4b weights, 8b ADC out
+
+# a layer that uses 4 of the macro's 32 serial-split units (K=144 rows)
+params = init_cim_linear(key, 144, 64, cfg=cfg)   # distribution-aware gamma
+x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(1), (256, 144)))
+
+y_fp = x @ params["w"]                                   # full precision
+y_cim = cim_linear_apply(params, x, cfg)                 # IMAGINE path
+unity = {**params, "abn_log_gamma": jnp.zeros_like(params["abn_log_gamma"])}
+y_unity = cim_linear_apply(unity, x, cfg)                # no reshaping
+
+def rel(y):
+    return float(jnp.linalg.norm(y - y_fp) / jnp.linalg.norm(y_fp))
+
+print(f"relative error, distribution-aware ABN : {rel(y_cim):8.4f}")
+print(f"relative error, unity gain (no ABN)    : {rel(y_unity):8.4f}")
+print("-> the ABN 'zoom' recovers the ADC bits the narrow DP distribution "
+      "would otherwise waste (paper Fig. 3).")
+
+# the same layer through the voltage-domain behavioural macro (Sec. III)
+y_sim = cim_linear_apply(params, x[:16], cfg.replace(mode="sim"))
+print(f"voltage-domain sim vs fakequant        : "
+      f"{float(jnp.linalg.norm(y_sim - y_cim[:16]) / jnp.linalg.norm(y_sim)):8.4f}")

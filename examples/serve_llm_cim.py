@@ -1,0 +1,53 @@
+"""Serve a smoke-scale LLM with CIM-quantized weights: batched prefill +
+decode through the KV cache, bypass-vs-CIM agreement report.
+
+  PYTHONPATH=src python examples/serve_llm_cim.py --arch granite-8b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core.cim_layers import CIMConfig
+from repro.launch.steps import make_serve_step
+from repro.models import transformer as tf
+
+
+def generate(cfg, params, prompt, gen_len):
+    cache = tf.init_cache(cfg, prompt.shape[0],
+                          max_len=prompt.shape[1] + gen_len + 8)
+    logits, cache, _ = tf.forward(cfg, params, prompt, cache=cache)
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    step = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+    out = [tok]
+    for _ in range(gen_len):
+        tok, cache = step(params, cache, tok)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--gen-len", type=int, default=24)
+    args = ap.parse_args()
+
+    key = jax.random.PRNGKey(0)
+    base = get_smoke_config(args.arch)
+    params = tf.init_params(base, key)
+    prompt = jax.random.randint(key, (args.batch, 16), 0, base.vocab_size)
+
+    for mode in ("bypass", "fakequant"):
+        cfg = base.replace(cim=CIMConfig(mode=mode, max_gamma=2.0**16))
+        t0 = time.time()
+        gen = generate(cfg, params, prompt, args.gen_len)
+        dt = time.time() - t0
+        print(f"{mode:10s}: {args.gen_len * args.batch / dt:7.1f} tok/s   "
+              f"sample={gen[0, :10].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.ckpt import (CheckpointManager, load_checkpoint,  # noqa
+                                   save_checkpoint)

@@ -1,0 +1,109 @@
+"""Analog batch-normalization (ABN): the paper's distribution-aware reshaping.
+
+The DSCI-ADC implements y = floor(mid + gamma * g0 * dp + beta) where gamma is
+realized as a reference-ladder 'zoom' and beta as a 5b charge-injection offset
+on the DPL.  Hardware constraints (Sec. III.D):
+
+  * the resistive ladder has a minimum step of VDDH/32 and the MSB split-DAC
+    reaches a max gain of 16; usable gamma values are powers of two in
+    [1, 32] (Figs. 13, 17, 18);
+  * at train time gamma can be explored at a configurable precision
+    ("gamma bits", Fig. 3b) to study the accuracy/complexity trade-off;
+  * beta is a 5b code covering +/-30 mV on the DPL.
+
+This module provides the hardware quantizers (with STE for training), the
+folding of learned BN statistics into (gamma, beta), and the distribution-
+aware initialisation from observed DP statistics.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hw import CIMMacroConfig, DEFAULT_MACRO
+from repro.core.quantization import ste, ste_round
+
+
+def quantize_gamma_pow2(gamma: jnp.ndarray, *, max_gamma: float = 32.0,
+                        min_gamma: float = 1.0) -> jnp.ndarray:
+    """Snap gamma to the hardware's power-of-two ladder grid (STE)."""
+    g = jnp.clip(gamma, min_gamma, max_gamma)
+    log2 = jnp.log2(g)
+    return ste(2.0 ** jnp.round(log2), g)
+
+
+def quantize_gamma_bits(gamma: jnp.ndarray, bits: int, *,
+                        max_gamma: float = 32.0) -> jnp.ndarray:
+    """Gamma at a given bit precision (Fig. 3b study): 2^bits log-spaced
+    levels between 1 and max_gamma (bits=0 -> fixed unity gain)."""
+    if bits <= 0:
+        return jnp.ones_like(gamma)
+    n_levels = 2 ** bits
+    g = jnp.clip(gamma, 1.0, max_gamma)
+    step = jnp.log2(max_gamma) / (n_levels - 1)
+    idx = jnp.round(jnp.log2(g) / step)
+    return ste(2.0 ** (idx * step), g)
+
+
+def quantize_beta_v(beta_v: jnp.ndarray,
+                    cfg: CIMMacroConfig = DEFAULT_MACRO) -> jnp.ndarray:
+    """5b ABN offset: +/-abn_offset_range_v in 2^abn_offset_bits steps."""
+    n = 2 ** cfg.abn_offset_bits
+    lsb = 2.0 * cfg.abn_offset_range_v / (n - 1)
+    q = ste_round(jnp.clip(beta_v, -cfg.abn_offset_range_v,
+                           cfg.abn_offset_range_v) / lsb) * lsb
+    return q
+
+
+def beta_v_to_codes(beta_v: jnp.ndarray, gamma: jnp.ndarray, r_out: int,
+                    cfg: CIMMacroConfig = DEFAULT_MACRO) -> jnp.ndarray:
+    """Convert a DPL-referred offset (volts) into ADC code units (Eq. 7:
+    the offset is applied before the zoom, so it is scaled by gamma)."""
+    lsb_v = cfg.alpha_adc() * cfg.vddh / 2.0 ** (r_out - 1)
+    return gamma * beta_v / lsb_v
+
+
+class ABNParams(NamedTuple):
+    """Learnable per-output-channel ABN parameters (pre-hardware)."""
+    log_gamma: jnp.ndarray   # (N,) gamma = 2**log_gamma  (log2 domain)
+    beta: jnp.ndarray        # (N,) offset in ADC code units
+
+
+def init_abn(n: int) -> ABNParams:
+    return ABNParams(log_gamma=jnp.zeros((n,)), beta=jnp.zeros((n,)))
+
+
+def abn_gamma(params: ABNParams, *, gamma_bits: int = -1,
+              max_gamma: float = 32.0) -> jnp.ndarray:
+    """Effective gamma; gamma_bits<0 keeps it continuous (no HW quant)."""
+    g = 2.0 ** params.log_gamma
+    if gamma_bits < 0:
+        return jnp.clip(g, 2.0 ** -4, max_gamma)
+    return quantize_gamma_bits(g, gamma_bits, max_gamma=min(max_gamma, 32.0))
+
+
+def fold_batchnorm(bn_scale: jnp.ndarray, bn_bias: jnp.ndarray,
+                   mean: jnp.ndarray, var: jnp.ndarray,
+                   eps: float = 1e-5) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fold conventional BN(y) = scale*(y-mean)/sqrt(var+eps)+bias into the
+    ABN affine form gamma*y + beta (both in the same units as y)."""
+    inv = bn_scale / jnp.sqrt(var + eps)
+    return inv, bn_bias - mean * inv
+
+
+def distribution_aware_init(dp_sample: jnp.ndarray, r_out: int, *,
+                            target_sigma_frac: float = 0.25) -> ABNParams:
+    """Distribution-aware reshaping init: choose per-channel gamma/beta so the
+    observed DP distribution fills the ADC range (the paper's Fig. 3a fix).
+
+    dp_sample: (B, N) pre-ADC dot products in *ADC input units* (i.e. already
+    multiplied by the unity-gain code gain g0); gamma scales the per-channel
+    std to target_sigma_frac of the half-range, beta centres the mean."""
+    half = 2.0 ** (r_out - 1)
+    mu = jnp.mean(dp_sample, axis=0)
+    sd = jnp.std(dp_sample, axis=0) + 1e-6
+    gamma = jnp.clip(target_sigma_frac * half / sd, 1.0, 32.0)
+    beta = -gamma * mu
+    return ABNParams(log_gamma=jnp.log2(gamma), beta=beta)

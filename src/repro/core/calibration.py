@@ -1,0 +1,57 @@
+"""SA-offset calibration (paper Sec. III.E, Fig. 19).
+
+The chip refreshes a 7b per-column calibration code on a rare basis: the DPL
+is precharged to VDDL and a SAR-like search over the calibration unit's
+binary-weighted caps converges to the code that cancels the comparator
+offset.  We reproduce that search bit-by-bit: it is exactly a binary search
+for -offset on the 0.47 mV grid, saturating at the +/-(2^7-1)/2 LSB range —
+out-of-range offsets leave 'dysfunctional columns' (Fig. 14c) that the ABN
+offset block can partly absorb.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hw import CIMMacroConfig, DEFAULT_MACRO
+
+
+def calibrate_sar(sa_offset_v: jnp.ndarray,
+                  cfg: CIMMacroConfig = DEFAULT_MACRO) -> jnp.ndarray:
+    """Run the 7b calibration search per column.
+
+    sa_offset_v: (N,) true comparator offsets (volts)
+    returns    : (N,) compensation voltages the calibration unit applies
+    """
+    lsb = cfg.cal_lsb_v
+    # the differential implementation covers +/- cal_range_v on either side
+    # with cal_lsb_v resolution: an effective (cal_bits+1)-bit signed search
+    n_bits = cfg.cal_bits + 1
+    half = float(1 << (n_bits - 1))
+    # unsigned SAR over the shifted range: u_code in [0, 2^b), the applied
+    # compensation is (u_code - 2^(b-1)) * lsb.  Each decision compares the
+    # offset against the trial compensation level, exactly like the chip's
+    # decision/update cycles applied to the calibration caps.
+    u_code = jnp.zeros_like(sa_offset_v)
+    for k in range(n_bits - 1, -1, -1):
+        trial = u_code + float(1 << k)
+        take = sa_offset_v >= (trial - half) * lsb
+        u_code = jnp.where(take, trial, u_code)
+    comp = (u_code - half) * lsb
+    return jnp.clip(comp, -cfg.cal_range_v, cfg.cal_range_v)
+
+
+def residual_offsets(sa_offset_v: jnp.ndarray,
+                     cfg: CIMMacroConfig = DEFAULT_MACRO) -> jnp.ndarray:
+    """Offset remaining after calibration (what computations actually see)."""
+    return sa_offset_v - calibrate_sar(sa_offset_v, cfg)
+
+
+def dysfunctional_columns(sa_offset_v: jnp.ndarray, r_out: int,
+                          cfg: CIMMacroConfig = DEFAULT_MACRO
+                          ) -> jnp.ndarray:
+    """Boolean mask of columns whose residual offset exceeds 1 ADC LSB."""
+    lsb_v = cfg.alpha_adc() * cfg.vddh / 2.0 ** (r_out - 1)
+    return jnp.abs(residual_offsets(sa_offset_v, cfg)) > lsb_v

@@ -1,0 +1,278 @@
+"""CIM-quantized layers: the paper's technique as a composable JAX module.
+
+`cim_linear_apply` is the single entry point used by every model in the repo
+(MLP/LeNet for the paper's own workloads, and all 10 assigned LM
+architectures).  Three execution modes:
+
+  * "bypass"    : plain (bf16/fp32) matmul — the non-CIM baseline.
+  * "fakequant" : the CIM-aware training/serving path.  Exact digital-
+                  equivalent integer math (bit-plane weights, unsigned
+                  activations, ABN-scaled floor ADC) with STE gradients and
+                  optional post-silicon noise injection.  This is the TPU-
+                  native adaptation: per-channel ABN is fused into the matmul
+                  epilogue, the adaptive swing is the dynamic activation
+                  scale (see DESIGN.md §3).
+  * "sim"       : voltage-domain behavioural macro (core/cim_macro.py),
+                  tiled per core/mapping.py.  Small workloads only; used by
+                  fidelity tests and paper-figure benchmarks.
+
+Parameters per layer: {"w": (K, N) fp32 master weights,
+                       "abn_log_gamma": (N,), "abn_beta": (N,)}.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import abn as abn_lib
+from repro.core import digital_ref, mapping
+from repro.core.cim_macro import cim_macro_forward
+from repro.core.hw import CIMMacroConfig, DEFAULT_MACRO
+from repro.core.noise_model import NO_NOISE, NoiseConfig
+from repro.core.quantization import (ActQuant, adc_quantize, quantize_act,
+                                     quantize_weight)
+
+
+@dataclasses.dataclass(frozen=True)
+class CIMConfig:
+    """Per-layer CIM execution configuration."""
+    mode: str = "fakequant"          # bypass | fakequant | sim
+    r_in: int = 8
+    r_w: int = 4
+    r_out: int = 8
+    adaptive_swing: bool = True      # serial-split DPL swing adaptation
+    gamma_bits: int = -1             # -1: continuous gamma; >=0: HW quant
+    max_gamma: float = 32.0          # resistive-ladder limit; the TPU-native
+                                     # digital epilogue can exceed it (beyond-
+                                     # paper mode, see DESIGN.md §3)
+    noise: NoiseConfig = NO_NOISE
+    macro: CIMMacroConfig = DEFAULT_MACRO
+
+    def replace(self, **kw) -> "CIMConfig":
+        return dataclasses.replace(self, **kw)
+
+
+BYPASS = CIMConfig(mode="bypass")
+
+
+def analytic_log_gamma_init(k: int, cfg: CIMConfig,
+                            target_frac: float = 0.25) -> float:
+    """Distribution-aware gamma init (no calibration data needed): scale the
+    expected DP std of one macro row-tile to `target_frac` of the ADC
+    half-range.  Assumes amax-scaled ~N activations/weights, for which the
+    integer codes have std ~2^r_in/8 and ~2^(r_w-1)/2."""
+    k_tile = min(k, cfg.macro.n_rows)
+    g0 = _code_gain(cfg, k_tile)
+    sigma_dp = (k_tile ** 0.5) * (2.0 ** cfg.r_in / 8.0) * (2.0 ** (cfg.r_w - 1) / 2.0)
+    gamma = target_frac * 2.0 ** (cfg.r_out - 1) / (g0 * sigma_dp)
+    import math
+    gamma = min(max(gamma, 1.0), float(cfg.max_gamma))
+    return math.log2(gamma)
+
+
+def init_cim_linear(key: jax.Array, k: int, n: int,
+                    w_init_scale: Optional[float] = None,
+                    cfg: Optional[CIMConfig] = None) -> Dict:
+    scale = w_init_scale if w_init_scale is not None else (1.0 / k) ** 0.5
+    lg = 0.0 if cfg is None else analytic_log_gamma_init(k, cfg)
+    return {
+        "w": scale * jax.random.normal(key, (k, n), jnp.float32),
+        "abn_log_gamma": jnp.full((n,), lg, jnp.float32),
+        "abn_beta": jnp.zeros((n,), jnp.float32),
+    }
+
+
+def _code_gain(cfg: CIMConfig, k_dim: int) -> float:
+    """Unity-gain codes-per-integer-dp (Eq. 7 collapsed, digital_ref)."""
+    macro = cfg.macro
+    if cfg.adaptive_swing:
+        rows = min(k_dim, macro.n_rows)
+        units = macro.units_for_rows(rows)
+    else:
+        units = macro.n_units          # fixed full-array swing (baseline)
+    n_dp = units * macro.rows_per_unit
+    swing = macro.swing_efficiency(units)
+    return digital_ref.adc_gain_factor(cfg.r_in, cfg.r_w, cfg.r_out, n_dp,
+                                       swing, macro.alpha_adc())
+
+
+def cim_linear_apply(params: Dict, x: jnp.ndarray, cfg: CIMConfig,
+                     key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """y ~= x @ w, executed through the configured CIM path.
+
+    x: (..., K).  Returns (..., N) dequantized activations.
+    """
+    if cfg.mode == "deploy":
+        # serving path: weights stored as int8 CIM codes + per-channel
+        # scale (quantize_params_for_serving); the dequant fuses into the
+        # matmul on TPU, so weight HBM traffic is the int8 bytes.
+        wq = params["w_q"].astype(x.dtype) * params["w_scale"].astype(x.dtype)
+        return x @ wq
+    w = params["w"]
+    if cfg.mode == "bypass":
+        return x @ w.astype(x.dtype)
+    if cfg.mode == "fakequant":
+        return _fakequant_forward(params, x, cfg, key)
+    if cfg.mode == "sim":
+        return _sim_forward(params, x, cfg, key)
+    raise ValueError(f"unknown CIM mode {cfg.mode!r}")
+
+
+def quantize_params_for_serving(params, r_w: int = 4):
+    """Convert every CIM-linear leaf dict {w, abn_*} into the deployed form
+    {w_q int8, w_scale f32(N,), abn_*}: the macro's odd-integer weight grid
+    stored in its natural int8 container (4x less weight HBM than fp32
+    masters, 2x less than bf16).  Embeddings/norms stay untouched."""
+    from repro.core.quantization import quantize_weight
+
+    def convert(node):
+        if isinstance(node, dict) and "router" in node:
+            # MoE expert banks: (L, E, D, F) / (L, E, F, D) raw arrays
+            out = dict(node)
+            for k in ("w_gate", "w_up", "w_down"):
+                if k in out:
+                    wq = quantize_weight(out.pop(k), r_w, axis=-2)
+                    out[f"{k}_q"] = wq.q.astype(jnp.int8)
+                    out[f"{k}_scale"] = jnp.squeeze(wq.scale, axis=-2)
+            return out
+        if isinstance(node, dict) and "w" in node and "abn_log_gamma" in node:
+            # works on stacked (L, K, N) leaves too: per-(layer, channel)
+            # scales over the reduction axis
+            wq = quantize_weight(node["w"], r_w, axis=-2)
+            out = {k: v for k, v in node.items() if k != "w"}
+            out["w_q"] = wq.q.astype(jnp.int8)
+            out["w_scale"] = jnp.squeeze(wq.scale, axis=-2)
+            return out
+        if isinstance(node, dict):
+            return {k: convert(v) for k, v in node.items()}
+        return node
+
+    return convert(params)
+
+
+def _fakequant_forward(params: Dict, x: jnp.ndarray, cfg: CIMConfig,
+                       key: Optional[jax.Array]) -> jnp.ndarray:
+    w = params["w"]
+    k_dim, n = w.shape
+    compute_dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+
+    aq: ActQuant = quantize_act(x32, cfg.r_in)
+    wq = quantize_weight(w, cfg.r_w, axis=0)
+
+    gamma = abn_lib.abn_gamma(
+        abn_lib.ABNParams(params["abn_log_gamma"], params["abn_beta"]),
+        gamma_bits=cfg.gamma_bits, max_gamma=cfg.max_gamma)
+    g0 = _code_gain(cfg, k_dim)
+    mid = 2.0 ** (cfg.r_out - 1)
+
+    if cfg.noise.enabled and key is not None:
+        key, k2 = jax.random.split(key)
+        # residual per-column SA offset in code units (static per layer call)
+        from repro.core import noise_model as nm
+        raw = nm.sample_sa_offsets(k2, n, cfg.noise, cfg.macro)
+        res_v = nm.calibration_residue(raw, cfg.noise, cfg.macro)
+        lsb_v = cfg.macro.alpha_adc() * cfg.macro.vddh / 2.0 ** (cfg.r_out - 1)
+        offset_codes = gamma * res_v / lsb_v
+    else:
+        offset_codes = 0.0
+
+    # K > n_rows splits into row tiles, each with its own ADC conversion;
+    # partial codes are dequantized and summed digitally by the host —
+    # exactly the macro-tiling of core/mapping.py.
+    n_rows = cfg.macro.n_rows
+    row_tiles = -(-k_dim // n_rows)
+    dp_hat = jnp.zeros(x32.shape[:-1] + (n,), jnp.float32)
+    for t in range(row_tiles):
+        ks, ke = t * n_rows, min((t + 1) * n_rows, k_dim)
+        # integer dot product (DP array + MBIW stages); exact in fp32 for
+        # one macro row-tile (|dp| <= 1152*255*15 < 2^24).
+        dp = aq.q[..., ks:ke] @ wq.q[ks:ke, :]
+        # zero-point: x = q*s + z -> the z*colsum term is per-channel and
+        # constant: absorbed into the ABN offset, exactly what the chip's
+        # signed-to-unsigned conversion + beta block does.
+        zp_dp = (aq.zero / aq.scale) * jnp.sum(wq.q[ks:ke, :], axis=0)
+        if cfg.noise.enabled and key is not None:
+            key, k1 = jax.random.split(key)
+            # thermal noise referred to dp units through the code gain
+            dp = dp + cfg.noise.thermal_rms_lsb8 / g0 \
+                * (2.0 ** (cfg.r_out - 8)) * jax.random.normal(k1, dp.shape)
+        code = adc_quantize(dp + zp_dp, r_out=cfg.r_out, gain=gamma * g0,
+                            beta_codes=params["abn_beta"] + offset_codes)
+        dp_hat = dp_hat + (code - mid - params["abn_beta"]) / (gamma * g0)
+
+    y = dp_hat * aq.scale * wq.scale.reshape(-1)          # (..., N)
+    return y.astype(compute_dtype)
+
+
+def _sim_forward(params: Dict, x: jnp.ndarray, cfg: CIMConfig,
+                 key: Optional[jax.Array]) -> jnp.ndarray:
+    """Voltage-domain path: tile per mapping.py and run the behavioural
+    macro.  No gradients (inference/fidelity only)."""
+    w = params["w"]
+    k_dim, n = w.shape
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, k_dim)).astype(jnp.float32)
+
+    aq = quantize_act(x2, cfg.r_in)
+    wq = quantize_weight(w, cfg.r_w, axis=0)
+    planes_full = digital_ref.encode_weight_planes(
+        wq.q.astype(jnp.int32), cfg.r_w)                  # (r_w, K, N)
+
+    gamma = abn_lib.abn_gamma(
+        abn_lib.ABNParams(params["abn_log_gamma"], params["abn_beta"]),
+        gamma_bits=cfg.gamma_bits, max_gamma=cfg.max_gamma)
+    spec = mapping.LayerSpec(m=x2.shape[0], k=k_dim, n=n, r_in=cfg.r_in,
+                             r_w=cfg.r_w, r_out=cfg.r_out)
+    mp = mapping.map_layer(spec, cfg.macro)
+    mid = 2.0 ** (cfg.r_out - 1)
+    lsb_v = cfg.macro.alpha_adc() * cfg.macro.vddh / 2.0 ** (cfg.r_out - 1)
+    beta_v = params["abn_beta"] * lsb_v / gamma           # code -> volts
+
+    dp_hat = jnp.zeros((x2.shape[0], n), jnp.float32)
+    for (ks, ksz) in mapping.split_k_slices(k_dim, mp.row_tiles):
+        xs = aq.q[:, ks:ks + ksz]
+        ps = planes_full[:, ks:ks + ksz, :]
+        if key is not None:
+            key, sub = jax.random.split(key)
+        else:
+            sub = None
+        code = cim_macro_forward(
+            xs, ps, r_in=cfg.r_in, r_out=cfg.r_out, gamma=gamma,
+            beta_v=beta_v, cfg=cfg.macro, noise=cfg.noise, key=sub)
+        units = cfg.macro.units_for_rows(ksz)
+        n_dp = units * cfg.macro.rows_per_unit
+        g0 = digital_ref.adc_gain_factor(
+            cfg.r_in, cfg.r_w, cfg.r_out, n_dp,
+            cfg.macro.swing_efficiency(units), cfg.macro.alpha_adc())
+        dp_hat = dp_hat + (code.astype(jnp.float32) + 0.5 - mid
+                           - params["abn_beta"]) / (gamma * g0)
+    y = dp_hat * aq.scale * wq.scale.reshape(-1)
+    y = y + aq.zero * jnp.sum(wq.q * wq.scale, axis=0)    # zero-point term
+    return y.reshape(lead + (n,)).astype(x.dtype)
+
+
+def cim_conv2d_apply(params: Dict, x: jnp.ndarray, cfg: CIMConfig,
+                     stride: int = 1, padding: int = 1,
+                     key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """Conv2D via im2col + cim_linear (the accelerator's stage (ii)).
+
+    x: (B, H, W, C_in); params["w"]: (kh*kw*C_in, C_out) flattened filters.
+    """
+    k_flat, c_out = params["w"].shape
+    kh = kw = int(round((k_flat // x.shape[-1]) ** 0.5))
+    assert kh * kw * x.shape[-1] == k_flat, (kh, kw, x.shape, k_flat)
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (kh, kw), (stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))       # (B, OH, OW, kh*kw*C)
+    # conv_general_dilated_patches returns channel-major (C*kh*kw) features;
+    # our weights are laid out (kh*kw*C) — reorder to match.
+    b, oh, ow, _ = patches.shape
+    c_in = x.shape[-1]
+    patches = patches.reshape(b, oh, ow, c_in, kh * kw)
+    patches = jnp.swapaxes(patches, -1, -2).reshape(b, oh, ow, k_flat)
+    return cim_linear_apply(params, patches, cfg, key)

@@ -1,0 +1,169 @@
+"""Voltage-domain behavioural model of the IMAGINE CIM-SRAM macro.
+
+Implements the full analog pipeline of Sec. III in simulation units of volts:
+
+  1. swing-adaptive charge-based DP      (Eq. 1/4, serial-split DPL)
+  2. MBIW input-serial accumulation      (Eq. 5, alpha_mb charge sharing)
+  3. MBIW weight-parallel combination    (Eq. 6, pairwise LSB->MSB sharing)
+  4. DSCI-ADC with in-conversion ABN     (Eq. 7, SAR loop with gamma 'zoom'
+                                          and 5b offset), SA offset +
+                                          7b calibration residue
+
+With `noise=NO_NOISE` the model is *exactly* (to float32 rounding) the
+digital reference in core/digital_ref.py — asserted by tests.
+
+Shapes: x_uint (B, K) unsigned < 2^r_in; planes (r_w, K, N) in {-1,+1}.
+The model evaluates ONE macro tile (K <= 1152, N <= 64 output channels when
+r_w=4); layer-level tiling lives in core/mapping.py.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hw import CIMMacroConfig, DEFAULT_MACRO
+from repro.core import noise_model as nm
+from repro.core.noise_model import NoiseConfig, NO_NOISE
+
+
+def dp_bit_voltage(x_bit: jnp.ndarray, plane_dot: jnp.ndarray,
+                   alpha_eff: float, settle: float,
+                   cfg: CIMMacroConfig) -> jnp.ndarray:
+    """DPL deviation (from the VDDL precharge) after one single-bit DP.
+
+    plane_dot : (B, N) = sum_i x_bit_i * s_i  already computed by caller
+    """
+    del x_bit
+    return settle * alpha_eff * cfg.vddl * plane_dot
+
+
+def mbiw_input_accumulate(per_bit_dev: jnp.ndarray, *, r_in: int,
+                          noise: NoiseConfig, cfg: CIMMacroConfig,
+                          key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """Eq. (5): accumulate per-input-bit DP deviations, LSB first, through
+    alpha_mb ~= 1/2 charge sharing.  per_bit_dev: (r_in, B, N) volts.
+
+    Returns the accumulated deviation from VDDL (B, N)."""
+    alpha_mb = cfg.alpha_mb()
+    v_acc = jnp.zeros_like(per_bit_dev[0])        # deviation from VDDL
+    for k in range(r_in):
+        v_in = per_bit_dev[k]
+        if noise.enabled:
+            v_acc_next = alpha_mb * v_acc + (1.0 - alpha_mb) * v_in
+            v_acc_next = v_acc_next + nm.charge_injection_error(
+                v_in + cfg.vddl, v_acc + cfg.vddl, noise, cfg)
+            v_acc = v_acc_next
+        else:
+            v_acc = alpha_mb * v_acc + (1.0 - alpha_mb) * v_in
+    if noise.enabled:
+        v_acc = v_acc - nm.leakage_droop(r_in, cfg.t_dp_ns, noise)
+        if key is not None:
+            v_acc = v_acc + nm.sample_thermal(key, v_acc.shape, noise, cfg)
+    return v_acc
+
+
+def mbiw_weight_combine(per_plane_dev: jnp.ndarray, r_w: int) -> jnp.ndarray:
+    """Eq. (6): pairwise inter-column charge sharing, LSB -> MSB.
+
+    per_plane_dev: (r_w, B, N) accumulated deviations per weight plane.
+    The LSB plane is first halved against the VDDL-precharged node, then each
+    sharing with the next plane halves again:
+        V = sum_p 2^(p - r_w) * V_p    (deviation units)."""
+    v = 0.5 * per_plane_dev[0]                    # self-weighting of the LSB
+    for p in range(1, r_w):
+        v = 0.5 * (v + per_plane_dev[p])
+    return v
+
+
+def dsci_adc(v_dev: jnp.ndarray, *, r_out: int, gamma: jnp.ndarray,
+             beta_v: jnp.ndarray, sa_offset_v: jnp.ndarray,
+             cfg: CIMMacroConfig, noise: NoiseConfig = NO_NOISE,
+             key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """DSCI SAR conversion with the ABN gamma 'zoom' (Eq. 7).
+
+    v_dev      : (B, N) DPL deviation from VDDL at conversion start
+    gamma      : scalar or (N,) ABN gain (reference-ladder zoom)
+    beta_v     : scalar or (N,) ABN offset *in volts on the DPL*
+    sa_offset_v: (N,) residual comparator offset after calibration
+    returns    : (B, N) int32 codes in [0, 2^r_out - 1]
+
+    The SAR loop compares the (offset-shifted) residue against binary-scaled
+    thresholds whose magnitude is divided by gamma — the 'zoom' — and whose
+    steps can carry ladder mismatch (gamma-dependent INL, Fig. 13).
+    """
+    alpha_adc = cfg.alpha_adc()
+    v = v_dev + beta_v + sa_offset_v              # Eq. (7) numerator terms
+    # one ADC code in volts, after the zoom:
+    lsb_v = alpha_adc * cfg.vddh / (gamma * 2.0 ** (r_out - 1))
+    mid = 2 ** (r_out - 1)
+    if noise.enabled and key is not None:
+        # ladder mismatch: per-step relative error, grows with gamma since
+        # the absolute step shrinks but the mismatch floor does not.
+        step_sigma = 0.0015 * jnp.sqrt(jnp.asarray(gamma, jnp.float32))
+        eta = step_sigma * jax.random.normal(key, (r_out,))
+    else:
+        eta = jnp.zeros((r_out,))
+    code = jnp.zeros(v.shape, jnp.int32)
+    for k in range(r_out - 1, -1, -1):            # MSB first
+        trial = code + (1 << k)
+        thresh = (trial.astype(jnp.float32) - mid) * lsb_v * (1.0 + eta[r_out - 1 - k])
+        code = jnp.where(v >= thresh, trial, code)
+    return jnp.clip(code, 0, 2 ** r_out - 1)
+
+
+def cim_macro_forward(
+    x_uint: jnp.ndarray, planes: jnp.ndarray, *, r_in: int, r_out: int,
+    gamma: jnp.ndarray | float = 1.0, beta_v: jnp.ndarray | float = 0.0,
+    cfg: CIMMacroConfig = DEFAULT_MACRO, noise: NoiseConfig = NO_NOISE,
+    key: Optional[jax.Array] = None,
+    sa_offset_v: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """End-to-end analog evaluation of one macro tile.
+
+    x_uint : (B, K) unsigned ints < 2^r_in  (K <= cfg.n_rows)
+    planes : (r_w, K, N) in {-1, +1}
+    """
+    b, k_dim = x_uint.shape
+    r_w, k2, n = planes.shape
+    assert k_dim == k2, (k_dim, k2)
+    units = cfg.units_for_rows(k_dim)
+    alpha_eff = cfg.alpha_eff(units)
+    settle = nm.settle_fraction(units, cfg.t_dp_ns, noise)
+    gamma = jnp.asarray(gamma, jnp.float32)
+    beta_v = jnp.asarray(beta_v, jnp.float32)
+
+    if sa_offset_v is None:
+        if noise.enabled and key is not None:
+            key, sub = jax.random.split(key)
+            raw = nm.sample_sa_offsets(sub, n, noise, cfg)
+            sa_offset_v = nm.calibration_residue(raw, noise, cfg)
+        else:
+            sa_offset_v = jnp.zeros((n,))
+
+    x = x_uint.astype(jnp.float32)
+    # per (input bit, weight plane) single-bit DPs
+    per_plane = []
+    for p in range(r_w):
+        per_bit = []
+        s = planes[p].astype(jnp.float32)         # (K, N)
+        for kbit in range(r_in):
+            x_bit = jnp.floor(x / 2 ** kbit) % 2.0
+            per_bit.append(dp_bit_voltage(x_bit, x_bit @ s, alpha_eff,
+                                          settle, cfg))
+        per_bit = jnp.stack(per_bit)              # (r_in, B, N)
+        if key is not None:
+            key, sub = jax.random.split(key)
+        else:
+            sub = None
+        per_plane.append(mbiw_input_accumulate(per_bit, r_in=r_in,
+                                               noise=noise, cfg=cfg, key=sub))
+    v_mbiw = mbiw_weight_combine(jnp.stack(per_plane), r_w)   # (B, N)
+
+    if key is not None:
+        key, sub = jax.random.split(key)
+    else:
+        sub = None
+    return dsci_adc(v_mbiw, r_out=r_out, gamma=gamma, beta_v=beta_v,
+                    sa_offset_v=sa_offset_v, cfg=cfg, noise=noise, key=sub)

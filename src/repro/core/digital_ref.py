@@ -1,0 +1,171 @@
+"""Exact integer digital-equivalent of the IMAGINE macro datapath.
+
+This is the ground-truth oracle for everything else in the repo:
+  * the voltage-domain behavioural model (core/cim_macro.py) must agree with
+    it to <1 ADC LSB when analog non-idealities are disabled;
+  * the Pallas kernel (kernels/cim_mbiw) must agree with it bit-exactly;
+  * the fake-quant training path (core/cim_layers.py) uses its forward.
+
+Numerics
+--------
+Inputs  X : unsigned integers in [0, 2^r_in - 1]            (shape [..., K])
+Weights   : +/-1 bit-planes S[p] in {-1,+1}, p=0..r_w-1      (shape [r_w,K,N])
+            encoded value  w = sum_p 2^p * S[p]  (odd ints in +/-(2^r_w - 1))
+Dot product  dp = X . w,   |dp| <= K * (2^r_in - 1) * (2^r_w - 1)
+
+The analog chain (Eqs. 1,4,5,6,7 of the paper) maps dp to an ADC code:
+
+    dV     = VDDL * swing * dp / (N_dp * 2^(r_in + r_w))        # DP+MBIW
+    code   = floor( 2^(r_out-1)
+                    + gamma * dV / (alpha_adc * VDDH / 2^(r_out-1))
+                    + beta_codes )                               # Eq. (7)
+    with VDDH = 2*VDDL this collapses to the pure-integer relation
+
+    code = clip( floor( 2^(r_out-1)
+                        + gamma * swing / (2*alpha_adc)
+                          * dp * 2^(r_out-1) / (N_dp * 2^(r_in+r_w))
+                        + beta_codes ),  0, 2^r_out - 1 )
+
+`swing` = N_dp * alpha_eff  (swing efficiency, 1.0 for an ideal array) and
+`alpha_adc` are taken from CIMMacroConfig; `n_dp` is the number of *connected*
+rows after the serial-split configuration, which is what makes the operator
+swing-adaptive: for a layer using fewer rows, n_dp shrinks and the same dp
+produces a proportionally larger code swing.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hw import CIMMacroConfig, DEFAULT_MACRO
+
+
+# ---------------------------------------------------------------------------
+# weight encoding
+# ---------------------------------------------------------------------------
+
+def encode_weight_planes(w_int: jnp.ndarray, r_w: int) -> jnp.ndarray:
+    """Encode odd integers w in [-(2^r_w - 1), 2^r_w - 1] into +/-1 planes.
+
+    Uses u = (w + (2^r_w - 1)) / 2 in [0, 2^r_w - 1]; plane p is 2*bit_p(u)-1.
+    Returns int8 array of shape (r_w, *w.shape).
+    """
+    full = 2**r_w - 1
+    u = (w_int.astype(jnp.int32) + full) // 2
+    planes = [(2 * ((u >> p) & 1) - 1).astype(jnp.int8) for p in range(r_w)]
+    return jnp.stack(planes, axis=0)
+
+
+def decode_weight_planes(planes: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of encode_weight_planes: w = sum_p 2^p * S[p]."""
+    r_w = planes.shape[0]
+    scale = (2 ** jnp.arange(r_w, dtype=jnp.int32)).reshape(
+        (r_w,) + (1,) * (planes.ndim - 1))
+    return jnp.sum(planes.astype(jnp.int32) * scale, axis=0)
+
+
+def quantize_weight_odd(w_int: jnp.ndarray, r_w: int) -> jnp.ndarray:
+    """Snap integers in [-(2^r_w-1), 2^r_w-1] to the representable odd grid."""
+    full = 2**r_w - 1
+    w = jnp.clip(w_int, -full, full)
+    # nearest odd integer: 2*floor(w/2)+1 rounds {2k,2k+1} -> 2k+1
+    return (2 * jnp.floor_divide(w, 2) + 1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# integer dot-product (the DP array + MBIW stages)
+# ---------------------------------------------------------------------------
+
+def bitplane_dot(x_uint: jnp.ndarray, planes: jnp.ndarray) -> jnp.ndarray:
+    """dp = X . W with W decoded from its +/-1 bit-planes.
+
+    x_uint : (..., K) unsigned ints < 2^r_in
+    planes : (r_w, K, N) +/-1
+    returns: (..., N) int32
+    """
+    return x_uint.astype(jnp.int32) @ decode_weight_planes(planes)
+
+
+def bitplane_dot_serial(x_uint: jnp.ndarray, planes: jnp.ndarray, r_in: int
+                        ) -> jnp.ndarray:
+    """Literal input-serial, weight-parallel evaluation (matches the macro's
+    MBIW sequencing): dp = sum_k 2^k sum_p 2^p (X[k] . S[p]).
+    Provided for the kernel oracle; equal to `x @ decode(planes)`."""
+    x = x_uint.astype(jnp.int32)
+    r_w = planes.shape[0]
+    acc = jnp.zeros(x.shape[:-1] + (planes.shape[-1],), jnp.int32)
+    for k in range(r_in):
+        x_bit = ((x >> k) & 1)
+        per_bit = jnp.zeros_like(acc)
+        for p in range(r_w):
+            per_bit = per_bit + (2**p) * (x_bit @ planes[p].astype(jnp.int32))
+        acc = acc + (2**k) * per_bit
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# DSCI-ADC (Eq. 7) in code space
+# ---------------------------------------------------------------------------
+
+def adc_gain_factor(r_in: int, r_w: int, r_out: int, n_dp: int,
+                    swing: float = 1.0, alpha_adc: float = 1.0) -> float:
+    """Codes-per-unit-dp of the full chain at gamma=1 (see module docstring)."""
+    return swing / (2.0 * alpha_adc) * (2.0 ** (r_out - 1)) / (
+        n_dp * 2.0 ** (r_in + r_w))
+
+
+def dsci_adc_code(dp: jnp.ndarray, *, r_in: int, r_w: int, r_out: int,
+                  n_dp: int, gamma: jnp.ndarray | float = 1.0,
+                  beta_codes: jnp.ndarray | float = 0.0,
+                  swing: float = 1.0, alpha_adc: float = 1.0) -> jnp.ndarray:
+    """Eq. (7): rescale dp into ADC codes with ABN gain/offset and floor."""
+    g = adc_gain_factor(r_in, r_w, r_out, n_dp, swing, alpha_adc)
+    mid = 2 ** (r_out - 1)
+    code = jnp.floor(mid + gamma * g * dp.astype(jnp.float32) + beta_codes)
+    return jnp.clip(code, 0, 2**r_out - 1).astype(jnp.int32)
+
+
+def dequantize_code(code: jnp.ndarray, *, r_in: int, r_w: int, r_out: int,
+                    n_dp: int, gamma: jnp.ndarray | float = 1.0,
+                    beta_codes: jnp.ndarray | float = 0.0,
+                    swing: float = 1.0, alpha_adc: float = 1.0
+                    ) -> jnp.ndarray:
+    """Map ADC codes back to dp units (inverse of the ABN-scaled ADC)."""
+    g = adc_gain_factor(r_in, r_w, r_out, n_dp, swing, alpha_adc)
+    mid = 2 ** (r_out - 1)
+    return (code.astype(jnp.float32) + 0.5 - mid - beta_codes) / (gamma * g)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end reference macro
+# ---------------------------------------------------------------------------
+
+def cim_matmul_ref(x_uint: jnp.ndarray, planes: jnp.ndarray, *, r_in: int,
+                   r_out: int, gamma: jnp.ndarray | float = 1.0,
+                   beta_codes: jnp.ndarray | float = 0.0,
+                   cfg: CIMMacroConfig = DEFAULT_MACRO,
+                   n_rows_used: Optional[int] = None,
+                   ideal: bool = False) -> jnp.ndarray:
+    """Digital-equivalent of one macro evaluation.
+
+    x_uint : (..., K) unsigned ints < 2^r_in, K <= cfg.n_rows
+    planes : (r_w, K, N) +/-1 weight bit-planes
+    gamma/beta_codes : scalars or (N,) per-channel ABN parameters
+    ideal  : if True, swing=1 / alpha_adc=1 (parasitic-free); otherwise the
+             serial-split swing efficiency for ceil(K/36) units is used.
+    returns: (..., N) int32 ADC codes in [0, 2^r_out - 1]
+    """
+    k_dim = x_uint.shape[-1]
+    r_w = planes.shape[0]
+    n_rows_used = k_dim if n_rows_used is None else n_rows_used
+    units = cfg.units_for_rows(n_rows_used)
+    n_dp = units * cfg.rows_per_unit
+    swing = 1.0 if ideal else cfg.swing_efficiency(units)
+    alpha_adc = 1.0 if ideal else cfg.alpha_adc()
+    dp = x_uint.astype(jnp.int32) @ decode_weight_planes(planes)
+    return dsci_adc_code(dp, r_in=r_in, r_w=r_w, r_out=r_out, n_dp=n_dp,
+                         gamma=gamma, beta_codes=beta_codes, swing=swing,
+                         alpha_adc=alpha_adc)

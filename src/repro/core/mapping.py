@@ -1,0 +1,88 @@
+"""Layer -> macro tiling (Sec. III.A/IV): how a GEMM or conv maps onto the
+1152x256 array, and how many macro invocations / cycles it costs.
+
+Constraints reproduced from the chip:
+  * rows: K_eff = kernel_h*kernel_w*C_in bitcell rows per filter column,
+    allocated in serial-split units of 36 rows (3x3 x 4 channels);
+    K_eff > 1152 splits into row tiles whose partial ADC codes are summed
+    digitally (with requantization) — same as any weight-stationary CIM.
+  * columns: each output channel occupies r_w adjacent columns inside a
+    4-column block; 64 blocks -> 64 output channels per tile (r_w<=4).
+  * minimum configuration: 4 input channels (one 36-row unit) in conv mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Tuple
+
+from repro.core.hw import CIMMacroConfig, DEFAULT_MACRO
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """A GEMM of shape [M, K] x [K, N] (conv layers pass K = kh*kw*C_in
+    after im2col, M = batch*out_h*out_w)."""
+    m: int
+    k: int
+    n: int
+    r_in: int = 8
+    r_w: int = 4
+    r_out: int = 8
+    kernel: Tuple[int, int] = (1, 1)   # (kh, kw) for conv layers
+
+
+@dataclasses.dataclass(frozen=True)
+class MacroMapping:
+    row_tiles: int          # sequential K splits (digital partial-sum adds)
+    col_tiles: int          # sequential N splits (64 channels per tile)
+    units_per_tile: int     # serial-split units connected per row tile
+    rows_per_tile: int      # active bitcell rows per row tile
+    n_dp: int               # connected rows (units * 36), sets the swing
+    macro_evals: int        # row_tiles * col_tiles (per M-row batch of work)
+    utilization: float      # active rows / connected rows
+
+    @property
+    def needs_digital_accum(self) -> bool:
+        return self.row_tiles > 1
+
+
+def map_layer(spec: LayerSpec, cfg: CIMMacroConfig = DEFAULT_MACRO
+              ) -> MacroMapping:
+    if spec.r_w > cfg.max_r_w:
+        raise ValueError(f"r_w={spec.r_w} > macro max {cfg.max_r_w}")
+    ch_per_tile = cfg.n_blocks * (cfg.cols_per_block // max(spec.r_w, 1))
+    ch_per_tile = min(ch_per_tile, cfg.n_blocks * cfg.cols_per_block)
+    # one output channel per 4-col block when r_w in (3,4); two when r_w<=2
+    ch_per_tile = cfg.n_blocks * max(1, cfg.cols_per_block // spec.r_w)
+    col_tiles = math.ceil(spec.n / ch_per_tile)
+    row_tiles = math.ceil(spec.k / cfg.n_rows)
+    rows_per_tile = math.ceil(spec.k / row_tiles)
+    units = cfg.units_for_rows(rows_per_tile)
+    n_dp = units * cfg.rows_per_unit
+    return MacroMapping(
+        row_tiles=row_tiles, col_tiles=col_tiles, units_per_tile=units,
+        rows_per_tile=rows_per_tile, n_dp=n_dp,
+        macro_evals=row_tiles * col_tiles,
+        utilization=rows_per_tile / n_dp)
+
+
+def conv_layer_spec(batch: int, h: int, w: int, c_in: int, c_out: int,
+                    kh: int = 3, kw: int = 3, stride: int = 1,
+                    r_in: int = 8, r_w: int = 4, r_out: int = 8,
+                    padding: int = 1) -> LayerSpec:
+    oh = (h + 2 * padding - kh) // stride + 1
+    ow = (w + 2 * padding - kw) // stride + 1
+    return LayerSpec(m=batch * oh * ow, k=kh * kw * c_in, n=c_out,
+                     r_in=r_in, r_w=r_w, r_out=r_out, kernel=(kh, kw))
+
+
+def split_k_slices(k: int, row_tiles: int) -> List[Tuple[int, int]]:
+    """Even (start, size) K slices for digital partial-sum accumulation."""
+    base = math.ceil(k / row_tiles)
+    out, s = [], 0
+    while s < k:
+        size = min(base, k - s)
+        out.append((s, size))
+        s += size
+    return out

@@ -1,0 +1,127 @@
+"""Post-silicon equivalent noise model of the IMAGINE macro.
+
+Every analog non-ideality the paper measures or simulates is represented here
+as a differentiable (where meaningful) JAX term so it can be injected into the
+CIM-aware training forward pass (paper Sec. III.E, V.A):
+
+  * thermal / kT-C noise          -> Gaussian on the MBIW voltage
+                                     (0.52 LSB_8b RMS at gamma=1, Fig. 18a)
+  * StrongArm SA offset           -> per-column static Gaussian
+                                     (sigma 20 mV pre-layout, x1.75 post-layout,
+                                     Fig. 14b), compensated by the 7b
+                                     calibration unit down to its 0.47 mV
+                                     resolution / +/-2 LSB residue (Fig. 19)
+  * DPL settling INL              -> first-order RC settling of the serial-
+                                     split DPL (Fig. 8b,c): the DP deviation
+                                     only reaches (1 - exp(-T_dp/tau)) of its
+                                     final value, tau grows with the number of
+                                     connected units (series TG resistance)
+  * charge injection (MBIW)       -> deterministic bilinear error map on
+                                     (V_in, V_acc) (Fig. 10c), +/-1 LSB_8b
+  * leakage                       -> linear droop on V_acc over the input-
+                                     accumulation window (Fig. 10a)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hw import CIMMacroConfig, DEFAULT_MACRO
+
+
+@dataclasses.dataclass(frozen=True)
+class NoiseConfig:
+    enabled: bool = True
+    # thermal noise, expressed as RMS in 8b ADC LSBs at gamma=1 (measured)
+    thermal_rms_lsb8: float = 0.52
+    # StrongArm sense-amp offset
+    sa_sigma_v: float = 0.020           # pre-layout sigma (3-sigma = 60 mV)
+    sa_postlayout_mult: float = 1.75    # Fig. 14b: +75% post-layout
+    calibrated: bool = True             # apply the 7b calibration unit
+    # DPL settling (serial-split transmission gates)
+    tau0_ns: float = 0.50               # settling tau with one unit connected
+    tau_per_unit_ns: float = 0.016      # series-R growth per connected unit
+    # charge injection error map (volts of error per volt of node deviation)
+    kappa_in: float = 0.0024
+    kappa_acc: float = 0.0016
+    # leakage droop on the accumulation cap
+    leak_v_per_us: float = 2.0e-4
+
+    def none() -> "NoiseConfig":  # noqa: N805 - convenience constructor
+        return NoiseConfig(enabled=False)
+
+
+NO_NOISE = NoiseConfig(enabled=False)
+
+
+def lsb8_volts(cfg: CIMMacroConfig = DEFAULT_MACRO) -> float:
+    """Voltage of one 8b ADC LSB at unity gain (full scale ~ VDDH)."""
+    return cfg.vddh / 2.0**8
+
+
+def thermal_sigma_v(noise: NoiseConfig, cfg: CIMMacroConfig) -> float:
+    return noise.thermal_rms_lsb8 * lsb8_volts(cfg)
+
+
+def sample_thermal(key: jax.Array, shape, noise: NoiseConfig,
+                   cfg: CIMMacroConfig = DEFAULT_MACRO) -> jnp.ndarray:
+    if not noise.enabled:
+        return jnp.zeros(shape)
+    return thermal_sigma_v(noise, cfg) * jax.random.normal(key, shape)
+
+
+def sample_sa_offsets(key: jax.Array, n_cols: int, noise: NoiseConfig,
+                      cfg: CIMMacroConfig = DEFAULT_MACRO) -> jnp.ndarray:
+    """Per-column static SA offsets in volts (post-layout)."""
+    if not noise.enabled:
+        return jnp.zeros((n_cols,))
+    sigma = noise.sa_sigma_v * noise.sa_postlayout_mult
+    return sigma * jax.random.normal(key, (n_cols,))
+
+
+def calibration_residue(offsets_v: jnp.ndarray, noise: NoiseConfig,
+                        cfg: CIMMacroConfig = DEFAULT_MACRO) -> jnp.ndarray:
+    """Residual offset after the 7b calibration unit (core/calibration.py
+    implements the SAR search itself; this is its ideal fixed point).
+
+    The unit covers +/- cal_range with cal_lsb resolution; offsets inside the
+    range are reduced to quantization residue, outside they saturate (the
+    'few dysfunctional columns' of Fig. 14c)."""
+    if not noise.calibrated:
+        return offsets_v
+    from repro.core.calibration import residual_offsets
+    return residual_offsets(offsets_v, cfg)
+
+
+def settle_fraction(n_units_on: int, t_dp_ns: float,
+                    noise: NoiseConfig) -> float:
+    """Fraction of the final DPL deviation reached after T_dp (Fig. 8b)."""
+    if not noise.enabled:
+        return 1.0
+    tau = noise.tau0_ns + noise.tau_per_unit_ns * n_units_on
+    import math
+    return 1.0 - math.exp(-t_dp_ns / tau)
+
+
+def charge_injection_error(v_in: jnp.ndarray, v_acc: jnp.ndarray,
+                           noise: NoiseConfig,
+                           cfg: CIMMacroConfig = DEFAULT_MACRO) -> jnp.ndarray:
+    """Deterministic MBIW charge-injection error (volts), Fig. 10c.
+
+    Error depends on both the sampled DP voltage and the previously stored
+    accumulation voltage through the TG gate-source capacitances; the zero-
+    error locus is the diagonal v_in ~ (kappa_acc/kappa_in) * v_acc."""
+    if not noise.enabled:
+        return jnp.zeros_like(v_in)
+    mid = cfg.vddl
+    return noise.kappa_in * (v_in - mid) - noise.kappa_acc * (v_acc - mid)
+
+
+def leakage_droop(r_in: int, t_dp_ns: float, noise: NoiseConfig) -> float:
+    """Accumulated V_acc droop (volts) over the input-serial window."""
+    if not noise.enabled:
+        return 0.0
+    window_us = r_in * 2.0 * t_dp_ns * 1e-3
+    return noise.leak_v_per_us * window_us

@@ -1,0 +1,88 @@
+"""Straight-through-estimator quantizers for CIM-aware training.
+
+These implement the digital side of the paper's co-design loop: activations
+are quantized to r_in unsigned bits with an *adaptive swing* (the scale plays
+the role of the serial-split DPL configuration + signed-to-unsigned datapath
+conversion), weights to the macro's odd-integer +/-1 bit-plane grid, and
+outputs to r_out ADC codes through the ABN-scaled floor of Eq. (7).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ste(fwd: jnp.ndarray, grad_of: jnp.ndarray) -> jnp.ndarray:
+    """Forward `fwd`, but gradient flows as if it were `grad_of`."""
+    return grad_of + jax.lax.stop_gradient(fwd - grad_of)
+
+
+def ste_round(x: jnp.ndarray) -> jnp.ndarray:
+    return ste(jnp.round(x), x)
+
+
+def ste_floor(x: jnp.ndarray) -> jnp.ndarray:
+    return ste(jnp.floor(x), x)
+
+
+class ActQuant(NamedTuple):
+    """x ~= q * scale + zero   with q unsigned ints in [0, 2^r_in - 1]."""
+    q: jnp.ndarray
+    scale: jnp.ndarray
+    zero: jnp.ndarray
+
+
+def quantize_act(x: jnp.ndarray, r_in: int, *,
+                 scale: Optional[jnp.ndarray] = None,
+                 zero: Optional[jnp.ndarray] = None,
+                 eps: float = 1e-8) -> ActQuant:
+    """Unsigned asymmetric activation quantization (the datapath's
+    signed-to-unsigned conversion + adaptive input swing).
+
+    If scale/zero are None they are computed from the current tensor
+    (dynamic 'swing adaptation'); both are stop-gradiented, the STE flows
+    through the rounding only.
+    """
+    levels = 2.0 ** r_in - 1.0
+    if zero is None:
+        zero = jax.lax.stop_gradient(jnp.min(x))
+    if scale is None:
+        rng = jax.lax.stop_gradient(jnp.max(x) - zero)
+        scale = jnp.maximum(rng, eps) / levels
+    q = ste_round(jnp.clip((x - zero) / scale, 0.0, levels))
+    return ActQuant(q=q, scale=scale, zero=zero)
+
+
+class WeightQuant(NamedTuple):
+    """w ~= q * scale, q odd ints in +/-(2^r_w - 1)  (per-out-channel scale)."""
+    q: jnp.ndarray
+    scale: jnp.ndarray
+
+
+def quantize_weight(w: jnp.ndarray, r_w: int, *, axis: int = 0,
+                    eps: float = 1e-8) -> WeightQuant:
+    """Quantize to the macro's odd-integer grid (bit-planes of +/-1 signs).
+
+    The representable values are the 2^r_w odd integers in
+    [-(2^r_w - 1), 2^r_w - 1]; step 2.  Scale is per-output-channel
+    (reduction over `axis`).
+    """
+    full = 2.0 ** r_w - 1.0
+    amax = jax.lax.stop_gradient(
+        jnp.max(jnp.abs(w), axis=axis, keepdims=True))
+    scale = jnp.maximum(amax, eps) / full
+    u = jnp.clip(w / scale, -full, full)
+    # nearest odd integer with STE: 2*round((u-1)/2)+1
+    q = 2.0 * ste_round((u - 1.0) / 2.0) + 1.0
+    q = jnp.clip(q, -full, full)
+    return WeightQuant(q=q, scale=scale)
+
+
+def adc_quantize(dp: jnp.ndarray, *, r_out: int, gain: jnp.ndarray,
+                 beta_codes: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (7) in code space with STE: code = floor(mid + gain*dp + beta)."""
+    mid = 2.0 ** (r_out - 1)
+    code = ste_floor(mid + gain * dp + beta_codes)
+    return jnp.clip(code, 0.0, 2.0 ** r_out - 1.0) + 0.5

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel for the CIM-MBIW quantized matmul with fused DSCI-ADC.
+
+TPU adaptation of the macro's analog pipeline (DESIGN.md §3):
+  * the DP array's charge accumulation    ->  int8 x int8 MXU matmul with an
+    int32 VMEM accumulator (exact; the charge domain is linear, so is this);
+  * the MBIW *input-serial* accumulation  ->  input nibble planes walked by
+    the K grid dimension, each plane's partial dp scaled by 2^(4*plane) into
+    the same accumulator — the kernel literally performs the paper's
+    input-serial, weight-parallel accumulation, at nibble rather than bit
+    granularity (the MXU makes 4b groups free, serialising to single bits
+    would only waste it);
+  * the DSCI-ADC with in-conversion ABN   ->  per-output-channel gamma/beta
+    + floor + clip epilogue applied in VMEM before writeback, so the
+    paper's "no post-ADC rescaling pass" maps to "no second pass over the
+    output in HBM".
+
+Grid: (M/bm, N/bn, P*K/bk) with the plane-major K axis innermost, so the
+accumulator tile stays resident in VMEM across all planes and K blocks
+(weight-stationary within a tile, like the macro).  The weight BlockSpec
+re-reads the same w tile for every plane: w traffic is P-times redundant in
+exchange for zero extra accumulator state — the right trade at P<=2.
+
+VMEM at the default bm=bn=256, bk=512: x 128 KiB + w 128 KiB + acc 256 KiB
++ out 256 KiB < 1 MiB << 128 MiB VMEM; all dims MXU-aligned (128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _cim_mbiw_kernel(x_ref, w_ref, gamma_ref, beta_ref, o_ref, acc_ref, *,
+                     n_k_total: int, n_k_inner: int, plane_shift: int,
+                     g0: float, r_out: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    plane = k // n_k_inner
+    scale = (jnp.int32(1) << (plane_shift * plane)).astype(jnp.int32)
+    part = jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    acc_ref[...] += scale * part
+
+    @pl.when(k == n_k_total - 1)
+    def _epilogue():
+        dp = acc_ref[...].astype(jnp.float32)
+        gamma = gamma_ref[...].astype(jnp.float32)      # (1, bn)
+        beta = beta_ref[...].astype(jnp.float32)        # (1, bn)
+        mid = 2.0 ** (r_out - 1)
+        code = jnp.floor(mid + gamma * g0 * dp + beta)
+        o_ref[...] = jnp.clip(code, 0.0, 2.0 ** r_out - 1.0
+                              ).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "plane_shift", "g0", "r_out", "bm", "bn", "bk", "interpret"))
+def cim_mbiw_matmul_planes(x_planes: jnp.ndarray, w_q: jnp.ndarray,
+                           gamma: jnp.ndarray, beta: jnp.ndarray, *,
+                           plane_shift: int, g0: float, r_out: int,
+                           bm: int = 256, bn: int = 256, bk: int = 512,
+                           interpret: bool = True) -> jnp.ndarray:
+    """CIM matmul over input planes; shapes pre-padded to block multiples.
+
+    x_planes : (M, P*K) int8 — P nibble planes laid out plane-major along
+               the last axis; plane p carries bits [p*plane_shift, ...).
+    w_q      : (K, N) int8 odd weights (+/-(2^r_w - 1))
+    gamma, beta : (1, N) float32 ABN parameters (beta in ADC codes)
+    returns  : (M, N) int32 ADC codes in [0, 2^r_out - 1]
+    """
+    m, pk = x_planes.shape
+    k_dim, n = w_q.shape
+    assert pk % k_dim == 0, (pk, k_dim)
+    n_planes = pk // k_dim
+    assert m % bm == 0 and n % bn == 0 and k_dim % bk == 0, (m, n, k_dim)
+    n_k_inner = k_dim // bk
+    n_k_total = n_planes * n_k_inner
+
+    kernel = functools.partial(
+        _cim_mbiw_kernel, n_k_total=n_k_total, n_k_inner=n_k_inner,
+        plane_shift=plane_shift, g0=g0, r_out=r_out)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, n_k_total),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k % n_k_inner, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(x_planes, w_q, gamma, beta)

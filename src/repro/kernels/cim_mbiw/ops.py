@@ -1,0 +1,103 @@
+"""jit'd public wrappers around the cim_mbiw Pallas kernel.
+
+Handles everything the kernel does not: nibble-plane decomposition of
+unsigned inputs, padding to MXU-aligned blocks, the macro's K<=1152
+row-tiling with per-tile ADC conversion, and dequantization back to real
+units (mirroring core/cim_layers._fakequant_forward).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import digital_ref
+from repro.core.hw import CIMMacroConfig, DEFAULT_MACRO
+from repro.kernels.cim_mbiw.kernel import cim_mbiw_matmul_planes
+
+_PLANE_SHIFT = 4  # nibble planes
+
+
+def _pad_to(x: jnp.ndarray, mult: Tuple[int, ...]) -> jnp.ndarray:
+    pads = [(0, (-s) % m) for s, m in zip(x.shape, mult)]
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads)
+
+
+def split_planes(x_q: jnp.ndarray, r_in: int) -> Tuple[jnp.ndarray, int]:
+    """Unsigned ints < 2^r_in -> plane-major int8 layout (M, P*K)."""
+    x = x_q.astype(jnp.int32)
+    if r_in <= 7:
+        return x.astype(jnp.int8), 1
+    n_planes = -(-r_in // _PLANE_SHIFT)
+    planes = [((x >> (_PLANE_SHIFT * p)) & (2**_PLANE_SHIFT - 1)).astype(jnp.int8)
+              for p in range(n_planes)]
+    return jnp.concatenate(planes, axis=-1), n_planes
+
+
+def cim_matmul(x_q: jnp.ndarray, w_q: jnp.ndarray, gamma: jnp.ndarray,
+               beta: jnp.ndarray, *, r_in: int, r_out: int, g0: float,
+               bm: int = 256, bn: int = 256, bk: int = 512,
+               interpret: bool = True) -> jnp.ndarray:
+    """One macro row-tile (K <= n_rows recommended): int inputs -> ADC codes.
+
+    x_q: (M, K) unsigned ints < 2^r_in; w_q: (K, N) odd ints; gamma/beta (N,).
+    Returns (M, N) int32 codes.
+    """
+    m, k_dim = x_q.shape
+    _, n = w_q.shape
+    x_planes, n_planes = split_planes(x_q, r_in)
+
+    # pad: K to bk multiple (per-plane), M to bm, N to bn.  Padding K with
+    # zero inputs/weights adds 0 to the dp — same trick the macro uses when
+    # a layer does not fill its 36-row units.
+    k_pad = (-k_dim) % bk
+    if k_pad:
+        xp = x_planes.reshape(m, n_planes, k_dim)
+        xp = jnp.pad(xp, ((0, 0), (0, 0), (0, k_pad)))
+        x_planes = xp.reshape(m, n_planes * (k_dim + k_pad))
+        w_q = jnp.pad(w_q, ((0, k_pad), (0, 0)))
+    x_planes = _pad_to(x_planes, (bm, 1))
+    w_q = _pad_to(w_q.astype(jnp.int8), (1, bn))
+    gamma2 = _pad_to(gamma.reshape(1, -1).astype(jnp.float32), (1, bn))
+    beta2 = _pad_to(beta.reshape(1, -1).astype(jnp.float32), (1, bn))
+
+    codes = cim_mbiw_matmul_planes(
+        x_planes, w_q, gamma2, beta2, plane_shift=_PLANE_SHIFT, g0=g0,
+        r_out=r_out, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return codes[:m, :n]
+
+
+def cim_linear(x_q: jnp.ndarray, w_q: jnp.ndarray, gamma: jnp.ndarray,
+               beta: jnp.ndarray, *, r_in: int, r_w: int, r_out: int,
+               cfg: CIMMacroConfig = DEFAULT_MACRO, adaptive_swing: bool = True,
+               interpret: bool = True) -> jnp.ndarray:
+    """Full layer: row-tiled kernel calls with per-tile ADC, digital
+    partial-sum recombination in dp units (host side, like the chip).
+
+    Returns (M, N) float32 dp_hat (caller applies act/weight scales)."""
+    m, k_dim = x_q.shape
+    n = w_q.shape[1]
+    n_rows = cfg.n_rows
+    if adaptive_swing:
+        rows = min(k_dim, n_rows)
+        units = cfg.units_for_rows(rows)
+    else:
+        units = cfg.n_units
+    n_dp = units * cfg.rows_per_unit
+    g0 = digital_ref.adc_gain_factor(r_in, r_w, r_out, n_dp,
+                                     cfg.swing_efficiency(units),
+                                     cfg.alpha_adc())
+    mid = 2.0 ** (r_out - 1)
+    row_tiles = -(-k_dim // n_rows)
+    dp_hat = jnp.zeros((m, n), jnp.float32)
+    for t in range(row_tiles):
+        ks, ke = t * n_rows, min((t + 1) * n_rows, k_dim)
+        codes = cim_matmul(x_q[:, ks:ke], w_q[ks:ke], gamma, beta,
+                           r_in=r_in, r_out=r_out, g0=g0, interpret=interpret)
+        dp_hat += (codes.astype(jnp.float32) + 0.5 - mid - beta[None, :]) \
+            / (gamma[None, :] * g0)
+    return dp_hat

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the cim_mbiw kernel.
+
+Semantics: one macro row-tile (K <= 1152) of the digital-equivalent CIM
+matmul, ADC conversion fused in the epilogue:
+
+    code[m, n] = clip( floor( 2^(r_out-1)
+                              + gamma[n] * g0 * sum_k x[m,k] * w[k,n]
+                              + beta[n] ),  0, 2^r_out - 1 )
+
+x: unsigned ints < 2^r_in, w: odd ints in +/-(2^r_w - 1), g0 the unity-gain
+code gain of digital_ref.adc_gain_factor.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cim_matmul_ref(x_q: jnp.ndarray, w_q: jnp.ndarray, gamma: jnp.ndarray,
+                   beta: jnp.ndarray, *, g0: float, r_out: int
+                   ) -> jnp.ndarray:
+    dp = x_q.astype(jnp.int32) @ w_q.astype(jnp.int32)
+    mid = 2.0 ** (r_out - 1)
+    code = jnp.floor(mid + gamma[None, :] * g0 * dp.astype(jnp.float32)
+                     + beta[None, :])
+    return jnp.clip(code, 0.0, 2.0 ** r_out - 1.0).astype(jnp.int32)

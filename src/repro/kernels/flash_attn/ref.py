@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool, window: int = 0,
+                  sk_valid: int = 0) -> jnp.ndarray:
+    """q (B,H,Sq,D), k/v (B,G,Sk,D); returns (B,H,Sq,D)."""
+    b, h, sq, d = q.shape
+    g, sk = k.shape[1], k.shape[2]
+    rep = h // g
+    sk_valid = sk_valid or sk
+    qf = q.astype(jnp.float32) / (d ** 0.5)
+    kf = jnp.repeat(k.astype(jnp.float32), rep, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    keep = k_pos < sk_valid
+    if causal:
+        keep &= q_pos >= k_pos
+    if window > 0:
+        keep &= (q_pos - k_pos) < window
+    s = jnp.where(keep[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)

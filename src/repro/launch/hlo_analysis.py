@@ -1,0 +1,328 @@
+"""Roofline terms from compiled HLO text.
+
+XLA's cost_analysis() counts while-loop bodies ONCE, so for scan-over-layers
+models it underestimates FLOPs/bytes by ~the layer count.  This module walks
+the scheduled HLO itself:
+
+  * computations are parsed into (op name -> shape / opcode / operands);
+  * the call graph (while body/condition, to_apply, calls) is traversed and
+    each computation gets an execution multiplier = product of enclosing
+    while-loop trip counts (trip count = the comparison constant inside the
+    loop condition — the standard lax.scan lowering);
+  * FLOPs  : sum over dot ops of 2 * prod(result dims) * prod(contracted
+    lhs dims), weighted;
+  * bytes  : scheduled HLO materializes every top-level op's result, so HBM
+    traffic ~= sum of (result + operand buffer bytes) over compute ops
+    (view-like ops excluded), weighted;
+  * collective bytes: result bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute (incl. -start forms),
+    weighted.
+
+All numbers are per device (the SPMD module is per-device).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# view-like / free ops excluded from the bytes estimate
+_FREE_OPS = {"get-tuple-element", "tuple", "parameter", "constant", "bitcast",
+             "after-all", "partition-id", "replica-id", "iota"}
+
+# elementwise ops: the TPU backend fuses these into their consumers (loop
+# fusion), so they do not materialize HBM buffers.  The CPU backend we
+# compile on is less aggressive — leaving them in would overstate the
+# memory term by the backend difference, not by anything intrinsic to the
+# program (documented in EXPERIMENTS.md §Roofline).
+_ELEMENTWISE = {"convert", "multiply", "add", "subtract", "divide", "select",
+                "compare", "and", "or", "not", "xor", "exponential", "log",
+                "rsqrt", "sqrt", "tanh", "logistic", "maximum", "minimum",
+                "abs", "negate", "sign", "floor", "ceil", "round",
+                "broadcast", "power", "remainder", "clamp",
+                "exponential-minus-one", "log-plus-one"}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+# first ` opcode(` after the result type; types are always `dtype[...]`,
+# never `word(`, so the first such match is the opcode
+_OPCODE_RE = re.compile(r"\s([a-z][a-z0-9\-]*)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALL_RE = re.compile(r"(?:body|condition|to_apply|calls)=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"\bconstant\((\d+)\)")
+
+
+def _shape_elems_bytes(text: str) -> Tuple[int, int]:
+    n_total, b_total = 0, 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        n_total += n
+        b_total += n * _DTYPE_BYTES[dtype]
+    return n_total, b_total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    result: str          # result type text (may be a tuple)
+    opcode: str
+    operands: List[str]
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    symbols: Dict[str, str]   # op name -> result type text
+
+
+class HLOModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, Computation] = {}
+        self._parse(text)
+        self.multipliers = self._compute_multipliers()
+
+    # -- parsing -----------------------------------------------------------
+    def _parse(self, text: str):
+        cur: Optional[Computation] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line:
+                continue
+            if not line.startswith(" "):
+                # computation header: `%name (args) -> type {` or `ENTRY ...`
+                if "->" in line and "{" in line:
+                    m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+                    if m:
+                        cur = Computation(m.group(1), [], {})
+                        self.computations[cur.name] = cur
+                continue
+            if cur is None:
+                continue
+            m = _NAME_RE.match(line)
+            if not m:
+                continue
+            name = m.group(1)
+            rest = line[m.end():]
+            mo = _OPCODE_RE.search(" " + rest)
+            if not mo:
+                continue
+            opcode = mo.group(1)
+            op_pos = mo.start(1) - 1        # account for the " " prefix
+            result = rest[:op_pos].strip()
+            # operands: everything inside the first (...) after the opcode
+            start = op_pos + len(opcode) + 1
+            depth, end = 1, start
+            while end < len(rest) and depth:
+                if rest[end] == "(":
+                    depth += 1
+                elif rest[end] == ")":
+                    depth -= 1
+                end += 1
+            operand_text = rest[start:end - 1]
+            operands = _OPERAND_RE.findall(operand_text)
+            op = Op(name, result, opcode, operands, line)
+            cur.ops.append(op)
+            cur.symbols[name] = result
+
+    # -- call graph / multipliers -------------------------------------------
+    def _trip_count(self, cond_name: str) -> int:
+        comp = self.computations.get(cond_name)
+        best = 1
+        if comp is None:
+            return best
+        names = [cond_name] + [c for op in comp.ops
+                               for c in _CALL_RE.findall(op.line)]
+        for n in names:
+            c = self.computations.get(n)
+            if not c:
+                continue
+            for op in c.ops:
+                for v in _CONST_RE.findall(op.line):
+                    best = max(best, int(v))
+        return best
+
+    def _compute_multipliers(self) -> Dict[str, float]:
+        referenced = set()
+        for comp in self.computations.values():
+            for op in comp.ops:
+                referenced.update(_CALL_RE.findall(op.line))
+        entries = [n for n in self.computations if n not in referenced]
+        mult: Dict[str, float] = defaultdict(lambda: 0.0)
+        stack = [(n, 1.0) for n in entries]
+        visited = set()
+        while stack:
+            name, m = stack.pop()
+            if mult[name] >= m and name in visited:
+                continue
+            visited.add(name)
+            mult[name] = max(mult[name], m)
+            comp = self.computations.get(name)
+            if comp is None:
+                continue
+            for op in comp.ops:
+                callees = _CALL_RE.findall(op.line)
+                if not callees:
+                    continue
+                if op.opcode == "while":
+                    cond = body = None
+                    mc = re.search(r"condition=%?([\w.\-]+)", op.line)
+                    mb = re.search(r"body=%?([\w.\-]+)", op.line)
+                    cond = mc.group(1) if mc else None
+                    body = mb.group(1) if mb else None
+                    # prefer XLA's own annotation when present
+                    mt = re.search(r'known_trip_count..:..n.:.(\d+)', op.line)
+                    if mt:
+                        trips = int(mt.group(1))
+                    else:
+                        trips = self._trip_count(cond) if cond else 1
+                    if cond:
+                        stack.append((cond, m * (trips + 1)))
+                    if body:
+                        stack.append((body, m * trips))
+                else:
+                    for c in callees:
+                        stack.append((c, m))
+        return dict(mult)
+
+    # -- metrics -------------------------------------------------------------
+    def flops(self) -> float:
+        total = 0.0
+        for comp in self.computations.values():
+            m = self.multipliers.get(comp.name, 1.0)
+            for op in comp.ops:
+                if op.opcode != "dot":
+                    continue
+                r_elems, _ = _shape_elems_bytes(op.result)
+                k = self._contracted_size(comp, op)
+                total += 2.0 * r_elems * k * m
+        return total
+
+    def _contracted_size(self, comp: Computation, op: Op) -> int:
+        mdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+        if not mdims or not op.operands:
+            return 1
+        dims = [int(d) for d in mdims.group(1).split(",") if d]
+        lhs_type = comp.symbols.get(op.operands[0], "")
+        shapes = _SHAPE_RE.findall(lhs_type)
+        if not shapes:
+            return 1
+        lhs_dims = [int(d) for d in shapes[0][1].split(",") if d]
+        k = 1
+        for d in dims:
+            if d < len(lhs_dims):
+                k *= lhs_dims[d]
+        return k
+
+    def hbm_bytes(self) -> float:
+        """HBM traffic estimate: every materialized buffer is written once
+        and read ~once downstream -> 2 x result bytes per op, with aliasing
+        exceptions (while carries, in-place dynamic-update-slice, slices of
+        big buffers only move the slice).
+
+        Pallas-kernel awareness: ops whose metadata op_name contains
+        "vmem_kernel" (our named_scope marker around pl.pallas_call in
+        interpret mode) model VMEM-resident compute; computations where the
+        majority of ops carry the marker (the interpreter grid loop — XLA
+        strips metadata from its carry copies) are treated the same.  In
+        VMEM context only block streaming counts as HBM traffic:
+        dynamic-slice reads (HBM->VMEM DMA) and dynamic-update-slice
+        update writes (VMEM->HBM DMA) — exactly the BlockSpec-declared
+        I/O of the kernel on a real TPU."""
+        # a computation is VMEM-resident when it contains marked kernel ops
+        # and every *unmarked* op is interpreter carry plumbing (XLA strips
+        # metadata from the copies it inserts around while carries)
+        plumbing = {"copy", "get-tuple-element", "tuple", "parameter",
+                    "constant", "bitcast", "select", "add", "subtract",
+                    "multiply", "divide", "compare", "and", "or", "not",
+                    "convert", "broadcast", "reshape", "iota",
+                    "dynamic-slice", "dynamic-update-slice", "fusion"}
+        # NOTE: "fusion" is safe here — real model computations always
+        # contain dots / whiles / collectives, which are not plumbing, so
+        # only interpreter grid-loop bodies (whose fusions are carry
+        # plumbing fused by the CPU backend) can classify as VMEM.
+        mostly_vmem = {}
+        for name, comp in self.computations.items():
+            if not comp.ops:
+                mostly_vmem[name] = False
+                continue
+            marked = sum(1 for op in comp.ops if "vmem_kernel" in op.line)
+            unmarked_ok = all(op.opcode in plumbing for op in comp.ops
+                              if "vmem_kernel" not in op.line)
+            mostly_vmem[name] = (marked > 0.5 * len(comp.ops)
+                                 or (marked > 0 and unmarked_ok))
+
+        total = 0.0
+        for comp in self.computations.values():
+            m = self.multipliers.get(comp.name, 1.0)
+            vmem_comp = mostly_vmem[comp.name]
+            for op in comp.ops:
+                if op.opcode in _FREE_OPS or op.opcode in _ELEMENTWISE:
+                    continue
+                if op.opcode in ("while", "conditional", "call"):
+                    continue   # bodies are accounted via multipliers
+                in_vmem = vmem_comp or "vmem_kernel" in op.line
+                if op.opcode == "dynamic-update-slice":
+                    if in_vmem:
+                        # the interpreter DS-reads every block it later
+                        # DUS-writes (read-modify-write), so the DS stream
+                        # already counts both directions; skip the DUS.
+                        continue
+                    if len(op.operands) > 1:
+                        t = comp.symbols.get(op.operands[1])
+                        ub = _shape_elems_bytes(t)[1] if t else 0
+                        total += 2.0 * ub * m
+                    continue
+                if in_vmem:
+                    if op.opcode == "dynamic-slice":
+                        _, rb = _shape_elems_bytes(op.result)
+                        total += rb * m          # HBM <-> VMEM block DMA
+                    continue                      # VMEM-resident compute
+                _, wb = _shape_elems_bytes(op.result)
+                total += 2.0 * wb * m
+        return total
+
+    def collective_bytes(self) -> Dict[str, Dict[str, float]]:
+        out: Dict[str, Dict[str, float]] = defaultdict(
+            lambda: {"count": 0, "bytes": 0.0})
+        for comp in self.computations.values():
+            m = self.multipliers.get(comp.name, 1.0)
+            for op in comp.ops:
+                base = op.opcode.replace("-start", "")
+                if base in _COLLECTIVES and not op.opcode.endswith("-done"):
+                    _, b = _shape_elems_bytes(op.result)
+                    out[base]["count"] += 1
+                    out[base]["bytes"] += b * m
+        return dict(out)
+
+
+def analyze(hlo_text: str) -> Dict[str, object]:
+    mod = HLOModule(hlo_text)
+    coll = mod.collective_bytes()
+    return {
+        "hlo_flops": mod.flops(),
+        "hlo_bytes": mod.hbm_bytes(),
+        "collectives": coll,
+        "collective_bytes": sum(v["bytes"] for v in coll.values()),
+    }
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    return HLOModule(hlo_text).collective_bytes()

@@ -1,0 +1,71 @@
+"""The paper's own workloads: the 784-512-128-10 MLP of Fig. 3(b) and a
+LeNet-5-style CNN (the paper measures a modified 4b LeNet-5 on-chip).
+
+Every layer runs through the CIM stack, so these models exercise the full
+technique: adaptive-swing activation quantization, bit-plane weights,
+DSCI-ADC output quantization with learned per-channel ABN, and post-silicon
+noise injection during training.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cim_layers import (CIMConfig, cim_conv2d_apply,
+                                   cim_linear_apply, init_cim_linear)
+
+
+def init_mlp(key: jax.Array, dims=(784, 512, 128, 10),
+             cim: Optional[CIMConfig] = None) -> Dict:
+    ks = jax.random.split(key, len(dims) - 1)
+    return {f"fc{i}": init_cim_linear(ks[i], dims[i], dims[i + 1], cfg=cim)
+            for i in range(len(dims) - 1)}
+
+
+def mlp_forward(params: Dict, x: jnp.ndarray, cim: CIMConfig,
+                key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """x (B, 784) -> logits (B, 10)."""
+    n = len(params)
+    for i in range(n):
+        if key is not None:
+            key, sub = jax.random.split(key)
+        else:
+            sub = None
+        x = cim_linear_apply(params[f"fc{i}"], x, cim, key=sub)
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def init_lenet(key: jax.Array, n_classes: int = 10, in_ch: int = 1,
+               cim: Optional[CIMConfig] = None) -> Dict:
+    ks = jax.random.split(key, 5)
+    return {
+        "conv1": init_cim_linear(ks[0], 3 * 3 * in_ch, 16, cfg=cim),
+        "conv2": init_cim_linear(ks[1], 3 * 3 * 16, 32, cfg=cim),
+        "fc1": init_cim_linear(ks[2], 32 * 7 * 7, 128, cfg=cim),
+        "fc2": init_cim_linear(ks[3], 128, n_classes, cfg=cim),
+    }
+
+
+def lenet_forward(params: Dict, x: jnp.ndarray, cim: CIMConfig,
+                  key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """x (B, 28, 28, C) -> logits."""
+    def nk():
+        nonlocal key
+        if key is None:
+            return None
+        key, sub = jax.random.split(key)
+        return sub
+
+    h = jax.nn.relu(cim_conv2d_apply(params["conv1"], x, cim, key=nk()))
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")
+    h = jax.nn.relu(cim_conv2d_apply(params["conv2"], h, cim, key=nk()))
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(cim_linear_apply(params["fc1"], h, cim, key=nk()))
+    return cim_linear_apply(params["fc2"], h, cim, key=nk())

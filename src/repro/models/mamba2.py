@@ -1,0 +1,213 @@
+"""Mamba-2 (SSD, state-space duality, arXiv:2405.21060) in pure JAX.
+
+Training uses the chunked SSD algorithm (quadratic within a chunk, linear
+across chunks via a lax.scan state recurrence); decode is the O(1)-per-token
+state update.  Heads are tensor-parallel over "model"; the in/out projections
+run through the CIM layer like every other GEMM (the SSD inner recurrence
+itself is inapplicable to the weight-stationary macro — DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cim_layers import CIMConfig, cim_linear_apply, init_cim_linear
+from repro.models.sharding import BATCH, TP, shard
+
+
+def ssm_dims(d_model: int, expand: int, headdim: int, d_state: int,
+             n_groups: int = 1):
+    d_inner = expand * d_model
+    n_heads = d_inner // headdim
+    conv_ch = d_inner + 2 * n_groups * d_state
+    proj_out = 2 * d_inner + 2 * n_groups * d_state + n_heads
+    return d_inner, n_heads, conv_ch, proj_out
+
+
+def init_mamba2_layer(key: jax.Array, d_model: int, *, expand: int,
+                      headdim: int, d_state: int, conv_width: int,
+                      cim: Optional[CIMConfig] = None,
+                      n_groups: int = 1) -> Dict:
+    d_inner, n_heads, conv_ch, proj_out = ssm_dims(
+        d_model, expand, headdim, d_state, n_groups)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": init_cim_linear(ks[0], d_model, proj_out, cfg=cim),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (conv_width, conv_ch)),
+        "conv_b": jnp.zeros((conv_ch,)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)),
+        "D_skip": jnp.ones((n_heads,)),
+        "dt_bias": jnp.zeros((n_heads,)),
+        "gate_norm": jnp.ones((d_inner,)),
+        "out_proj": init_cim_linear(ks[2], d_inner, d_model, cfg=cim),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv.  x (B, L, C), w (W, C).  Returns (y, new_state)
+    where state carries the trailing W-1 inputs for decode."""
+    width = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(width))
+    return jax.nn.silu(y + b), xp[:, -(width - 1):, :]
+
+
+def _segsum(da: jnp.ndarray) -> jnp.ndarray:
+    """Lower-triangular pairwise sums: out[..., i, j] = sum_{j<t<=i} da[t]."""
+    q = da.shape[-1]
+    cs = jnp.cumsum(da, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # (..., i, j)
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xh: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+                B: jnp.ndarray, C: jnp.ndarray, *, chunk: int,
+                init_state: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD.
+
+    xh (B,L,H,P), dt (B,L,H), a (H,) negative, B/C (B,L,G,N) with G
+    broadcastable to H.  Returns (y (B,L,H,P), final_state (B,H,P,N))."""
+    bsz, l, h, p = xh.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    pad = (-l) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    lp = l + pad
+    nc = lp // chunk
+    xc = xh.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    Bc = jnp.repeat(B.reshape(bsz, nc, chunk, g, n), rep, axis=3)
+    Cc = jnp.repeat(C.reshape(bsz, nc, chunk, g, n), rep, axis=3)
+
+    da = dtc * a[None, None, None, :]                   # (B,nc,Q,H) log decay
+    da = jnp.moveaxis(da, -1, 2)                        # (B,nc,H,Q)
+    seg = _segsum(da)                                   # (B,nc,H,Q,Q)
+    decay = jnp.exp(seg)
+
+    # intra-chunk (diagonal blocks)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Cc, Bc) * decay
+    scores = scores * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", scores, xc)
+
+    # chunk-final states
+    cum = jnp.cumsum(da, axis=-1)                       # (B,nc,H,Q)
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)         # (B,nc,H,Q)
+    su = Bc * (dtc * jnp.moveaxis(decay_to_end, 2, -1))[..., None]
+    states = jnp.einsum("bcqhn,bcqhp->bchpn", su, xc)   # (B,nc,H,P,N)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[..., -1])                 # (B,nc,H)
+
+    def step(carry, inp):
+        s_c, d_c = inp
+        new = carry * d_c[..., None, None] + s_c
+        return new, carry                               # emit state *before*
+
+    init = (jnp.zeros((bsz, h, p, n), xh.dtype) if init_state is None
+            else init_state)
+    final, prev_states = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)       # (B,nc,H,P,N)
+
+    # off-diagonal contribution: decay from chunk start
+    in_decay = jnp.exp(cum)                             # (B,nc,H,Q)
+    y_off = jnp.einsum("bcqhn,bchpn->bcqhp",
+                       Cc * jnp.moveaxis(in_decay, 2, -1)[..., None],
+                       prev_states)
+    y = (y_diag + y_off).reshape(bsz, lp, h, p)[:, :l]
+    return y, final
+
+
+def ssd_naive(xh, dt, a, B, C, init_state=None):
+    """O(L) recurrence oracle for tests."""
+    bsz, l, h, p = xh.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Br = jnp.repeat(B, rep, axis=2)
+    Cr = jnp.repeat(C, rep, axis=2)
+    s = (jnp.zeros((bsz, h, p, n), jnp.float32) if init_state is None
+         else init_state.astype(jnp.float32))
+    ys = []
+    for t in range(l):
+        dec = jnp.exp(dt[:, t] * a[None, :])            # (B,H)
+        s = s * dec[..., None, None] + jnp.einsum(
+            "bh,bhn,bhp->bhpn", dt[:, t], Br[:, t], xh[:, t])
+        ys.append(jnp.einsum("bhn,bhpn->bhp", Cr[:, t], s))
+    return jnp.stack(ys, axis=1), s
+
+
+def mamba2_layer(params: Dict, x: jnp.ndarray, cfg, cim: CIMConfig, *,
+                 state: Optional[Dict] = None
+                 ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """One Mamba-2 block.  x (B, L, D).  state: {"ssm": (B,H,P,N),
+    "conv": (B,W-1,C)} for decode."""
+    bsz, l, d_model = x.shape
+    d_inner, n_heads, conv_ch, _ = ssm_dims(
+        d_model, cfg.ssm_expand, cfg.ssm_headdim, cfg.ssm_state)
+    g, n, p = 1, cfg.ssm_state, cfg.ssm_headdim
+
+    zxbcdt = cim_linear_apply(params["in_proj"], x, cim)
+    zxbcdt = shard(zxbcdt, BATCH, None, TP)
+    z, xbc, dt = jnp.split(
+        zxbcdt, [d_inner, d_inner + conv_ch], axis=-1)
+    conv_state = None if state is None else state["conv"]
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                 conv_state)
+    xc, B, C = jnp.split(xbc, [d_inner, d_inner + g * n], axis=-1)
+    xh = xc.reshape(bsz, l, n_heads, p)
+    xh = shard(xh, BATCH, None, TP, None)
+    B = B.reshape(bsz, l, g, n)
+    C = C.reshape(bsz, l, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])
+
+    if state is None:
+        y, final = ssd_chunked(xh.astype(jnp.float32), dt, a,
+                               B.astype(jnp.float32), C.astype(jnp.float32),
+                               chunk=cfg.ssm_chunk)
+        new_state = None
+    else:
+        # decode: single-step state update (l == 1)
+        s = state["ssm"]
+        dec = jnp.exp(dt[:, 0] * a[None, :])
+        Br = jnp.repeat(B[:, 0], n_heads // g, axis=1)
+        Cr = jnp.repeat(C[:, 0], n_heads // g, axis=1)
+        s = s * dec[..., None, None] + jnp.einsum(
+            "bh,bhn,bhp->bhpn", dt[:, 0], Br.astype(jnp.float32),
+            xh[:, 0].astype(jnp.float32))
+        y = jnp.einsum("bhn,bhpn->bhp", Cr.astype(jnp.float32), s)[:, None]
+        final = s
+        new_state = {"ssm": final, "conv": new_conv}
+    y = y + xh.astype(jnp.float32) * params["D_skip"][None, None, :, None]
+    y = y.reshape(bsz, l, d_inner)
+
+    # gated RMSNorm then out-projection
+    gated = y * jax.nn.silu(z.astype(jnp.float32))
+    gn = gated * jax.lax.rsqrt(jnp.mean(gated * gated, -1, keepdims=True)
+                               + 1e-6) * params["gate_norm"]
+    out = cim_linear_apply(params["out_proj"], gn.astype(x.dtype), cim)
+    return shard(out, BATCH, None, None), new_state
+
+
+def init_mamba2_state(batch: int, d_model: int, cfg, dtype=jnp.float32) -> Dict:
+    d_inner, n_heads, conv_ch, _ = ssm_dims(
+        d_model, cfg.ssm_expand, cfg.ssm_headdim, cfg.ssm_state)
+    return {
+        "ssm": jnp.zeros((batch, n_heads, cfg.ssm_headdim, cfg.ssm_state),
+                         jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+    }

@@ -1,0 +1,176 @@
+"""Mixture-of-experts FFN with shard_map expert execution.
+
+Parallelism (DESIGN.md §5): tokens are data-parallel over ("pod","data"),
+every expert's FFN is tensor-parallel over "model" (Megatron split on d_ff).
+Inside the shard_map body everything is *local*: top-k routing results are
+sorted per shard, tokens are gathered into fixed-capacity expert groups
+(dropped-token discipline, capacity_factor), the grouped GEMMs run as
+batched einsums over the expert axis, and the down-projection partials are
+psum'd over "model".
+
+Per-expert ABN: the CIM fakequant path quantizes each expert's weights with
+per-(expert, channel) scales and applies per-expert gamma/beta — the paper's
+distribution-aware reshaping argument is strongest exactly here, since every
+expert sees a different token distribution.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.cim_layers import CIMConfig
+from repro.core.quantization import adc_quantize, quantize_act, quantize_weight
+from repro.models.sharding import BATCH, TP, mesh_spec, shard
+
+
+def init_moe(key: jax.Array, d: int, f: int, n_experts: int,
+             cim: Optional[CIMConfig] = None) -> Dict:
+    ks = jax.random.split(key, 4)
+    s_in = (1.0 / d) ** 0.5
+    s_out = (1.0 / f) ** 0.5
+    return {
+        "router": s_in * jax.random.normal(ks[0], (d, n_experts), jnp.float32),
+        "w_gate": s_in * jax.random.normal(ks[1], (n_experts, d, f), jnp.float32),
+        "w_up": s_in * jax.random.normal(ks[2], (n_experts, d, f), jnp.float32),
+        "w_down": s_out * jax.random.normal(ks[3], (n_experts, f, d), jnp.float32),
+        "abn_log_gamma": jnp.zeros((n_experts, d), jnp.float32),
+        "abn_beta": jnp.zeros((n_experts, d), jnp.float32),
+    }
+
+
+def _get_expert_w(params: Dict, name: str, dtype) -> jnp.ndarray:
+    """Raw or deploy-quantized expert bank; int8 dequant fuses on TPU."""
+    if f"{name}_q" in params:
+        return (params[f"{name}_q"].astype(dtype)
+                * params[f"{name}_scale"][..., None, :].astype(dtype))
+    return params[name]
+
+
+def _expert_gemm(x_g: jnp.ndarray, w: jnp.ndarray, cim: CIMConfig,
+                 abn: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None
+                 ) -> jnp.ndarray:
+    """(E, C, D) x (E, D, F) -> (E, C, F), optionally CIM-fakequantized with
+    per-expert weight scales and (on the down-proj) per-expert ABN."""
+    if cim.mode != "fakequant":
+        return jnp.einsum("ecd,edf->ecf", x_g, w.astype(x_g.dtype))
+    aq = quantize_act(x_g.astype(jnp.float32), cim.r_in)
+    wq = quantize_weight(w, cim.r_w, axis=1)          # scale (E, 1, F)
+    dp = jnp.einsum("ecd,edf->ecf", aq.q, wq.q)
+    zp_dp = (aq.zero / aq.scale) * jnp.sum(wq.q, axis=1, keepdims=True)
+    # code gain for one macro row-tile of the expert's fan-in
+    from repro.core.cim_layers import _code_gain
+    g0 = _code_gain(cim, w.shape[1])
+    if abn is not None:
+        gamma = jnp.clip(2.0 ** abn[0], 2.0 ** -4, cim.max_gamma)[:, None, :]
+        beta = abn[1][:, None, :]
+    else:
+        gamma, beta = jnp.float32(16.0), jnp.float32(0.0)
+    code = adc_quantize(dp + zp_dp, r_out=cim.r_out, gain=gamma * g0,
+                        beta_codes=beta)
+    mid = 2.0 ** (cim.r_out - 1)
+    dp_hat = (code - mid - beta) / (gamma * g0)
+    return (dp_hat * aq.scale * wq.scale).astype(x_g.dtype)
+
+
+def _moe_local(x: jnp.ndarray, probs: jnp.ndarray, top_idx: jnp.ndarray,
+               w_gate: jnp.ndarray, w_up: jnp.ndarray, w_down: jnp.ndarray,
+               abn_lg: jnp.ndarray, abn_b: jnp.ndarray, *,
+               n_experts: int, top_k: int, capacity_factor: float,
+               cim: CIMConfig, act: str, psum_axis: Optional[str]
+               ) -> jnp.ndarray:
+    """Local (per data shard) dropped-token expert execution.
+
+    x (t, D); probs/top_idx (t, k).  Returns (t, D)."""
+    t, d = x.shape
+    cap = int(capacity_factor * top_k * t / n_experts + 0.5)
+    cap = max(8, min(cap, t * top_k))
+
+    flat_e = top_idx.reshape(-1)                       # (t*k,)
+    flat_tok = jnp.repeat(jnp.arange(t), top_k)
+    flat_p = probs.reshape(-1)
+    order = jnp.argsort(flat_e)                        # stable
+    e_sorted = flat_e[order]
+    # rank within the expert group
+    same = jax.nn.one_hot(e_sorted, n_experts, dtype=jnp.int32)
+    rank = (jnp.cumsum(same, axis=0) - 1)[jnp.arange(t * top_k), e_sorted]
+    keep = rank < cap
+    slot = e_sorted * cap + rank                       # (t*k,) flat slot id
+    slot = jnp.where(keep, slot, n_experts * cap)      # overflow bin
+
+    # scatter token ids / gates into the capacity grid
+    tok_grid = jnp.zeros((n_experts * cap + 1,), jnp.int32).at[slot].set(
+        flat_tok[order], mode="drop")
+    gate_grid = jnp.zeros((n_experts * cap + 1,), flat_p.dtype).at[slot].set(
+        jnp.where(keep, flat_p[order], 0.0), mode="drop")
+    tok_grid = tok_grid[:-1].reshape(n_experts, cap)
+    gate_grid = gate_grid[:-1].reshape(n_experts, cap)
+
+    x_g = x[tok_grid]                                  # (E, C, D)
+    h_up = _expert_gemm(x_g, w_up, cim)
+    fn = {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+          "relu2": lambda v: jnp.square(jax.nn.relu(v))}[act]
+    if w_gate is not None:
+        h = fn(_expert_gemm(x_g, w_gate, cim)) * h_up
+    else:
+        h = fn(h_up)
+    y_g = _expert_gemm(h, w_down, cim, abn=(abn_lg, abn_b))  # (E, C, D)
+    y_g = y_g * gate_grid[..., None].astype(y_g.dtype)
+
+    out = jnp.zeros((t, d), y_g.dtype).at[tok_grid.reshape(-1)].add(
+        y_g.reshape(-1, d))
+    if psum_axis is not None:
+        out = jax.lax.psum(out, psum_axis)
+    return out
+
+
+def moe_block(params: Dict, x: jnp.ndarray, *, n_experts: int, top_k: int,
+              capacity_factor: float, cim: CIMConfig, act: str = "silu"
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B, S, D) -> (out (B, S, D), aux load-balance loss scalar)."""
+    b, s, d = x.shape
+    xf = x.reshape(b * s, d)
+
+    logits = (xf.astype(jnp.float32) @ params["router"])
+    probs_full = jax.nn.softmax(logits, axis=-1)
+    top_p, top_idx = jax.lax.top_k(probs_full, top_k)
+    top_p = (top_p / jnp.sum(top_p, -1, keepdims=True)).astype(x.dtype)
+
+    # Switch-style load-balance aux loss (computed globally, cheap)
+    me = jnp.mean(probs_full, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(top_idx[:, 0], n_experts), axis=0)
+    aux = n_experts * jnp.sum(me * ce)
+
+    mesh = jax.sharding.get_abstract_mesh()
+    kwargs = dict(n_experts=n_experts, top_k=top_k,
+                  capacity_factor=capacity_factor, cim=cim, act=act)
+    w_gate = _get_expert_w(params, "w_gate", x.dtype)
+    w_up = _get_expert_w(params, "w_up", x.dtype)
+    w_down = _get_expert_w(params, "w_down", x.dtype)
+    if mesh.empty:
+        out = _moe_local(xf, top_p, top_idx, w_gate, w_up,
+                         w_down, params["abn_log_gamma"],
+                         params["abn_beta"], psum_axis=None, **kwargs)
+    else:
+        names = set(mesh.axis_names)
+        batch_axes = tuple(a for a in BATCH if a in names)
+        n_batch = 1
+        for a in batch_axes:
+            n_batch *= mesh.shape[a]
+        if (b * s) % max(n_batch, 1) != 0:     # e.g. single-token decode
+            batch_axes = ()
+        tp = TP if TP in names else None
+        body = functools.partial(_moe_local, psum_axis=tp, **kwargs)
+        tok_spec = P(batch_axes if batch_axes else None, None)
+        out = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(tok_spec, tok_spec, tok_spec,
+                      P(None, None, tp), P(None, None, tp), P(None, tp, None),
+                      P(None, None), P(None, None)),
+            out_specs=tok_spec,
+        )(xf, top_p, top_idx, w_gate, w_up,
+          w_down, params["abn_log_gamma"], params["abn_beta"])
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,105 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The Real-Gated Linear Recurrent Unit:
+    r_t = sigmoid(W_a x_t + b_a)            (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)            (input gate)
+    log a_t = -c * softplus(Lambda) * r_t   (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training evaluates the linear recurrence with jax.lax.associative_scan
+(log-depth, scan-free HLO); decode is the O(1) update.  The block follows
+Griffin: (GeLU branch) * (conv1d -> RG-LRU branch), then output projection.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cim_layers import CIMConfig, cim_linear_apply, init_cim_linear
+from repro.models.sharding import BATCH, TP, shard
+
+_C = 8.0
+
+
+def init_rglru_block(key: jax.Array, d_model: int, width: int,
+                     conv_width: int = 4,
+                     cim: Optional[CIMConfig] = None) -> Dict:
+    ks = jax.random.split(key, 6)
+    s = (1.0 / d_model) ** 0.5
+    sw = (1.0 / width) ** 0.5
+    return {
+        "w_gelu": init_cim_linear(ks[0], d_model, width, cfg=cim),
+        "w_rnn": init_cim_linear(ks[1], d_model, width, cfg=cim),
+        "conv_w": 0.1 * jax.random.normal(ks[2], (conv_width, width)),
+        "conv_b": jnp.zeros((width,)),
+        "w_a": sw * jax.random.normal(ks[3], (width, width)),
+        "b_a": jnp.zeros((width,)),
+        "w_x": sw * jax.random.normal(ks[4], (width, width)),
+        "b_x": jnp.zeros((width,)),
+        # Lambda init so that a ~ U[0.9, 0.999] at r=1 (Griffin appendix)
+        "lam": jnp.log(jnp.expm1(-jnp.log(
+            jnp.linspace(0.9, 0.999, width)) / _C)),
+        "w_out": init_cim_linear(ks[5], width, d_model, cfg=cim),
+    }
+
+
+def rglru_scan(a: jnp.ndarray, b: jnp.ndarray,
+               h0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """h_t = a_t * h_{t-1} + b_t along axis 1 via associative scan."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def op(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(op, (a, b), axis=1)
+    return h
+
+
+def rglru_block(params: Dict, x: jnp.ndarray, cim: CIMConfig, *,
+                state: Optional[Dict] = None
+                ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """x (B, L, D) -> (out (B, L, D), new_state).  state = {"h": (B,W),
+    "conv": (B, W_conv-1, W)} for decode."""
+    gelu_branch = jax.nn.gelu(cim_linear_apply(params["w_gelu"], x, cim))
+    gelu_branch = shard(gelu_branch, BATCH, None, TP)
+    u = cim_linear_apply(params["w_rnn"], x, cim)
+    u = shard(u, BATCH, None, TP)
+
+    width = params["conv_w"].shape[0]
+    if state is None:
+        up = jnp.pad(u, ((0, 0), (width - 1, 0), (0, 0)))
+        new_conv = None
+    else:
+        up = jnp.concatenate([state["conv"].astype(u.dtype), u], axis=1)
+        new_conv = up[:, -(width - 1):, :]
+    uc = sum(up[:, i:i + u.shape[1], :] * params["conv_w"][i]
+             for i in range(width))
+    uc = uc + params["conv_b"]
+
+    ucf = uc.astype(jnp.float32)
+    r = jax.nn.sigmoid(ucf @ params["w_a"] + params["b_a"])
+    i = jax.nn.sigmoid(ucf @ params["w_x"] + params["b_x"])
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * ucf)
+
+    if state is None:
+        h = rglru_scan(a, b)
+        new_state = None
+    else:
+        h = a * state["h"][:, None, :] + b          # L == 1 decode step
+        new_state = {"h": h[:, -1, :], "conv": new_conv}
+
+    y = gelu_branch.astype(jnp.float32) * h
+    out = cim_linear_apply(params["w_out"], y.astype(x.dtype), cim)
+    return shard(out, BATCH, None, None), new_state
+
+
+def init_rglru_state(batch: int, width: int, conv_width: int = 4) -> Dict:
+    return {"h": jnp.zeros((batch, width), jnp.float32),
+            "conv": jnp.zeros((batch, conv_width - 1, width), jnp.bfloat16)}

@@ -1,0 +1,470 @@
+"""Model assembly for all assigned architectures.
+
+One config-driven implementation covering:
+  dense   : pre-norm decoder (GQA + gated MLP)      [minitron/qwen2/olmo/granite]
+  moe     : dense attention + top-k expert FFN      [phi3.5-moe/mixtral]
+  hybrid  : Griffin blocks (2x RG-LRU : 1x local attn)  [recurrentgemma]
+  ssm     : Mamba-2 SSD stack                        [mamba2]
+  vlm     : dense decoder + precomputed patch-embed prefix  [internvl2]
+  audio   : Whisper enc-dec, conv frontend stubbed   [whisper]
+
+Layer stacks are scanned (jax.lax.scan over stacked params) with optional
+remat, so HLO size is depth-independent — required for the 80-layer dry-runs.
+All projections run through the CIM layer (core/cim_layers.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.cim_layers import CIMConfig, cim_linear_apply, init_cim_linear
+from repro.models import common as cm
+from repro.models import mamba2 as m2
+from repro.models import rglru as rg
+from repro.models.moe import init_moe, moe_block
+from repro.models.sharding import BATCH, TP, axis_size, shard
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _attn_cfg(cfg: ModelConfig, *, window: int = 0, causal: bool = True,
+              use_rope: bool = True, n_heads: int = 0, n_kv: int = 0
+              ) -> cm.AttnConfig:
+    return cm.AttnConfig(
+        d_model=cfg.d_model, n_heads=n_heads or cfg.n_heads,
+        n_kv_heads=n_kv or cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
+        qkv_bias=cfg.qkv_bias, window=window, causal=causal,
+        rope_theta=cfg.rope_theta, use_rope=use_rope, impl=cfg.attn_impl)
+
+
+# ---------------------------------------------------------------------------
+# layer init (one layer; stacked via vmap over keys)
+# ---------------------------------------------------------------------------
+
+def _init_decoder_layer(cfg: ModelConfig, key: jax.Array) -> Dict:
+    ks = jax.random.split(key, 4)
+    cim = cfg.cim
+    p: Dict[str, Any] = {
+        "ln1": cm.init_norm(cfg.d_model, cfg.norm_type),
+        "ln2": cm.init_norm(cfg.d_model, cfg.norm_type),
+        "attn": cm.init_attention(
+            ks[0], _attn_cfg(cfg, window=cfg.sliding_window), cim),
+    }
+    if cfg.family == "moe":
+        p["moe"] = init_moe(ks[1], cfg.d_model, cfg.d_ff, cfg.moe_experts, cim)
+    else:
+        p["mlp"] = cm.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.gated_mlp, cim)
+    return p
+
+
+def _init_ssm_layer(cfg: ModelConfig, key: jax.Array) -> Dict:
+    return {
+        "ln1": cm.init_norm(cfg.d_model, cfg.norm_type),
+        "mixer": m2.init_mamba2_layer(
+            key, cfg.d_model, expand=cfg.ssm_expand, headdim=cfg.ssm_headdim,
+            d_state=cfg.ssm_state, conv_width=cfg.conv_width, cim=cfg.cim),
+    }
+
+
+def _init_rec_layer(cfg: ModelConfig, key: jax.Array) -> Dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": cm.init_norm(cfg.d_model, cfg.norm_type),
+        "ln2": cm.init_norm(cfg.d_model, cfg.norm_type),
+        "rec": rg.init_rglru_block(ks[0], cfg.d_model,
+                                   cfg.lru_width or cfg.d_model,
+                                   cfg.conv_width, cfg.cim),
+        "mlp": cm.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.gated_mlp, cfg.cim),
+    }
+
+
+def _init_local_attn_layer(cfg: ModelConfig, key: jax.Array) -> Dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": cm.init_norm(cfg.d_model, cfg.norm_type),
+        "ln2": cm.init_norm(cfg.d_model, cfg.norm_type),
+        "attn": cm.init_attention(
+            ks[0], _attn_cfg(cfg, window=cfg.local_window), cfg.cim),
+        "mlp": cm.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.gated_mlp, cfg.cim),
+    }
+
+
+def _init_enc_layer(cfg: ModelConfig, key: jax.Array) -> Dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": cm.init_norm(cfg.d_model, cfg.norm_type),
+        "ln2": cm.init_norm(cfg.d_model, cfg.norm_type),
+        "attn": cm.init_attention(
+            ks[0], _attn_cfg(cfg, causal=False, use_rope=False), cfg.cim),
+        "mlp": cm.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.gated_mlp, cfg.cim),
+    }
+
+
+def _init_xdec_layer(cfg: ModelConfig, key: jax.Array) -> Dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": cm.init_norm(cfg.d_model, cfg.norm_type),
+        "ln_x": cm.init_norm(cfg.d_model, cfg.norm_type),
+        "ln2": cm.init_norm(cfg.d_model, cfg.norm_type),
+        "attn": cm.init_attention(
+            ks[0], _attn_cfg(cfg, use_rope=False), cfg.cim),
+        "xattn": cm.init_attention(
+            ks[1], _attn_cfg(cfg, causal=False, use_rope=False), cfg.cim),
+        "mlp": cm.init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.gated_mlp, cfg.cim),
+    }
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict:
+    keys = jax.random.split(key, 8)
+    d = cfg.d_model
+    emb_scale = d ** -0.5
+    params: Dict[str, Any] = {
+        "embed": emb_scale * jax.random.normal(
+            keys[0], (cfg.vocab_size, d), jnp.float32),
+        "final_norm": cm.init_norm(d, cfg.norm_type),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_cim_linear(keys[1], d, cfg.vocab_size)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        lk = jax.random.split(keys[2], cfg.n_layers)
+        params["layers"] = jax.vmap(
+            functools.partial(_init_decoder_layer, cfg))(lk)
+    elif cfg.family == "ssm":
+        lk = jax.random.split(keys[2], cfg.n_layers)
+        params["layers"] = jax.vmap(
+            functools.partial(_init_ssm_layer, cfg))(lk)
+    elif cfg.family == "hybrid":
+        nb, tail = divmod(cfg.n_layers, 3)
+        bk = jax.random.split(keys[2], nb)
+
+        def init_block(k):
+            k1, k2, k3 = jax.random.split(k, 3)
+            return {"rec1": _init_rec_layer(cfg, k1),
+                    "rec2": _init_rec_layer(cfg, k2),
+                    "attn": _init_local_attn_layer(cfg, k3)}
+
+        params["blocks"] = jax.vmap(init_block)(bk)
+        if tail:
+            tk = jax.random.split(keys[3], tail)
+            params["tail"] = jax.vmap(
+                functools.partial(_init_rec_layer, cfg))(tk)
+    elif cfg.family == "audio":
+        ek = jax.random.split(keys[2], cfg.encoder_layers)
+        dk = jax.random.split(keys[3], cfg.n_layers)
+        params["enc_layers"] = jax.vmap(
+            functools.partial(_init_enc_layer, cfg))(ek)
+        params["layers"] = jax.vmap(
+            functools.partial(_init_xdec_layer, cfg))(dk)
+        params["enc_norm"] = cm.init_norm(d, cfg.norm_type)
+        params["pos_dec"] = 0.01 * jax.random.normal(
+            keys[4], (cfg.max_target_len, d), jnp.float32)
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# layer application
+# ---------------------------------------------------------------------------
+
+def _decoder_layer(cfg: ModelConfig, p: Dict, x: jnp.ndarray, *,
+                   positions: jnp.ndarray, cache: Optional[Dict]
+                   ) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
+    cim = cfg.cim
+    h = cm.apply_norm(p["ln1"], x, cfg.norm_type)
+    attn_out, new_kv = cm.attention_block(
+        p["attn"], h, _attn_cfg(cfg, window=cfg.sliding_window), cim,
+        positions=positions, cache=None if cache is None else cache["kv"])
+    x = x + attn_out
+    h = cm.apply_norm(p["ln2"], x, cfg.norm_type)
+    if cfg.family == "moe":
+        ffn_out, aux = moe_block(
+            p["moe"], h, n_experts=cfg.moe_experts, top_k=cfg.moe_top_k,
+            capacity_factor=cfg.moe_capacity_factor, cim=cim, act=cfg.mlp_act)
+    else:
+        ffn_out, aux = cm.mlp_block(p["mlp"], h, cim, cfg.mlp_act), 0.0
+    x = x + ffn_out
+    new_cache = None if cache is None else {"kv": new_kv}
+    return x, new_cache, jnp.asarray(aux, jnp.float32)
+
+
+def _ssm_layer(cfg: ModelConfig, p: Dict, x, *, positions, cache):
+    h = cm.apply_norm(p["ln1"], x, cfg.norm_type)
+    out, new_state = m2.mamba2_layer(
+        p["mixer"], h, cfg, cfg.cim,
+        state=None if cache is None else cache["ssm"])
+    new_cache = None if cache is None else {"ssm": new_state}
+    return x + out, new_cache, jnp.float32(0.0)
+
+
+def _rec_layer(cfg: ModelConfig, p: Dict, x, *, cache):
+    h = cm.apply_norm(p["ln1"], x, cfg.norm_type)
+    out, new_state = rg.rglru_block(
+        p["rec"], h, cfg.cim, state=None if cache is None else cache["rec"])
+    x = x + out
+    h = cm.apply_norm(p["ln2"], x, cfg.norm_type)
+    x = x + cm.mlp_block(p["mlp"], h, cfg.cim, cfg.mlp_act)
+    return x, (None if cache is None else {"rec": new_state})
+
+
+def _local_attn_layer(cfg: ModelConfig, p: Dict, x, *, positions, cache):
+    h = cm.apply_norm(p["ln1"], x, cfg.norm_type)
+    out, new_kv = cm.attention_block(
+        p["attn"], h, _attn_cfg(cfg, window=cfg.local_window), cfg.cim,
+        positions=positions, cache=None if cache is None else cache["kv"])
+    x = x + out
+    h = cm.apply_norm(p["ln2"], x, cfg.norm_type)
+    x = x + cm.mlp_block(p["mlp"], h, cfg.cim, cfg.mlp_act)
+    return x, (None if cache is None else {"kv": new_kv})
+
+
+# ---------------------------------------------------------------------------
+# stacks
+# ---------------------------------------------------------------------------
+
+def _scan_stack(layer_fn, stacked_params, x, cache, remat: bool,
+                policy: str = "full"):
+    """lax.scan over stacked layer params (+ optionally stacked cache)."""
+    if remat and policy == "dots":
+        fn = jax.checkpoint(
+            layer_fn,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    elif remat:
+        fn = jax.checkpoint(layer_fn)
+    else:
+        fn = layer_fn
+
+    def body(carry, xs):
+        x, aux = carry
+        p, c = xs
+        new_x, new_c, a = fn(p, x, c)
+        return (new_x.astype(x.dtype), aux + a), new_c
+
+    (x, aux), new_cache = jax.lax.scan(
+        body, (x, jnp.float32(0.0)), (stacked_params, cache))
+    return x, new_cache, aux
+
+
+def _decoder_stack(cfg: ModelConfig, params, x, positions, cache):
+    layer = {"dense": _decoder_layer, "moe": _decoder_layer,
+             "vlm": _decoder_layer, "ssm": _ssm_layer}[cfg.family]
+
+    def f(p, x, c):
+        return layer(cfg, p, x, positions=positions, cache=c)
+
+    return _scan_stack(f, params["layers"], x, cache, cfg.remat,
+                       cfg.remat_policy)
+
+
+def _hybrid_stack(cfg: ModelConfig, params, x, positions, cache):
+    def block_fn(p, x, c):
+        c1 = None if c is None else c["rec1"]
+        c2 = None if c is None else c["rec2"]
+        c3 = None if c is None else c["attn"]
+        x, nc1 = _rec_layer(cfg, p["rec1"], x, cache=c1)
+        x, nc2 = _rec_layer(cfg, p["rec2"], x, cache=c2)
+        x, nc3 = _local_attn_layer(cfg, p["attn"], x,
+                                   positions=positions, cache=c3)
+        nc = None if c is None else {"rec1": nc1, "rec2": nc2, "attn": nc3}
+        return x, nc, jnp.float32(0.0)
+
+    bc = None if cache is None else cache["blocks"]
+    x, new_bc, aux = _scan_stack(block_fn, params["blocks"], x, bc, cfg.remat)
+
+    new_tail = None
+    if "tail" in params:
+        def tail_fn(p, x, c):
+            x, nc = _rec_layer(cfg, p, x, cache=c)
+            return x, nc, jnp.float32(0.0)
+        tc = None if cache is None else cache["tail"]
+        x, new_tail, _ = _scan_stack(tail_fn, params["tail"], x, tc, cfg.remat)
+
+    new_cache = None if cache is None else {"blocks": new_bc, "tail": new_tail}
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# public forward passes
+# ---------------------------------------------------------------------------
+
+def embed_tokens(cfg: ModelConfig, params, tokens: jnp.ndarray) -> jnp.ndarray:
+    emb = shard(params["embed"], TP, None)
+    x = emb[tokens].astype(_dtype(cfg))
+    return shard(x, BATCH, None, None)
+
+
+def lm_logits(cfg: ModelConfig, params, x: jnp.ndarray) -> jnp.ndarray:
+    x = cm.apply_norm(params["final_norm"], x, cfg.norm_type)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T.astype(x.dtype)
+    elif "w" in params["lm_head"]:
+        # lm_head stays in bypass mode (DESIGN.md: quality-critical layer)
+        logits = x @ params["lm_head"]["w"].astype(x.dtype)
+    else:   # deploy-quantized serving weights
+        head = params["lm_head"]
+        logits = x @ (head["w_q"].astype(x.dtype)
+                      * head["w_scale"].astype(x.dtype))
+    return shard(logits, BATCH, None, TP)
+
+
+def forward(cfg: ModelConfig, params, tokens: jnp.ndarray, *,
+            positions: Optional[jnp.ndarray] = None,
+            cache: Optional[Dict] = None,
+            prefix_embeds: Optional[jnp.ndarray] = None,
+            encoder_frames: Optional[jnp.ndarray] = None
+            ) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
+    """Returns (logits, new_cache, aux_loss).
+
+    tokens (B, S); positions default arange (no cache) / cache index offset.
+    vlm: prefix_embeds (B, P, D) prepended.  audio: encoder_frames (B,T,D)
+    run through the encoder (train/prefill) — for cached decode the cross
+    KV lives in the cache instead.
+    """
+    b, s = tokens.shape
+    x = embed_tokens(cfg, params, tokens)
+
+    if cfg.family == "vlm" and prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+        s = x.shape[1]
+
+    inner_cache = None if cache is None else cache["layers"]
+    if positions is None:
+        if cache is not None:
+            positions = cache["pos"] + jnp.arange(s)
+        else:
+            positions = jnp.arange(s)
+
+    if cfg.family == "audio":
+        logits, new_inner, aux = _audio_forward(
+            cfg, params, x, positions, inner_cache, encoder_frames)
+    elif cfg.family == "hybrid":
+        x, new_inner, aux = _hybrid_stack(cfg, params, x, positions,
+                                          inner_cache)
+        logits = lm_logits(cfg, params, x)
+    else:
+        x, new_inner, aux = _decoder_stack(cfg, params, x, positions,
+                                           inner_cache)
+        logits = lm_logits(cfg, params, x)
+    new_cache = (None if cache is None
+                 else {"pos": cache["pos"] + s, "layers": new_inner})
+    return logits, new_cache, aux
+
+
+def _audio_forward(cfg, params, x, positions, cache, encoder_frames):
+    """Whisper backbone.  Modes:
+       * train / prefill : encoder_frames given — run the encoder, compute
+         fresh cross K/V (stored into the cache if one is passed);
+       * cached decode   : encoder_frames None — use cache[...]["xkv"]."""
+    pos_emb = params["pos_dec"]
+    pos = jnp.clip(positions, 0, cfg.max_target_len - 1)
+    x = x + pos_emb[pos].astype(x.dtype)
+
+    enc = None
+    if encoder_frames is not None:
+        enc = encoder_frames.astype(x.dtype)
+        enc = enc + _sinusoid(enc.shape[1], cfg.d_model).astype(x.dtype)
+        enc_pos = jnp.arange(enc.shape[1])
+
+        def enc_fn(p, h, c):
+            hh = cm.apply_norm(p["ln1"], h, cfg.norm_type)
+            out, _ = cm.attention_block(
+                p["attn"], hh, _attn_cfg(cfg, causal=False, use_rope=False),
+                cfg.cim, positions=enc_pos)
+            h = h + out
+            hh = cm.apply_norm(p["ln2"], h, cfg.norm_type)
+            h = h + cm.mlp_block(p["mlp"], hh, cfg.cim, cfg.mlp_act)
+            return h, None, jnp.float32(0.0)
+
+        enc, _, _ = _scan_stack(enc_fn, params["enc_layers"], enc, None,
+                                cfg.remat)
+        enc = cm.apply_norm(params["enc_norm"], enc, cfg.norm_type)
+
+    def dec_fn(p, h, c):
+        hh = cm.apply_norm(p["ln1"], h, cfg.norm_type)
+        out, nkv = cm.attention_block(
+            p["attn"], hh, _attn_cfg(cfg, use_rope=False), cfg.cim,
+            positions=positions, cache=None if c is None else c["kv"])
+        h = h + out
+        hh = cm.apply_norm(p["ln_x"], h, cfg.norm_type)
+        xkv_in = None if (c is None or enc is not None) else c["xkv"]
+        out, nxkv = cm.attention_block(
+            p["xattn"], hh, _attn_cfg(cfg, causal=False, use_rope=False),
+            cfg.cim, positions=positions, x_kv=enc,
+            cross_kv=xkv_in, cache={} if c is not None else None)
+        h = h + out
+        hh = cm.apply_norm(p["ln2"], h, cfg.norm_type)
+        h = h + cm.mlp_block(p["mlp"], hh, cfg.cim, cfg.mlp_act)
+        nc = None if c is None else {"kv": nkv, "xkv": nxkv}
+        return h, nc, jnp.float32(0.0)
+
+    x, new_dec, _ = _scan_stack(dec_fn, params["layers"], x, cache,
+                                cfg.remat)
+    return lm_logits(cfg, params, x), new_dec, jnp.float32(0.0)
+
+
+def _sinusoid(length: int, channels: int) -> jnp.ndarray:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(channels // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-dim * (9.21 / (channels // 2 - 1)))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def _kv_cache_len(cfg: ModelConfig, max_len: int, window: int) -> int:
+    if window > 0:
+        return min(max_len, window)
+    return max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Dict:
+    """Decode cache pytree: {"pos": scalar, "layers": stacked per-layer}."""
+    hd = cfg.resolved_head_dim if cfg.n_heads else 0
+    g = cfg.n_kv_heads
+
+    def stack(tree, n):
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n,) + a.shape), tree)
+
+    def kv(n, length):
+        return stack(cm.init_kv_cache(batch, length, g, hd, dtype), n)
+
+    pos = jnp.array(0, jnp.int32)
+    if cfg.family in ("dense", "moe", "vlm"):
+        length = _kv_cache_len(cfg, max_len, cfg.sliding_window)
+        return {"pos": pos, "layers": {"kv": kv(cfg.n_layers, length)}}
+    if cfg.family == "ssm":
+        st = m2.init_mamba2_state(batch, cfg.d_model, cfg)
+        return {"pos": pos,
+                "layers": {"ssm": stack(st, cfg.n_layers)}}
+    if cfg.family == "hybrid":
+        nb, tail = divmod(cfg.n_layers, 3)
+        width = cfg.lru_width or cfg.d_model
+        rec = rg.init_rglru_state(batch, width, cfg.conv_width)
+        blocks = {"rec1": {"rec": stack(rec, nb)},
+                  "rec2": {"rec": stack(rec, nb)},
+                  "attn": {"kv": kv(nb, _kv_cache_len(cfg, max_len,
+                                                      cfg.local_window))}}
+        layers = {"blocks": blocks, "tail": None}
+        if tail:
+            layers["tail"] = {"rec": stack(rec, tail)}
+        return {"pos": pos, "layers": layers}
+    if cfg.family == "audio":
+        xkv = stack({"k": jnp.zeros((batch, max_len, g, hd), dtype),
+                     "v": jnp.zeros((batch, max_len, g, hd), dtype)},
+                    cfg.n_layers)
+        dec = {"kv": kv(cfg.n_layers, cfg.max_target_len), "xkv": xkv}
+        return {"pos": pos, "layers": dec}
+    raise ValueError(cfg.family)

@@ -1,0 +1,70 @@
+"""AdamW (+ global-norm clipping) as pure pytree transforms — no optax here.
+
+State pytree mirrors params: {"m": ..., "v": ..., "step": scalar}.
+Supports a per-leaf mask (e.g. no weight decay on norms / ABN params).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def adamw_init(params) -> dict:
+    zeros = lambda p: jnp.zeros_like(p)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig,
+                 lr_scale: jnp.ndarray | float = 1.0,
+                 decay_mask: Optional[Any] = None) -> Tuple[Any, dict, dict]:
+    """Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                         state["m"], grads)
+    new_v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                         state["v"], grads)
+
+    if decay_mask is None:
+        decay_mask = jax.tree.map(lambda p: p.ndim >= 2, params)
+
+    def upd(p, m, v, wd):
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        if wd:
+            u = u + cfg.weight_decay * p
+        return p - lr * u
+
+    new_params = jax.tree.map(upd, params, new_m, new_v, decay_mask)
+    return new_params, {"m": new_m, "v": new_v, "step": step}, \
+        {"grad_norm": gnorm, "lr": jnp.asarray(lr)}

@@ -1,0 +1,2 @@
+from repro.perfmodel.macro_perf import (AcceleratorPerfModel, CyclePerf,  # noqa
+                                        EnergyModel)

@@ -1,0 +1,119 @@
+"""CIM layer behaviour: fidelity scaling, adaptive swing, modes, mapping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cim_layers as cl
+from repro.core.hw import DEFAULT_MACRO
+from repro.core.mapping import LayerSpec, conv_layer_spec, map_layer, split_k_slices
+from repro.core.noise_model import NoiseConfig
+
+
+def _rel_err(cfg, K=512, N=32, seed=0):
+    p = cl.init_cim_linear(jax.random.PRNGKey(seed), K, N, cfg=cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (64, K))
+    y = cl.cim_linear_apply(p, x, cfg)
+    y_ref = x @ p["w"]
+    return float(jnp.linalg.norm(y - y_ref) / jnp.linalg.norm(y_ref))
+
+
+def test_bypass_exact():
+    assert _rel_err(cl.CIMConfig(mode="bypass")) < 1e-6
+
+
+def test_fakequant_distribution_aware_beats_unity_gamma():
+    """The paper's central claim, in layer form."""
+    cfg = cl.CIMConfig(mode="fakequant", max_gamma=2.0**16)
+    p = cl.init_cim_linear(jax.random.PRNGKey(0), 512, 32, cfg=cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 512))
+    y_ref = x @ p["w"]
+    err_da = float(jnp.linalg.norm(cl.cim_linear_apply(p, x, cfg) - y_ref))
+    p_unity = {**p, "abn_log_gamma": jnp.zeros_like(p["abn_log_gamma"])}
+    err_unity = float(jnp.linalg.norm(cl.cim_linear_apply(p_unity, x, cfg)
+                                      - y_ref))
+    assert err_da < 0.15 * err_unity
+
+
+def test_adaptive_swing_beats_fixed():
+    """Serial-split swing adaptation recovers precision at small fan-in."""
+    K = 72   # two units out of 32
+    adaptive = cl.CIMConfig(mode="fakequant", adaptive_swing=True)
+    fixed = cl.CIMConfig(mode="fakequant", adaptive_swing=False)
+    # same gamma for both: isolate the swing effect
+    p = cl.init_cim_linear(jax.random.PRNGKey(2), K, 16, cfg=adaptive)
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(3), (128, K)))
+    y_ref = x @ p["w"]
+    e_ad = float(jnp.linalg.norm(cl.cim_linear_apply(p, x, adaptive) - y_ref))
+    e_fx = float(jnp.linalg.norm(cl.cim_linear_apply(p, x, fixed) - y_ref))
+    assert e_ad < e_fx
+
+
+def test_higher_rout_more_accurate():
+    errs = [_rel_err(cl.CIMConfig(mode="fakequant", r_out=r,
+                                  max_gamma=2.0**16)) for r in (2, 4, 8)]
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_sim_matches_fakequant_statistics():
+    """Voltage sim and fakequant paths agree closely (same math modulo
+    float rounding at code boundaries)."""
+    cfg_f = cl.CIMConfig(mode="fakequant")
+    cfg_s = cl.CIMConfig(mode="sim")
+    p = cl.init_cim_linear(jax.random.PRNGKey(4), 144, 8, cfg=cfg_f)
+    x = jax.random.normal(jax.random.PRNGKey(5), (16, 144))
+    yf = cl.cim_linear_apply(p, x, cfg_f)
+    ys = cl.cim_linear_apply(p, x, cfg_s)
+    assert float(jnp.linalg.norm(yf - ys) / jnp.linalg.norm(yf)) < 0.1
+
+
+def test_noise_injection_changes_output():
+    cfg = cl.CIMConfig(mode="fakequant", noise=NoiseConfig())
+    p = cl.init_cim_linear(jax.random.PRNGKey(6), 256, 16, cfg=cfg)
+    x = jax.random.normal(jax.random.PRNGKey(7), (8, 256))
+    y1 = cl.cim_linear_apply(p, x, cfg, key=jax.random.PRNGKey(1))
+    y2 = cl.cim_linear_apply(p, x, cfg, key=jax.random.PRNGKey(2))
+    assert float(jnp.max(jnp.abs(y1 - y2))) > 0
+
+
+def test_conv_via_im2col():
+    cfg = cl.CIMConfig(mode="bypass")
+    key = jax.random.PRNGKey(8)
+    p = cl.init_cim_linear(key, 3 * 3 * 4, 8)
+    x = jax.random.normal(key, (2, 10, 10, 4))
+    y = cl.cim_conv2d_apply(p, x, cfg)
+    assert y.shape == (2, 10, 10, 8)
+    # against lax.conv direct
+    w = p["w"].reshape(3, 3, 4, 8)
+    want = jax.lax.conv_general_dilated(
+        x, w, (1, 1), [(1, 1), (1, 1)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---- mapping properties ----------------------------------------------------
+
+@given(st.integers(1, 40000), st.integers(1, 4096), st.integers(1, 4),
+       st.integers(1, 8))
+@settings(max_examples=60, deadline=None)
+def test_mapping_invariants(k, n, r_w, r_in):
+    spec = LayerSpec(m=1, k=k, n=n, r_in=r_in, r_w=r_w)
+    mp = map_layer(spec)
+    assert 1 <= mp.rows_per_tile <= DEFAULT_MACRO.n_rows
+    assert mp.rows_per_tile * mp.row_tiles >= k
+    assert mp.n_dp >= mp.rows_per_tile
+    assert 0 < mp.utilization <= 1.0
+    ch_per_tile = 64 * max(1, 4 // r_w)
+    assert mp.col_tiles * ch_per_tile >= n
+    # split_k covers exactly
+    slices = split_k_slices(k, mp.row_tiles)
+    assert sum(sz for _, sz in slices) == k
+    assert all(sz <= DEFAULT_MACRO.n_rows for _, sz in slices)
+
+
+def test_conv_layer_spec():
+    spec = conv_layer_spec(batch=4, h=28, w=28, c_in=16, c_out=32)
+    assert spec.k == 9 * 16
+    assert spec.m == 4 * 28 * 28

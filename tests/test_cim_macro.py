@@ -1,0 +1,88 @@
+"""Voltage-domain behavioural macro vs the exact digital reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cim_macro as cm
+from repro.core import digital_ref as dr
+from repro.core.hw import DEFAULT_MACRO
+from repro.core.noise_model import NO_NOISE, NoiseConfig
+from repro.core import noise_model as nm
+from repro.core.calibration import calibrate_sar, residual_offsets
+
+
+@pytest.mark.parametrize("r_in,r_w,r_out,k,gamma", [
+    (8, 4, 8, 144, 1.0), (8, 4, 8, 1152, 4.0), (4, 2, 6, 300, 2.0),
+    (1, 1, 1, 36, 1.0), (8, 1, 8, 72, 16.0), (2, 3, 5, 500, 8.0),
+])
+def test_voltage_sim_matches_digital_ref(r_in, r_w, r_out, k, gamma):
+    key = jax.random.PRNGKey(k + r_in)
+    x = jax.random.randint(key, (6, k), 0, 2**r_in).astype(jnp.int32)
+    w = dr.quantize_weight_odd(
+        jax.random.randint(jax.random.PRNGKey(1), (k, 8),
+                           -(2**r_w - 1), 2**r_w), r_w)
+    planes = dr.encode_weight_planes(w, r_w)
+    beta_codes = jnp.arange(8, dtype=jnp.float32) - 4.0
+    ref = dr.cim_matmul_ref(x, planes, r_in=r_in, r_out=r_out, gamma=gamma,
+                            beta_codes=beta_codes)
+    lsb_v = DEFAULT_MACRO.alpha_adc() * DEFAULT_MACRO.vddh / 2**(r_out - 1)
+    sim = cm.cim_macro_forward(x, planes, r_in=r_in, r_out=r_out, gamma=gamma,
+                               beta_v=beta_codes * lsb_v / gamma,
+                               noise=NO_NOISE)
+    diff = np.abs(np.asarray(ref) - np.asarray(sim))
+    assert diff.max() <= 1, f"max code diff {diff.max()}"
+
+
+def test_noise_perturbs_but_bounded():
+    key = jax.random.PRNGKey(0)
+    k = 288
+    x = jax.random.randint(key, (8, k), 0, 256).astype(jnp.int32)
+    w = dr.quantize_weight_odd(
+        jax.random.randint(jax.random.PRNGKey(1), (k, 16), -15, 16), 4)
+    planes = dr.encode_weight_planes(w, 4)
+    clean = cm.cim_macro_forward(x, planes, r_in=8, r_out=8, gamma=8.0,
+                                 noise=NO_NOISE)
+    noisy = cm.cim_macro_forward(x, planes, r_in=8, r_out=8, gamma=8.0,
+                                 noise=NoiseConfig(), key=jax.random.PRNGKey(7))
+    diff = np.abs(np.asarray(clean).astype(int) - np.asarray(noisy))
+    assert diff.max() > 0          # noise does something
+    assert np.mean(diff) < 24      # but stays within a few gamma-scaled LSBs
+
+
+def test_calibration_reduces_offset():
+    """Fig. 19: calibration brings the spatial deviation down ~10x."""
+    key = jax.random.PRNGKey(3)
+    noise = NoiseConfig()
+    raw = nm.sample_sa_offsets(key, 256, noise)
+    res = residual_offsets(raw)
+    assert float(jnp.std(res)) < 0.25 * float(jnp.std(raw))
+    # residual bounded by the calibration LSB for in-range offsets
+    in_range = jnp.abs(raw) < DEFAULT_MACRO.cal_range_v
+    assert float(jnp.max(jnp.abs(jnp.where(in_range, res, 0.0)))) \
+        <= DEFAULT_MACRO.cal_lsb_v
+    # Fig. 14c / 19: the vast majority of columns end within ~1 ADC LSB
+    lsb8 = DEFAULT_MACRO.vddh / 2**8
+    assert float(jnp.mean(jnp.abs(res) < lsb8)) > 0.85
+
+
+def test_calibration_saturates_out_of_range():
+    big = jnp.array([0.5, -0.5])   # way beyond the calibration range
+    comp = calibrate_sar(big)
+    assert float(jnp.max(jnp.abs(comp))) <= DEFAULT_MACRO.cal_range_v + 1e-9
+
+
+def test_settle_fraction_monotonic():
+    n = NoiseConfig()
+    f1 = nm.settle_fraction(1, 5.0, n)
+    f32 = nm.settle_fraction(32, 5.0, n)
+    assert 0.9 < f32 < f1 <= 1.0
+
+
+def test_swing_efficiency_improves_with_split():
+    """Fig. 6(b): serial-split restores swing at low C_in."""
+    cfg = DEFAULT_MACRO
+    # baseline keeps all 1152 rows connected -> small alpha regardless
+    swing_base = 36 * cfg.alpha_eff_baseline()
+    swing_split = 36 * cfg.alpha_eff(1)
+    assert swing_split > 5 * swing_base

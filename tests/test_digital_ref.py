@@ -1,0 +1,85 @@
+"""Unit + property tests of the exact digital-equivalent macro model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import digital_ref as dr
+from repro.core.hw import DEFAULT_MACRO
+
+
+@given(st.integers(1, 4), st.integers(0, 2**32 - 1))
+@settings(max_examples=30, deadline=None)
+def test_plane_roundtrip(r_w, seed):
+    rng = np.random.default_rng(seed)
+    full = 2**r_w - 1
+    w = rng.integers(-full, full + 1, size=(13, 7))
+    w_odd = dr.quantize_weight_odd(jnp.asarray(w), r_w)
+    planes = dr.encode_weight_planes(w_odd, r_w)
+    assert planes.shape == (r_w, 13, 7)
+    assert set(np.unique(np.asarray(planes))) <= {-1, 1}
+    back = dr.decode_weight_planes(planes)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(w_odd))
+    # odd grid: all values odd, within range
+    w_np = np.asarray(w_odd)
+    assert np.all(np.abs(w_np) <= full)
+    assert np.all(w_np % 2 != 0)
+
+
+@given(st.integers(1, 8), st.integers(1, 4), st.integers(0, 2**32 - 1))
+@settings(max_examples=20, deadline=None)
+def test_serial_equals_direct(r_in, r_w, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 2**r_in, size=(5, 24)), jnp.int32)
+    w = dr.quantize_weight_odd(
+        jnp.asarray(rng.integers(-(2**r_w), 2**r_w, size=(24, 6))), r_w)
+    planes = dr.encode_weight_planes(w, r_w)
+    d1 = dr.bitplane_dot(x, planes)
+    d2 = dr.bitplane_dot_serial(x, planes, r_in)
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+
+
+def test_adc_floor_formula():
+    dp = jnp.array([-1000, -1, 0, 1, 1000], jnp.int32)
+    code = dr.dsci_adc_code(dp, r_in=8, r_w=4, r_out=8, n_dp=1152,
+                            gamma=4.0, beta_codes=0.0)
+    g = dr.adc_gain_factor(8, 4, 8, 1152)
+    expect = np.clip(np.floor(128 + 4.0 * g * np.asarray(dp)), 0, 255)
+    np.testing.assert_array_equal(np.asarray(code), expect.astype(np.int32))
+
+
+def test_adc_clipping_range():
+    dp = jnp.array([-10**9, 10**9], jnp.int32)
+    code = dr.dsci_adc_code(dp, r_in=8, r_w=4, r_out=6, n_dp=36, gamma=32.0)
+    assert int(code[0]) == 0 and int(code[1]) == 63
+
+
+@given(st.integers(1, 8), st.integers(2, 8), st.sampled_from([1., 2., 8., 32.]))
+@settings(max_examples=20, deadline=None)
+def test_dequant_inverse_within_lsb(r_in, r_out, gamma):
+    rng = np.random.default_rng(int(gamma) + r_in + r_out)
+    n_dp = 144
+    g = dr.adc_gain_factor(r_in, 2, r_out, n_dp)
+    # dp small enough not to clip
+    half_range = (2**(r_out - 1) - 1) / (gamma * g)
+    dp = jnp.asarray(rng.integers(-half_range * 0.9, half_range * 0.9,
+                                  size=(64,)), jnp.int32)
+    code = dr.dsci_adc_code(dp, r_in=r_in, r_w=2, r_out=r_out, n_dp=n_dp,
+                            gamma=gamma)
+    dp_hat = dr.dequantize_code(code, r_in=r_in, r_w=2, r_out=r_out,
+                                n_dp=n_dp, gamma=gamma)
+    # quantization error bounded by one code step
+    assert np.max(np.abs(np.asarray(dp_hat) - np.asarray(dp))) <= \
+        1.0 / (gamma * g)
+
+
+def test_swing_adaptive_gain_grows_at_low_cin():
+    """The paper's core claim: fewer connected units -> larger code gain."""
+    g_small = dr.adc_gain_factor(8, 4, 8, 36,
+                                 DEFAULT_MACRO.swing_efficiency(1),
+                                 DEFAULT_MACRO.alpha_adc())
+    g_full = dr.adc_gain_factor(8, 4, 8, 1152,
+                                DEFAULT_MACRO.swing_efficiency(32),
+                                DEFAULT_MACRO.alpha_adc())
+    assert g_small > 10 * g_full

@@ -1,0 +1,100 @@
+"""HLO analyzer on synthetic modules + perf model anchors + integration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.mapping import LayerSpec
+from repro.launch.hlo_analysis import HLOModule, analyze
+from repro.perfmodel import AcceleratorPerfModel, EnergyModel
+from repro.perfmodel.macro_perf import cim_eval_time_ns, cycle_model
+
+
+def test_hlo_analyzer_on_real_module():
+    """Compile a tiny jitted fn and check flops counting ~ 2*M*N*K."""
+    m, k, n = 64, 128, 32
+
+    @jax.jit
+    def f(a, b):
+        return a @ b
+
+    lowered = f.lower(jax.ShapeDtypeStruct((m, k), jnp.float32),
+                      jax.ShapeDtypeStruct((k, n), jnp.float32))
+    txt = lowered.compile().as_text()
+    mod = HLOModule(txt)
+    assert abs(mod.flops() - 2 * m * n * k) / (2 * m * n * k) < 0.01
+
+
+def test_hlo_while_multiplier():
+    """scan body flops must be multiplied by trip count."""
+    k = 64
+
+    @jax.jit
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        out, _ = jax.lax.scan(body, x, None, length=10)
+        return out
+
+    lowered = f.lower(jax.ShapeDtypeStruct((k, k), jnp.float32),
+                      jax.ShapeDtypeStruct((k, k), jnp.float32))
+    mod = HLOModule(lowered.compile().as_text())
+    want = 10 * 2 * k ** 3
+    assert abs(mod.flops() - want) / want < 0.05
+
+
+def test_hlo_collectives_synthetic():
+    txt = """
+HloModule test
+
+ENTRY %main (p: f32[8,16]) -> f32[8,16] {
+  %p = f32[8,16]{1,0} parameter(0)
+  ROOT %ar = f32[8,16]{1,0} all-reduce(%p), replica_groups={}, to_apply=%add
+}
+"""
+    mod = HLOModule(txt)
+    c = mod.collective_bytes()
+    assert c["all-reduce"]["bytes"] == 8 * 16 * 4
+
+
+def test_cycle_model_regimes():
+    """Eq. 9/10: deep-input layers are input-dominated; wide-output layers
+    output-dominated."""
+    deep = cycle_model(LayerSpec(m=1, k=9 * 512, n=16, r_in=8, r_w=4,
+                                 kernel=(3, 3)))
+    wide = cycle_model(LayerSpec(m=1, k=9 * 4, n=512, r_in=1, r_w=4,
+                                 r_out=8, kernel=(3, 3)))
+    assert deep.n_in > deep.n_out
+    assert wide.n_out > wide.n_in
+
+
+def test_energy_anchors():
+    """Calibration targets from the paper (Sec. V / Table I)."""
+    em = EnergyModel()
+    s8 = LayerSpec(m=1, k=1152, n=256, r_in=8, r_w=1, r_out=8, kernel=(3, 3))
+    s1 = LayerSpec(m=1, k=1152, n=256, r_in=1, r_w=1, r_out=1, kernel=(3, 3))
+    assert abs(em.macro_tops_per_watt(s8) / 1e3 - 1.2) < 0.15     # 1.2 POPS/W
+    assert abs(em.macro_tops_per_watt(s1) / 1e3 - 8.0) < 1.0      # 8 POPS/W
+    s84 = LayerSpec(m=1, k=1152, n=64, r_in=8, r_w=4, r_out=8, kernel=(3, 3))
+    assert 120 < em.macro_tops_per_watt(s84, normalize_8b=True) < 180  # ~150
+
+
+def test_energy_split_dpl_savings():
+    """Fig. 6(c): DP energy drops when fewer units are connected."""
+    em = EnergyModel()
+    assert em.e_dp_pj(1, 8) < 0.3 * em.e_dp_pj(32, 8)
+
+
+def test_precision_scaling_quasi_linear():
+    em = EnergyModel()
+    effs = []
+    for r in (1, 2, 4, 8):
+        s = LayerSpec(m=1, k=1152, n=256, r_in=r, r_w=1, r_out=r,
+                      kernel=(3, 3))
+        effs.append(em.macro_tops_per_watt(s))
+    assert effs[0] > effs[1] > effs[2] > effs[3]
+    assert 4 < effs[0] / effs[3] < 10   # ~6.7x from 8b -> 1b
+
+
+def test_eval_time_scales_with_precision():
+    assert cim_eval_time_ns(1, 1, 1) < 0.25 * cim_eval_time_ns(8, 4, 8)

@@ -1,0 +1,82 @@
+"""Property tests: STE quantizers and ABN hardware grids."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import abn as abn_lib
+from repro.core.hw import DEFAULT_MACRO
+from repro.core.quantization import quantize_act, quantize_weight, ste_round
+
+
+@given(st.integers(1, 8), st.integers(0, 2**32 - 1))
+@settings(max_examples=30, deadline=None)
+def test_act_quant_bounds(r_in, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, 3, size=(64,)), jnp.float32)
+    aq = quantize_act(x, r_in)
+    q = np.asarray(aq.q)
+    assert q.min() >= 0 and q.max() <= 2**r_in - 1
+    assert np.all(q == np.round(q))
+    # reconstruction error bounded by one step
+    recon = q * float(aq.scale) + float(aq.zero)
+    assert np.max(np.abs(recon - np.asarray(x))) <= float(aq.scale) * 0.5 + 1e-6
+
+
+@given(st.integers(1, 4), st.integers(0, 2**32 - 1))
+@settings(max_examples=30, deadline=None)
+def test_weight_quant_odd_grid(r_w, seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(0, 1, size=(32, 8)), jnp.float32)
+    wq = quantize_weight(w, r_w)
+    q = np.asarray(wq.q)
+    full = 2**r_w - 1
+    assert np.all(np.abs(q) <= full)
+    assert np.all(np.abs(q % 2) == 1)          # odd grid
+    # per-channel scale reconstructs amax within one step
+    recon = q * np.asarray(wq.scale)
+    assert np.max(np.abs(recon - np.asarray(w))) <= np.max(np.asarray(wq.scale)) + 1e-6
+
+
+def test_ste_gradient_passthrough():
+    # d/dx sum(round(x)^2) under STE = 2*round(x) * 1
+    g = jax.grad(lambda x: jnp.sum(ste_round(x) ** 2))(jnp.array([1.3, -0.7]))
+    np.testing.assert_allclose(np.asarray(g), [2.0, -2.0], rtol=1e-6)
+
+
+def test_gamma_pow2_grid():
+    g = abn_lib.quantize_gamma_pow2(jnp.array([1.4, 3.1, 20.0, 100.0]))
+    np.testing.assert_array_equal(np.asarray(g), [1.0, 4.0, 16.0, 32.0])
+
+
+def test_gamma_bits_levels():
+    gs = abn_lib.quantize_gamma_bits(jnp.linspace(1, 32, 100), 2)
+    assert len(np.unique(np.asarray(gs))) <= 4
+
+
+def test_beta_quant_grid():
+    cfg = DEFAULT_MACRO
+    b = abn_lib.quantize_beta_v(jnp.array([0.0, 0.01, 0.029, 0.5, -0.5]))
+    assert float(jnp.max(b)) <= cfg.abn_offset_range_v + 1e-9
+    assert float(jnp.min(b)) >= -cfg.abn_offset_range_v - 1e-9
+
+
+def test_fold_batchnorm():
+    key = jax.random.PRNGKey(0)
+    y = jax.random.normal(key, (128, 4)) * 3 + 1
+    mean, var = jnp.mean(y, 0), jnp.var(y, 0)
+    scale, bias = jnp.array([2., 1., .5, 1.]), jnp.array([0., 1., -1., 2.])
+    gamma, beta = abn_lib.fold_batchnorm(scale, bias, mean, var)
+    want = scale * (y - mean) / jnp.sqrt(var + 1e-5) + bias
+    got = gamma * y + beta
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_distribution_aware_init_centers():
+    key = jax.random.PRNGKey(1)
+    dp = jax.random.normal(key, (512, 8)) * 5 + 40.0
+    p = abn_lib.distribution_aware_init(dp, r_out=8)
+    gamma = 2.0 ** p.log_gamma
+    reshaped = gamma[None, :] * np.asarray(dp) + np.asarray(p.beta)[None, :]
+    assert np.abs(reshaped.mean()) < 3.0          # centred near mid 0
+    assert 16 < reshaped.std() < 48               # fills ~quarter range
