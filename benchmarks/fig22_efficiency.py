@@ -1,8 +1,14 @@
-"""Fig. 22/23 + Table I: energy-efficiency / throughput trade-offs."""
+"""Fig. 22/23 + Table I: energy-efficiency / throughput trade-offs.
+
+`run_engine_precision_sweep` goes beyond the closed-form model: it plans and
+*executes* a 2-layer network through the precision-scalable runtime at every
+r_in operating point (Pallas interpret mode), verifies bit-exactness against
+the digital reference, and reports the modeled throughput/efficiency of the
+executed schedule — the paper's Fig. 22 scaling argument, end to end."""
 import time
 
 from repro.core.mapping import LayerSpec
-from repro.perfmodel import AcceleratorPerfModel, EnergyModel
+from repro.perfmodel import AcceleratorPerfModel, EnergyModel, schedule_report
 from repro.perfmodel.macro_perf import cim_eval_time_ns
 
 
@@ -47,6 +53,34 @@ def run_fig23_system():
     return rows
 
 
+def run_engine_precision_sweep(m=32, iters=2):
+    """Execute a 2-layer network per r_in through the runtime engine."""
+    import jax
+    import jax.numpy as jnp
+    from repro.runtime import CIMInferenceEngine
+
+    rows = []
+    for r_in in (1, 2, 4, 8):
+        r_w = min(r_in, 4)
+        specs = [LayerSpec(m=m, k=576, n=64, r_in=r_in, r_w=r_w, r_out=8,
+                           kernel=(3, 3)),
+                 LayerSpec(m=m, k=64, n=32, r_in=r_in, r_w=r_w, r_out=8)]
+        eng = CIMInferenceEngine(specs)
+        params = eng.init_params(jax.random.PRNGKey(r_in))
+        x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(r_in + 8),
+                                          (m, 576)))
+        y = eng(params, x).block_until_ready()
+        t0 = time.time()
+        for _ in range(iters):
+            eng(params, x).block_until_ready()
+        wall_us = (time.time() - t0) / iters * 1e6
+        exact = bool(jnp.all(y == eng.reference(params, x)))
+        rep = eng.perf_report()
+        rows.append((r_in, r_w, wall_us, rep["total"]["tops"],
+                     rep["total"]["tops_per_w"], exact))
+    return rows
+
+
 def main():
     t0 = time.time()
     for r_in, r_out, pops, tops in run_fig22a():
@@ -57,6 +91,9 @@ def main():
     for c_in, ee, frac, tops in run_fig23_system():
         print(f"fig23_system_cin{c_in},0,{ee:.1f}TOPSpW8b"
               f"_macrofrac{frac:.2f}_{tops:.3f}TOPS")
+    for r_in, r_w, us, tops, tpw, exact in run_engine_precision_sweep():
+        print(f"fig22_engine_rin{r_in}_rw{r_w},{us:.0f},"
+              f"{tops:.2f}TOPS_{tpw:.1f}TOPSpW_exact{exact}")
     us = (time.time() - t0) * 1e6
     print(f"fig22_23_total,{us:.0f},done")
 

@@ -1,6 +1,11 @@
 """Pallas cim_mbiw kernel micro-benchmark (interpret mode on CPU: checks
 dispatch overhead + correctness at benchmark shapes; wall-clock here is NOT
-TPU performance — the TPU projection is the roofline analysis)."""
+TPU performance — the TPU projection is the roofline analysis).
+
+Sweeps the macro's precision operating points (r_in x r_w) through the
+precision-specialized kernel variants, reporting per-precision wall-clock,
+achieved integer-op rate, and bit-exactness against the oracle — the
+software analogue of the paper's Fig. 22 sweep."""
 import time
 
 import jax
@@ -11,9 +16,11 @@ from repro.core.hw import DEFAULT_MACRO
 from repro.kernels.cim_mbiw import ops
 from repro.kernels.cim_mbiw.ref import cim_matmul_ref
 
+PRECISIONS = [(r_in, r_w) for r_in in (1, 2, 4, 8) for r_w in (1, 2, 4)]
 
-def bench(m, k, n, r_in=8, r_w=4, r_out=8, iters=3):
-    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+
+def _case(m, k, n, r_in, r_w, r_out=8, seed=0):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
     x = jax.random.randint(kx, (m, k), 0, 2 ** r_in).astype(jnp.int32)
     w = dr.quantize_weight_odd(
         jax.random.randint(kw, (k, n), -(2 ** r_w - 1), 2 ** r_w), r_w)
@@ -23,7 +30,11 @@ def bench(m, k, n, r_in=8, r_w=4, r_out=8, iters=3):
     units = cfg.units_for_rows(min(k, cfg.n_rows))
     g0 = dr.adc_gain_factor(r_in, r_w, r_out, units * cfg.rows_per_unit,
                             cfg.swing_efficiency(units), cfg.alpha_adc())
+    return x, w, gamma, beta, g0
 
+
+def bench(m, k, n, r_in=8, r_w=4, r_out=8, iters=3):
+    x, w, gamma, beta, g0 = _case(m, k, n, r_in, r_w, r_out, seed=m + k + n)
     out = ops.cim_matmul(x, w, gamma, beta, r_in=r_in, r_out=r_out, g0=g0)
     out.block_until_ready()
     t0 = time.time()
@@ -38,10 +49,33 @@ def bench(m, k, n, r_in=8, r_w=4, r_out=8, iters=3):
     return t_kernel * 1e6, match
 
 
+def bench_precision_sweep(m=128, k=1152, n=64, iters=3):
+    """Per-precision throughput through the dispatch table (Fig. 22 sweep)."""
+    rows = []
+    for r_in, r_w in PRECISIONS:
+        prec = ops.KernelPrecision(r_in, r_w, 8)
+        fn = ops.kernel_variant(prec, bm=128, bn=128, bk=256)
+        x, w, gamma, beta, g0 = _case(m, k, n, r_in, r_w, seed=r_in + r_w)
+        out = fn(x, w, gamma, beta, g0)
+        out.block_until_ready()
+        t0 = time.time()
+        for _ in range(iters):
+            fn(x, w, gamma, beta, g0).block_until_ready()
+        us = (time.time() - t0) / iters * 1e6
+        ref = cim_matmul_ref(x, w, gamma, beta, g0=g0, r_out=8)
+        match = bool(jnp.all(out == ref))
+        gops = 2.0 * m * k * n / (us * 1e-6) / 1e9
+        rows.append((r_in, r_w, prec.n_planes, us, gops, match))
+    return rows
+
+
 def main():
     for (m, k, n) in ((128, 1152, 64), (256, 1152, 256), (512, 512, 128)):
         us, match = bench(m, k, n)
         print(f"kernel_cim_mbiw_{m}x{k}x{n},{us:.0f},match{match}")
+    for r_in, r_w, planes, us, gops, match in bench_precision_sweep():
+        print(f"kernel_prec_rin{r_in}_rw{r_w},{us:.0f},"
+              f"{gops:.1f}GOPS_planes{planes}_match{match}")
 
 
 if __name__ == "__main__":

@@ -15,6 +15,12 @@ architectures).  Three execution modes:
   * "sim"       : voltage-domain behavioural macro (core/cim_macro.py),
                   tiled per core/mapping.py.  Small workloads only; used by
                   fidelity tests and paper-figure benchmarks.
+  * "engine"    : the precision-scalable inference runtime
+                  (runtime/engine.py): the layer is planned into row/col
+                  macro tiles and executed through the precision-
+                  specialized Pallas kernel variants — the deployed
+                  inference path, bit-exact with its digital reference
+                  under NO_NOISE.
 
 Parameters per layer: {"w": (K, N) fp32 master weights,
                        "abn_log_gamma": (N,), "abn_beta": (N,)}.
@@ -118,6 +124,8 @@ def cim_linear_apply(params: Dict, x: jnp.ndarray, cfg: CIMConfig,
         return _fakequant_forward(params, x, cfg, key)
     if cfg.mode == "sim":
         return _sim_forward(params, x, cfg, key)
+    if cfg.mode == "engine":
+        return _engine_forward(params, x, cfg)
     raise ValueError(f"unknown CIM mode {cfg.mode!r}")
 
 
@@ -206,6 +214,32 @@ def _fakequant_forward(params: Dict, x: jnp.ndarray, cfg: CIMConfig,
 
     y = dp_hat * aq.scale * wq.scale.reshape(-1)          # (..., N)
     return y.astype(compute_dtype)
+
+
+def _engine_forward(params: Dict, x: jnp.ndarray,
+                    cfg: CIMConfig) -> jnp.ndarray:
+    """Route the layer through the precision-scalable inference runtime.
+
+    Inference only (no STE gradients, no noise injection); the runtime plans
+    the layer into the macro's row/col tile schedule and dispatches the
+    precision-specialized Pallas kernel variant."""
+    # imported lazily: runtime.engine depends on this module for init
+    from repro.runtime import engine as rt
+
+    if cfg.noise.enabled:
+        raise ValueError(
+            "mode='engine' is the noise-free deployed path; use "
+            "mode='fakequant'/'sim' for noise-injection studies")
+    k_dim, n = params["w"].shape
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, k_dim))
+    spec = mapping.LayerSpec(m=x2.shape[0], k=k_dim, n=n, r_in=cfg.r_in,
+                             r_w=cfg.r_w, r_out=cfg.r_out)
+    ecfg = rt.EngineConfig(macro=cfg.macro, adaptive_swing=cfg.adaptive_swing,
+                           gamma_bits=cfg.gamma_bits, max_gamma=cfg.max_gamma)
+    plan = rt.plan_network([spec], ecfg)
+    y = rt.run_network(plan, [params], x2)
+    return y.reshape(lead + (n,)).astype(x.dtype)
 
 
 def _sim_forward(params: Dict, x: jnp.ndarray, cfg: CIMConfig,

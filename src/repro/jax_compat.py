@@ -1,0 +1,88 @@
+"""Version-tolerant aliases for JAX APIs that moved between releases.
+
+The repo targets the newest stable JAX but must run on the pinned container
+toolchain (0.4.x).  Every symbol here resolves the modern spelling when it
+exists and otherwise falls back to the legacy one with identical semantics:
+
+  * ``make_mesh``          — ``axis_types=`` kwarg appeared after 0.4.x; the
+    fallback builds the same Auto-axes mesh without it.
+  * ``get_abstract_mesh``  — newer JAX tracks an ambient abstract mesh; on
+    0.4.x the ambient mesh is the thread-resource physical mesh set by the
+    ``with mesh:`` context (same ``.empty``/``.axis_names``/``.shape`` duck
+    type, which is all our sharding helpers read).
+  * ``set_mesh``           — ``jax.set_mesh(mesh)`` vs the legacy ``with
+    mesh:`` context manager (``Mesh`` is itself a context manager).
+  * ``shard_map``          — ``jax.shard_map(..., check_vma=)`` vs
+    ``jax.experimental.shard_map.shard_map(..., check_rep=)``.
+  * ``TPUCompilerParams``  — ``pltpu.CompilerParams`` was renamed from
+    ``pltpu.TPUCompilerParams``; kernels take whichever exists.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Sequence
+
+import jax
+from jax.experimental.pallas import tpu as _pltpu
+
+# --- pallas compiler params -------------------------------------------------
+
+TPUCompilerParams = getattr(_pltpu, "CompilerParams", None) or \
+    getattr(_pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    """Build TPU pallas compiler params under either class name."""
+    return TPUCompilerParams(**kwargs)
+
+
+# --- mesh construction ------------------------------------------------------
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    axis_shapes = tuple(axis_shapes)
+    axis_names = tuple(axis_names)
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(
+                axis_shapes, axis_names,
+                axis_types=(axis_type.Auto,) * len(axis_names))
+        except TypeError:  # pragma: no cover - very old make_mesh
+            pass
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+# --- ambient mesh -----------------------------------------------------------
+
+def get_abstract_mesh():
+    """The ambient mesh (possibly empty), whatever this JAX calls it."""
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is not None:
+        return fn()
+    from jax._src.mesh import thread_resources
+    return thread_resources.env.physical_mesh
+
+
+def set_mesh(mesh):
+    """Context manager making ``mesh`` the ambient mesh."""
+    fn = getattr(jax, "set_mesh", None)
+    if fn is not None:
+        ctx = fn(mesh)
+        # jax.set_mesh is itself a context manager in recent releases
+        if hasattr(ctx, "__enter__"):
+            return ctx
+        return contextlib.nullcontext(mesh)
+    return mesh  # legacy: Mesh is a context manager
+
+
+# --- shard_map --------------------------------------------------------------
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)

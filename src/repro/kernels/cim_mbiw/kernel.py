@@ -3,12 +3,14 @@
 TPU adaptation of the macro's analog pipeline (DESIGN.md §3):
   * the DP array's charge accumulation    ->  int8 x int8 MXU matmul with an
     int32 VMEM accumulator (exact; the charge domain is linear, so is this);
-  * the MBIW *input-serial* accumulation  ->  input nibble planes walked by
-    the K grid dimension, each plane's partial dp scaled by 2^(4*plane) into
-    the same accumulator — the kernel literally performs the paper's
-    input-serial, weight-parallel accumulation, at nibble rather than bit
-    granularity (the MXU makes 4b groups free, serialising to single bits
-    would only waste it);
+  * the MBIW *input-serial* accumulation  ->  input planes walked by the K
+    grid dimension, each plane's partial dp scaled by 2^(plane_shift*plane)
+    into the same accumulator — the kernel literally performs the paper's
+    input-serial, weight-parallel accumulation.  The plane granularity is
+    the precision lever (paper Fig. 22): bit-serial (plane_shift=1) at
+    r_in <= 2 where the macro runs its fastest/most-efficient modes,
+    nibble-serial (plane_shift=4) at r_in >= 3 where the MXU makes 4b
+    groups free and serialising to single bits would only waste it;
   * the DSCI-ADC with in-conversion ABN   ->  per-output-channel gamma/beta
     + floor + clip epilogue applied in VMEM before writeback, so the
     paper's "no post-ADC rescaling pass" maps to "no second pass over the
@@ -31,6 +33,22 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.jax_compat import tpu_compiler_params
+
+
+def plane_layout(r_in: int) -> tuple[int, int]:
+    """(plane_shift, n_planes) of the input-serial walk at a given r_in.
+
+    Bit-serial below 3b (the macro's high-throughput binary modes),
+    nibble-serial at 3-8b.  Weights stay *parallel* at every r_w — the
+    MBIW combines weight bits spatially across adjacent columns, so the
+    kernel sees them as pre-decoded odd integers.
+    """
+    if not 1 <= r_in <= 8:
+        raise ValueError(f"r_in={r_in} outside the macro's 1-8b range")
+    shift = 1 if r_in <= 2 else 4
+    return shift, -(-r_in // shift)
 
 
 def _cim_mbiw_kernel(x_ref, w_ref, gamma_ref, beta_ref, o_ref, acc_ref, *,
@@ -99,6 +117,6 @@ def cim_mbiw_matmul_planes(x_planes: jnp.ndarray, w_q: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(x_planes, w_q, gamma, beta)

@@ -1,23 +1,60 @@
 """jit'd public wrappers around the cim_mbiw Pallas kernel.
 
-Handles everything the kernel does not: nibble-plane decomposition of
-unsigned inputs, padding to MXU-aligned blocks, the macro's K<=1152
-row-tiling with per-tile ADC conversion, and dequantization back to real
-units (mirroring core/cim_layers._fakequant_forward).
+Handles everything the kernel does not: plane decomposition of unsigned
+inputs (bit-serial at 1-2b, nibble-serial at 3-8b), padding to MXU-aligned
+blocks, the macro's K<=1152 row-tiling with per-tile ADC conversion, and
+dequantization back to real units (mirroring core/cim_layers).
+
+Precision dispatch
+------------------
+`KernelPrecision` names one of the macro's operating points (r_in, r_w,
+r_out); `kernel_variant` returns a jit-compiled kernel specialized to that
+point (plane walk + accumulator shift from r_in, ADC epilogue from r_out)
+and caches it, so a network executes through a small table of compiled
+variants instead of re-tracing per layer.  The runtime engine
+(repro/runtime/engine.py) is the intended caller.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Tuple
+from typing import Callable, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import digital_ref
 from repro.core.hw import CIMMacroConfig, DEFAULT_MACRO
-from repro.kernels.cim_mbiw.kernel import cim_mbiw_matmul_planes
+from repro.kernels.cim_mbiw.kernel import cim_mbiw_matmul_planes, plane_layout
 
-_PLANE_SHIFT = 4  # nibble planes
+_PLANE_SHIFT = 4  # legacy nibble-plane default (r_in > 7 inputs)
+
+SUPPORTED_R_IN = (1, 2, 3, 4, 5, 6, 7, 8)
+SUPPORTED_R_W = (1, 2, 3, 4)
+SUPPORTED_R_OUT = (1, 2, 3, 4, 5, 6, 7, 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPrecision:
+    """One (r_in, r_w, r_out) operating point of the macro."""
+    r_in: int = 8
+    r_w: int = 4
+    r_out: int = 8
+
+    def __post_init__(self):
+        if self.r_in not in SUPPORTED_R_IN:
+            raise ValueError(f"r_in={self.r_in} not in {SUPPORTED_R_IN}")
+        if self.r_w not in SUPPORTED_R_W:
+            raise ValueError(f"r_w={self.r_w} not in {SUPPORTED_R_W}")
+        if self.r_out not in SUPPORTED_R_OUT:
+            raise ValueError(f"r_out={self.r_out} not in {SUPPORTED_R_OUT}")
+
+    @property
+    def plane_shift(self) -> int:
+        return plane_layout(self.r_in)[0]
+
+    @property
+    def n_planes(self) -> int:
+        return plane_layout(self.r_in)[1]
 
 
 def _pad_to(x: jnp.ndarray, mult: Tuple[int, ...]) -> jnp.ndarray:
@@ -27,19 +64,65 @@ def _pad_to(x: jnp.ndarray, mult: Tuple[int, ...]) -> jnp.ndarray:
     return jnp.pad(x, pads)
 
 
-def split_planes(x_q: jnp.ndarray, r_in: int) -> Tuple[jnp.ndarray, int]:
-    """Unsigned ints < 2^r_in -> plane-major int8 layout (M, P*K)."""
+def split_planes(x_q: jnp.ndarray, r_in: int,
+                 plane_shift: Optional[int] = None
+                 ) -> Tuple[jnp.ndarray, int]:
+    """Unsigned ints < 2^r_in -> plane-major int8 layout (M, P*K).
+
+    With `plane_shift=None` (legacy): a single plane whenever the values fit
+    in int8 (r_in <= 7), nibble planes above.  With an explicit shift the
+    decomposition is ceil(r_in / shift) planes of `shift` bits each — the
+    precision-specialized walk of `KernelPrecision`.
+    """
     x = x_q.astype(jnp.int32)
-    if r_in <= 7:
+    if plane_shift is None:
+        if r_in <= 7:
+            return x.astype(jnp.int8), 1
+        plane_shift = _PLANE_SHIFT
+    n_planes = -(-r_in // plane_shift)
+    if n_planes == 1:
         return x.astype(jnp.int8), 1
-    n_planes = -(-r_in // _PLANE_SHIFT)
-    planes = [((x >> (_PLANE_SHIFT * p)) & (2**_PLANE_SHIFT - 1)).astype(jnp.int8)
+    mask = 2**plane_shift - 1
+    planes = [((x >> (plane_shift * p)) & mask).astype(jnp.int8)
               for p in range(n_planes)]
     return jnp.concatenate(planes, axis=-1), n_planes
 
 
+def kernel_variant(prec: KernelPrecision, bm: int = 256, bn: int = 256,
+                   bk: int = 512, interpret: bool = True) -> Callable:
+    """Precision-specialized kernel callable (cached per operating point).
+
+    Returned fn: (x_q (M,K) uint<2^r_in, w_q (K,N) odd ints, gamma (N,),
+    beta (N,), g0) -> (M,N) int32 ADC codes.  Shapes need not be padded.
+
+    The cache is keyed on what the compiled kernel actually depends on —
+    the (plane_shift, n_planes) input walk and the r_out epilogue — so
+    operating points differing only in r_w (weights arrive pre-decoded)
+    or sharing a plane layout (e.g. r_in 5-8) reuse one variant.
+    """
+    shift, n_planes = plane_layout(prec.r_in)
+    return _kernel_variant(shift, n_planes, prec.r_out, bm, bn, bk,
+                           interpret)
+
+
+@functools.lru_cache(maxsize=None)
+def _kernel_variant(shift: int, n_planes: int, r_out: int, bm: int, bn: int,
+                    bk: int, interpret: bool) -> Callable:
+    r_eff = shift * n_planes          # widest r_in with this plane layout
+
+    def run(x_q, w_q, gamma, beta, g0: float):
+        return cim_matmul(x_q, w_q, gamma, beta, r_in=r_eff, r_out=r_out,
+                          g0=g0, plane_shift=shift, bm=bm, bn=bn, bk=bk,
+                          interpret=interpret)
+    run.plane_shift = shift
+    run.n_planes = n_planes
+    run.r_out = r_out
+    return run
+
+
 def cim_matmul(x_q: jnp.ndarray, w_q: jnp.ndarray, gamma: jnp.ndarray,
                beta: jnp.ndarray, *, r_in: int, r_out: int, g0: float,
+               plane_shift: Optional[int] = None,
                bm: int = 256, bn: int = 256, bk: int = 512,
                interpret: bool = True) -> jnp.ndarray:
     """One macro row-tile (K <= n_rows recommended): int inputs -> ADC codes.
@@ -49,7 +132,8 @@ def cim_matmul(x_q: jnp.ndarray, w_q: jnp.ndarray, gamma: jnp.ndarray,
     """
     m, k_dim = x_q.shape
     _, n = w_q.shape
-    x_planes, n_planes = split_planes(x_q, r_in)
+    x_planes, n_planes = split_planes(x_q, r_in, plane_shift)
+    shift = _PLANE_SHIFT if plane_shift is None else plane_shift
 
     # pad: K to bk multiple (per-plane), M to bm, N to bn.  Padding K with
     # zero inputs/weights adds 0 to the dp — same trick the macro uses when
@@ -66,7 +150,7 @@ def cim_matmul(x_q: jnp.ndarray, w_q: jnp.ndarray, gamma: jnp.ndarray,
     beta2 = _pad_to(beta.reshape(1, -1).astype(jnp.float32), (1, bn))
 
     codes = cim_mbiw_matmul_planes(
-        x_planes, w_q, gamma2, beta2, plane_shift=_PLANE_SHIFT, g0=g0,
+        x_planes, w_q, gamma2, beta2, plane_shift=shift, g0=g0,
         r_out=r_out, bm=bm, bn=bn, bk=bk, interpret=interpret)
     return codes[:m, :n]
 

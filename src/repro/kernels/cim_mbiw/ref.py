@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the cim_mbiw kernel.
+"""Pure-jnp oracles for the cim_mbiw kernel.
 
 Semantics: one macro row-tile (K <= 1152) of the digital-equivalent CIM
 matmul, ADC conversion fused in the epilogue:
@@ -9,17 +9,58 @@ matmul, ADC conversion fused in the epilogue:
 
 x: unsigned ints < 2^r_in, w: odd ints in +/-(2^r_w - 1), g0 the unity-gain
 code gain of digital_ref.adc_gain_factor.
+
+Two oracles:
+  * `cim_matmul_ref`        — direct integer matmul + epilogue (any r).
+  * `cim_matmul_ref_serial` — the literal per-precision datapath: input
+    planes walked at the precision's serial layout (bit-serial at 1-2b,
+    nibble-serial at 3-8b) with the accumulator shift, weight bits combined
+    spatially at 2^p column weights.  Bit-exact equal to the direct oracle;
+    this is the per-precision reference the kernel dispatch is tested
+    against.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
+
+from repro.core import digital_ref
+from repro.kernels.cim_mbiw.kernel import plane_layout
+
+
+def _adc_epilogue(dp: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
+                  g0: float, r_out: int) -> jnp.ndarray:
+    mid = 2.0 ** (r_out - 1)
+    code = jnp.floor(mid + gamma[None, :] * g0 * dp.astype(jnp.float32)
+                     + beta[None, :])
+    return jnp.clip(code, 0.0, 2.0 ** r_out - 1.0).astype(jnp.int32)
 
 
 def cim_matmul_ref(x_q: jnp.ndarray, w_q: jnp.ndarray, gamma: jnp.ndarray,
                    beta: jnp.ndarray, *, g0: float, r_out: int
                    ) -> jnp.ndarray:
     dp = x_q.astype(jnp.int32) @ w_q.astype(jnp.int32)
-    mid = 2.0 ** (r_out - 1)
-    code = jnp.floor(mid + gamma[None, :] * g0 * dp.astype(jnp.float32)
-                     + beta[None, :])
-    return jnp.clip(code, 0.0, 2.0 ** r_out - 1.0).astype(jnp.int32)
+    return _adc_epilogue(dp, gamma, beta, g0, r_out)
+
+
+def cim_matmul_ref_serial(x_q: jnp.ndarray, w_q: jnp.ndarray,
+                          gamma: jnp.ndarray, beta: jnp.ndarray, *,
+                          r_in: int, r_w: int, r_out: int, g0: float
+                          ) -> jnp.ndarray:
+    """Per-precision serial walk:
+        dp = sum_p 2^(shift*p) * sum_b 2^b * (plane_p(x) . S_b(w))
+    with plane_p the precision's input plane slices and S_b the +/-1 weight
+    bit-planes (weight-parallel column combination)."""
+    shift, n_planes = plane_layout(r_in)
+    x = x_q.astype(jnp.int32)
+    mask = 2**shift - 1
+    w_planes = digital_ref.encode_weight_planes(
+        w_q.astype(jnp.int32), r_w)                       # (r_w, K, N)
+    dp = jnp.zeros(x.shape[:-1] + (w_q.shape[-1],), jnp.int32)
+    for p in range(n_planes):
+        xp = (x >> (shift * p)) & mask
+        per_plane = jnp.zeros_like(dp)
+        for b in range(r_w):
+            per_plane = per_plane + (2**b) * (
+                xp @ w_planes[b].astype(jnp.int32))
+        dp = dp + (2 ** (shift * p)) * per_plane
+    return _adc_epilogue(dp, gamma, beta, g0, r_out)

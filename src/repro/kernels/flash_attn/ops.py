@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.jax_compat import get_abstract_mesh, shard_map
 from repro.kernels.flash_attn.kernel import (flash_attention_bhsd,
                                              flash_attention_bwd_bhsd)
 from repro.kernels.flash_attn.ref import attention_ref
@@ -124,7 +125,7 @@ def flash_attention_sharded(q, k, v, causal: bool = True, window: int = 0,
     """Context-parallel entry: q seq-sharded over "model", k/v replicated
     over "model", batch over ("pod","data").  Falls back to the plain call
     when the ambient mesh is empty or does not divide the shapes."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     b, sq = q.shape[0], q.shape[1]
     if mesh.empty:
         return flash_attention(q, k, v, causal, window, bq, bk)
@@ -154,6 +155,6 @@ def flash_attention_sharded(q, k, v, causal: bool = True, window: int = 0,
         bq_l, bk_l = _block_sizes(q_l.shape[1], k_l.shape[1], bq, bk)
         return _flash_core(q_l, k_l, v_l, off, causal, window, bq_l, bk_l)
 
-    return jax.shard_map(body, mesh=mesh,
-                         in_specs=(q_spec, kv_spec, kv_spec),
-                         out_specs=q_spec, check_vma=False)(q, k, v)
+    return shard_map(body, mesh=mesh,
+                     in_specs=(q_spec, kv_spec, kv_spec),
+                     out_specs=q_spec, check_vma=False)(q, k, v)

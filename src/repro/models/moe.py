@@ -24,6 +24,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.cim_layers import CIMConfig
 from repro.core.quantization import adc_quantize, quantize_act, quantize_weight
+from repro.jax_compat import get_abstract_mesh, shard_map
 from repro.models.sharding import BATCH, TP, mesh_spec, shard
 
 
@@ -144,7 +145,7 @@ def moe_block(params: Dict, x: jnp.ndarray, *, n_experts: int, top_k: int,
     ce = jnp.mean(jax.nn.one_hot(top_idx[:, 0], n_experts), axis=0)
     aux = n_experts * jnp.sum(me * ce)
 
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     kwargs = dict(n_experts=n_experts, top_k=top_k,
                   capacity_factor=capacity_factor, cim=cim, act=act)
     w_gate = _get_expert_w(params, "w_gate", x.dtype)
@@ -165,7 +166,7 @@ def moe_block(params: Dict, x: jnp.ndarray, *, n_experts: int, top_k: int,
         tp = TP if TP in names else None
         body = functools.partial(_moe_local, psum_axis=tp, **kwargs)
         tok_spec = P(batch_axes if batch_axes else None, None)
-        out = jax.shard_map(
+        out = shard_map(
             body, mesh=mesh,
             in_specs=(tok_spec, tok_spec, tok_spec,
                       P(None, None, tp), P(None, None, tp), P(None, tp, None),

@@ -12,6 +12,8 @@ from typing import Optional, Sequence, Union
 import jax
 from jax.sharding import PartitionSpec as P
 
+from repro.jax_compat import get_abstract_mesh
+
 # logical axis groups
 BATCH = ("pod", "data")     # pure data-parallel axes
 TP = "model"                # tensor-parallel axis
@@ -33,7 +35,7 @@ def mesh_spec(*elems: AxisEl, shape: Optional[Sequence[int]] = None
     """PartitionSpec with axes absent from the ambient mesh dropped; if
     `shape` is given, axes whose product does not divide the corresponding
     dim are also dropped (e.g. batch=1 long-context decode, odd vocabs)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh.empty:
         return None
     names = set(mesh.axis_names)
@@ -66,7 +68,7 @@ def shard(x: jax.Array, *elems: AxisEl) -> jax.Array:
 
 
 def axis_size(name: str) -> int:
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh.empty or name not in mesh.axis_names:
         return 1
     return mesh.shape[name]

@@ -1,2 +1,2 @@
 from repro.perfmodel.macro_perf import (AcceleratorPerfModel, CyclePerf,  # noqa
-                                        EnergyModel)
+                                        EnergyModel, schedule_report)

@@ -123,6 +123,55 @@ class EnergyModel:
         return ops / (t * 1e-9) / 1e12
 
 
+def schedule_report(plan, *, clock_ns: float = 10.0, pipelined: bool = True,
+                    gamma: float = 1.0) -> Dict[str, object]:
+    """Cycle/energy estimates for a runtime engine schedule.
+
+    `plan` is a runtime.engine.NetworkPlan (duck-typed: only
+    `plan.layers[i].spec` / `.precision` are read, so there is no perfmodel
+    -> runtime import cycle).  Returns per-layer reports, per-precision
+    aggregates keyed "r{r_in}x{r_w}b", and schedule totals — the model
+    behind the paper's Fig. 22 precision-scaling curves, applied to an
+    executable schedule instead of a lone macro.
+    """
+    ap = AcceleratorPerfModel(clock_ns=clock_ns)
+    layers = []
+    per_prec: Dict[str, Dict[str, float]] = {}
+    tot_ops = tot_ops8 = tot_e = tot_t = 0.0
+    for lp in plan.layers:
+        rep = ap.layer_report(lp.spec, gamma=gamma, pipelined=pipelined)
+        layers.append(rep)
+        ops = rep["tops"] * 1e12 * rep["time_s"]
+        ops8 = rep["tops_8b_norm"] * 1e12 * rep["time_s"]
+        e = rep["macro_energy_j"] + rep["digital_energy_j"]
+        key = f"r{lp.spec.r_in}x{lp.spec.r_w}b"
+        agg = per_prec.setdefault(
+            key, {"ops": 0.0, "energy_j": 0.0, "time_s": 0.0, "layers": 0})
+        agg["ops"] += ops
+        agg["energy_j"] += e
+        agg["time_s"] += rep["time_s"]
+        agg["layers"] += 1
+        tot_ops += ops
+        tot_ops8 += ops8
+        tot_e += e
+        tot_t += rep["time_s"]
+    for agg in per_prec.values():
+        agg["tops"] = agg["ops"] / max(agg["time_s"], 1e-30) / 1e12
+        agg["tops_per_w"] = agg["ops"] / max(agg["energy_j"], 1e-30) / 1e12
+    return {
+        "layers": layers,
+        "per_precision": per_prec,
+        "total": {
+            "time_s": tot_t,
+            "energy_j": tot_e,
+            "tops": tot_ops / max(tot_t, 1e-30) / 1e12,
+            "tops_8b_norm": tot_ops8 / max(tot_t, 1e-30) / 1e12,
+            "tops_per_w": tot_ops / max(tot_e, 1e-30) / 1e12,
+            "macro_evals": plan.total_macro_evals,
+        },
+    }
+
+
 @dataclasses.dataclass(frozen=True)
 class AcceleratorPerfModel:
     energy: EnergyModel = EnergyModel()

@@ -13,7 +13,9 @@ from typing import Optional, Sequence, Tuple
 
 import jax
 import numpy as np
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.jax_compat import make_mesh as _compat_make_mesh
 
 
 def choose_mesh_shape(n_devices: int, tp: int = 16,
@@ -26,8 +28,7 @@ def choose_mesh_shape(n_devices: int, tp: int = 16,
 
 
 def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> jax.sharding.Mesh:
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _compat_make_mesh(tuple(shape), tuple(axes))
 
 
 def reshard_tree(tree, shardings):

@@ -1,0 +1,278 @@
+"""Precision-scalable CIM inference runtime.
+
+The paper's headline lever is workload-adaptive 8-to-1b precision scaling
+(0.15-8 POPS/W); this module exposes it end-to-end: a network described as
+`mapping.LayerSpec`s is *planned* into the macro's row/col tile schedule
+(core/mapping.py) and *executed* through precision-specialized, jit-compiled
+Pallas kernel variants (kernels/cim_mbiw/ops.kernel_variant), with the
+chip's digital partial-sum recombination between row tiles.
+
+    specs = [LayerSpec(m=256, k=1152, n=64, r_in=4, r_w=2), ...]
+    engine = CIMInferenceEngine(specs)           # plans + builds dispatch
+    params = engine.init_params(jax.random.PRNGKey(0))
+    y = engine(params, x)                        # jit-compiled schedule
+    y_ref = engine.reference(params, x)          # pure-jnp digital oracle
+
+Numerics: under NO_NOISE the engine is bit-exact with `reference` at every
+supported precision — both walk identical tile schedules and evaluate the
+identical ADC floor expression; the kernel's int32 accumulator is exact for
+one macro row-tile (|dp| <= 1152*255*15 < 2^24).  The activation zero-point
+is folded into the per-channel ABN beta *inside* the ADC floor
+(beta_eff = beta + gamma*g0*zp_dp), exactly what the chip's
+signed-to-unsigned conversion + beta block does.
+
+Per-layer precision is free: each layer's (r_in, r_w, r_out) selects its
+kernel variant from a small cached table, so a mixed-precision network
+compiles one kernel per distinct operating point, not per layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import abn as abn_lib
+from repro.core import digital_ref, mapping
+from repro.core.hw import CIMMacroConfig, DEFAULT_MACRO
+from repro.kernels.cim_mbiw import ops as kops
+
+Params = List[Dict[str, jnp.ndarray]]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Execution configuration shared by every layer of a schedule."""
+    macro: CIMMacroConfig = DEFAULT_MACRO
+    adaptive_swing: bool = True      # serial-split DPL swing adaptation
+    gamma_bits: int = -1             # -1: continuous gamma; >=0: HW quant
+    max_gamma: float = 32.0
+    interpret: bool = True           # Pallas interpret mode (CPU) vs TPU
+    bm: int = 128                    # kernel block sizes (MXU-aligned)
+    bn: int = 128
+    bk: int = 256
+
+    def replace(self, **kw) -> "EngineConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    """One layer's macro-tile schedule."""
+    spec: mapping.LayerSpec
+    mp: mapping.MacroMapping
+    precision: kops.KernelPrecision
+    g0: float                            # unity-gain codes per dp unit
+    k_slices: Tuple[Tuple[int, int], ...]  # (start, size) row tiles
+    n_slices: Tuple[Tuple[int, int], ...]  # (start, size) col tiles
+    activation: str = "none"             # "none" | "relu"
+
+    @property
+    def macro_evals(self) -> int:
+        return len(self.k_slices) * len(self.n_slices)
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkPlan:
+    layers: Tuple[LayerPlan, ...]
+    cfg: EngineConfig
+
+    @property
+    def precisions(self) -> Tuple[kops.KernelPrecision, ...]:
+        seen: List[kops.KernelPrecision] = []
+        for lp in self.layers:
+            if lp.precision not in seen:
+                seen.append(lp.precision)
+        return tuple(seen)
+
+    @property
+    def total_macro_evals(self) -> int:
+        return sum(lp.macro_evals for lp in self.layers)
+
+
+def _layer_g0(spec: mapping.LayerSpec, mp: mapping.MacroMapping,
+              cfg: EngineConfig) -> float:
+    macro = cfg.macro
+    units = mp.units_per_tile if cfg.adaptive_swing else macro.n_units
+    n_dp = units * macro.rows_per_unit
+    return digital_ref.adc_gain_factor(
+        spec.r_in, spec.r_w, spec.r_out, n_dp,
+        macro.swing_efficiency(units), macro.alpha_adc())
+
+
+def plan_layer(spec: mapping.LayerSpec, cfg: EngineConfig = EngineConfig(),
+               activation: str = "none") -> LayerPlan:
+    mp = mapping.map_layer(spec, cfg.macro)
+    prec = kops.KernelPrecision(spec.r_in, spec.r_w, spec.r_out)
+    return LayerPlan(
+        spec=spec, mp=mp, precision=prec, g0=_layer_g0(spec, mp, cfg),
+        k_slices=tuple(mapping.split_k_slices(spec.k, mp.row_tiles)),
+        n_slices=tuple(mapping.split_k_slices(spec.n, mp.col_tiles)),
+        activation=activation)
+
+
+def plan_network(specs: Sequence[mapping.LayerSpec],
+                 cfg: EngineConfig = EngineConfig(),
+                 activations: Optional[Sequence[str]] = None) -> NetworkPlan:
+    """Plan a feed-forward network: layer i's N must equal layer i+1's K.
+
+    `activations`: per-layer epilogue nonlinearity; defaults to relu between
+    layers and none after the last (the CNN workloads of the paper).
+    """
+    specs = list(specs)
+    for a, b in zip(specs[:-1], specs[1:]):
+        if a.n != b.k:
+            raise ValueError(f"layer chain mismatch: n={a.n} feeds k={b.k}")
+    if activations is None:
+        activations = ["relu"] * (len(specs) - 1) + ["none"]
+    if len(activations) != len(specs):
+        raise ValueError("one activation per layer required")
+    return NetworkPlan(
+        layers=tuple(plan_layer(s, cfg, act)
+                     for s, act in zip(specs, activations)),
+        cfg=cfg)
+
+
+# ---------------------------------------------------------------------------
+# execution
+# ---------------------------------------------------------------------------
+
+def _quantize_inputs(lp: LayerPlan, params: Dict[str, jnp.ndarray],
+                     x2: jnp.ndarray, cfg: EngineConfig):
+    """Shared prologue of the kernel and reference paths: dynamic activation
+    quantization, weight quantization, ABN gamma."""
+    from repro.core.quantization import quantize_act, quantize_weight
+    aq = quantize_act(x2, lp.spec.r_in)
+    wq = quantize_weight(params["w"], lp.spec.r_w, axis=0)
+    gamma = abn_lib.abn_gamma(
+        abn_lib.ABNParams(params["abn_log_gamma"], params["abn_beta"]),
+        gamma_bits=cfg.gamma_bits, max_gamma=cfg.max_gamma)
+    return aq, wq, gamma
+
+
+def _layer_tiles(lp: LayerPlan, params: Dict[str, jnp.ndarray],
+                 x2: jnp.ndarray, cfg: EngineConfig, *,
+                 matmul) -> jnp.ndarray:
+    """Run one layer's tile schedule; `matmul` evaluates one macro tile
+    (kernel variant or jnp oracle) and returns int32 ADC codes."""
+    aq, wq, gamma = _quantize_inputs(lp, params, x2, cfg)
+    beta = params["abn_beta"]
+    mid = 2.0 ** (lp.spec.r_out - 1)
+    g0 = lp.g0
+    dp_hat = []
+    for (ns, nsz) in lp.n_slices:
+        ne = ns + nsz
+        acc = jnp.zeros(x2.shape[:-1] + (nsz,), jnp.float32)
+        for (ks, ksz) in lp.k_slices:
+            ke = ks + ksz
+            # zero-point: x = q*s + z -> z*colsum is per-channel constant,
+            # folded into the ABN offset inside the ADC floor
+            zp_dp = (aq.zero / aq.scale) * jnp.sum(wq.q[ks:ke, ns:ne], axis=0)
+            beta_eff = beta[ns:ne] + gamma[ns:ne] * g0 * zp_dp
+            codes = matmul(aq.q[..., ks:ke], wq.q[ks:ke, ns:ne],
+                           gamma[ns:ne], beta_eff, g0)
+            # digital partial-sum recombination in dp units; dequantizing
+            # against the *raw* beta keeps the zero-point contribution in
+            # dp_hat, exactly like the fakequant training path
+            acc = acc + (codes.astype(jnp.float32) + 0.5 - mid
+                         - beta[None, ns:ne]) / (gamma[None, ns:ne] * g0)
+        dp_hat.append(acc)
+    y = jnp.concatenate(dp_hat, axis=-1) * aq.scale * wq.scale.reshape(-1)
+    if lp.activation == "relu":
+        y = jax.nn.relu(y)
+    elif lp.activation != "none":
+        raise ValueError(f"unknown activation {lp.activation!r}")
+    return y
+
+
+def _kernel_matmul(lp: LayerPlan, cfg: EngineConfig):
+    fn = kops.kernel_variant(lp.precision, bm=cfg.bm, bn=cfg.bn, bk=cfg.bk,
+                             interpret=cfg.interpret)
+
+    def matmul(xq, wqt, gamma_t, beta_t, g0):
+        return fn(xq, wqt, gamma_t, beta_t, g0)
+    return matmul
+
+
+def _reference_matmul(lp: LayerPlan, cfg: EngineConfig):
+    del cfg
+    from repro.kernels.cim_mbiw.ref import cim_matmul_ref
+
+    def matmul(xq, wqt, gamma_t, beta_t, g0):
+        # the shared oracle keeps the ADC floor expression in float-op
+        # lockstep with the kernel epilogue (bit-exactness contract)
+        return cim_matmul_ref(xq, wqt, gamma_t, beta_t, g0=g0,
+                              r_out=lp.spec.r_out)
+    return matmul
+
+
+def _forward(plan: NetworkPlan, params: Params, x: jnp.ndarray,
+             reference: bool) -> jnp.ndarray:
+    k0 = plan.layers[0].spec.k
+    if x.shape[-1] != k0:
+        raise ValueError(
+            f"input width {x.shape[-1]} != first layer's k={k0}")
+    if len(params) != len(plan.layers):
+        raise ValueError(f"{len(params)} param dicts for "
+                         f"{len(plan.layers)} planned layers")
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1])).astype(jnp.float32)
+    for lp, p in zip(plan.layers, params):
+        mk = _reference_matmul if reference else _kernel_matmul
+        x2 = _layer_tiles(lp, p, x2, plan.cfg, matmul=mk(lp, plan.cfg))
+    return x2.reshape(lead + (x2.shape[-1],))
+
+
+@functools.partial(jax.jit, static_argnames=("plan",))
+def run_network(plan: NetworkPlan, params: Params,
+                x: jnp.ndarray) -> jnp.ndarray:
+    """Execute the planned schedule through the Pallas kernel variants.
+
+    x: (..., K0) real-valued activations; returns (..., N_last)."""
+    return _forward(plan, params, x, reference=False)
+
+
+@functools.partial(jax.jit, static_argnames=("plan",))
+def run_network_reference(plan: NetworkPlan, params: Params,
+                          x: jnp.ndarray) -> jnp.ndarray:
+    """Pure-jnp digital oracle of the identical schedule (bit-exact)."""
+    return _forward(plan, params, x, reference=True)
+
+
+class CIMInferenceEngine:
+    """Plans a LayerSpec network once; every call dispatches the cached
+    jit-compiled schedule."""
+
+    def __init__(self, specs: Sequence[mapping.LayerSpec],
+                 cfg: EngineConfig = EngineConfig(),
+                 activations: Optional[Sequence[str]] = None):
+        self.cfg = cfg
+        self.plan = plan_network(specs, cfg, activations)
+
+    def init_params(self, key: jax.Array) -> Params:
+        """Distribution-aware per-layer parameters (core/cim_layers init)."""
+        from repro.core.cim_layers import CIMConfig, init_cim_linear
+        params = []
+        for lp in self.plan.layers:
+            key, sub = jax.random.split(key)
+            lcfg = CIMConfig(
+                r_in=lp.spec.r_in, r_w=lp.spec.r_w, r_out=lp.spec.r_out,
+                adaptive_swing=self.cfg.adaptive_swing,
+                gamma_bits=self.cfg.gamma_bits, max_gamma=self.cfg.max_gamma,
+                macro=self.cfg.macro)
+            params.append(init_cim_linear(sub, lp.spec.k, lp.spec.n,
+                                          cfg=lcfg))
+        return params
+
+    def __call__(self, params: Params, x: jnp.ndarray) -> jnp.ndarray:
+        return run_network(self.plan, params, x)
+
+    def reference(self, params: Params, x: jnp.ndarray) -> jnp.ndarray:
+        return run_network_reference(self.plan, params, x)
+
+    def perf_report(self, **kw):
+        """Per-layer + aggregate cycle/energy estimates (perfmodel)."""
+        from repro.perfmodel.macro_perf import schedule_report
+        return schedule_report(self.plan, **kw)

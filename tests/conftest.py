@@ -3,3 +3,5 @@ import sys
 
 # smoke tests and benches must see 1 device (dryrun sets its own flags)
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# the hypothesis fallback stub lives next to the tests
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,0 +1,76 @@
+"""Minimal stand-in for `hypothesis` when the package is not installed.
+
+Only the surface the test suite actually uses: `given` over positional
+strategies, `settings(max_examples=..., deadline=...)`, and the
+`st.integers` / `st.sampled_from` strategies.  Draws are deterministic
+(seeded per test from the strategy arguments) so failures reproduce; each
+test runs `max_examples` sampled cases plus the strategy endpoints.
+
+Usage in test modules:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from hypofallback import given, settings, st
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Any, Callable, List
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[np.random.Generator], Any],
+                 endpoints: List[Any]):
+        self._draw = draw
+        self.endpoints = endpoints
+
+    def draw(self, rng: np.random.Generator) -> Any:
+        return self._draw(rng)
+
+
+def _integers(lo: int, hi: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)), [lo, hi])
+
+
+def _sampled_from(items) -> _Strategy:
+    items = list(items)
+    return _Strategy(lambda rng: items[int(rng.integers(len(items)))],
+                     [items[0], items[-1]])
+
+
+class st:  # noqa: N801 - mimics `hypothesis.strategies as st`
+    integers = staticmethod(_integers)
+    sampled_from = staticmethod(_sampled_from)
+
+
+def given(*strategies: _Strategy):
+    def deco(fn):
+        # no functools.wraps: __wrapped__ would make pytest inspect the
+        # original signature and demand fixtures for the drawn arguments
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples",
+                        getattr(fn, "_max_examples", 10))
+            # crc32, not hash(): str hashing is salted per process and
+            # would make the drawn examples unreproducible across runs
+            rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+            # endpoints first: the corner cases hypothesis shrinks toward
+            fn(*args, *(s.endpoints[0] for s in strategies), **kwargs)
+            fn(*args, *(s.endpoints[-1] for s in strategies), **kwargs)
+            for _ in range(max(n - 2, 0)):
+                fn(*args, *(s.draw(rng) for s in strategies), **kwargs)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.hypothesis_fallback = True
+        return wrapper
+    return deco
+
+
+def settings(max_examples: int = 10, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco

@@ -1,0 +1,151 @@
+"""Precision-scalable inference runtime: planning, dispatch, bit-exactness.
+
+The acceptance bar: for every supported precision the engine's Pallas
+schedule must agree *bit-exactly* with the pure-jnp digital reference under
+NO_NOISE, including the multi-row-tile digital partial-sum requantization
+path (K > 1152) and the column-tile path (N > 64 channels at r_w=4).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cim_layers as cl
+from repro.core.mapping import LayerSpec
+from repro.runtime import (CIMInferenceEngine, EngineConfig, plan_network,
+                           run_network, run_network_reference)
+
+R_INS = (1, 2, 4, 8)
+R_WS = (1, 2, 4)
+
+
+def _engine_case(specs, seed=0, m=8):
+    eng = CIMInferenceEngine(specs)
+    params = eng.init_params(jax.random.PRNGKey(seed))
+    x = jax.nn.relu(
+        jax.random.normal(jax.random.PRNGKey(seed + 1), (m, specs[0].k)))
+    return eng, params, x
+
+
+@pytest.mark.parametrize("r_w", R_WS)
+@pytest.mark.parametrize("r_in", R_INS)
+def test_single_layer_bitexact_precision_grid(r_in, r_w):
+    specs = [LayerSpec(m=8, k=72, n=16, r_in=r_in, r_w=r_w, r_out=8)]
+    eng, params, x = _engine_case(specs, seed=r_in * 10 + r_w)
+    y = eng(params, x)
+    y_ref = eng.reference(params, x)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+
+
+@pytest.mark.parametrize("r_out", (2, 4, 6, 8))
+def test_single_layer_bitexact_r_out(r_out):
+    specs = [LayerSpec(m=8, k=72, n=16, r_in=4, r_w=2, r_out=r_out)]
+    eng, params, x = _engine_case(specs, seed=r_out)
+    np.testing.assert_array_equal(np.asarray(eng(params, x)),
+                                  np.asarray(eng.reference(params, x)))
+
+
+@pytest.mark.parametrize("r_in", R_INS)
+def test_two_layer_network_bitexact(r_in):
+    """Acceptance criterion: >=2-layer network end-to-end per r_in."""
+    r_w = min(r_in, 4)
+    specs = [LayerSpec(m=8, k=144, n=64, r_in=r_in, r_w=r_w, r_out=8),
+             LayerSpec(m=8, k=64, n=32, r_in=r_in, r_w=r_w, r_out=8)]
+    eng, params, x = _engine_case(specs, seed=r_in)
+    y = eng(params, x)
+    y_ref = eng.reference(params, x)
+    assert y.shape == (8, 32)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_ref))
+
+
+def test_multi_tile_digital_recombination():
+    """K > 1152 splits into row tiles (digital partial-sum requantization);
+    N > 64 at r_w=4 splits into column tiles."""
+    specs = [LayerSpec(m=4, k=2304, n=80, r_in=8, r_w=4, r_out=8)]
+    eng, params, x = _engine_case(specs, seed=3, m=4)
+    lp = eng.plan.layers[0]
+    assert len(lp.k_slices) == 2 and lp.mp.needs_digital_accum
+    assert len(lp.n_slices) == 2
+    np.testing.assert_array_equal(np.asarray(eng(params, x)),
+                                  np.asarray(eng.reference(params, x)))
+
+
+def test_mixed_precision_network_shares_variants():
+    """Per-layer precisions dispatch to a deduplicated variant table."""
+    specs = [LayerSpec(m=8, k=72, n=64, r_in=8, r_w=4),
+             LayerSpec(m=8, k=64, n=64, r_in=2, r_w=1),
+             LayerSpec(m=8, k=64, n=16, r_in=8, r_w=4)]
+    eng, params, x = _engine_case(specs, seed=7)
+    assert len(eng.plan.precisions) == 2        # (8,4,8) reused by layer 3
+    np.testing.assert_array_equal(np.asarray(eng(params, x)),
+                                  np.asarray(eng.reference(params, x)))
+
+
+def test_plan_validates_layer_chain():
+    with pytest.raises(ValueError, match="chain mismatch"):
+        plan_network([LayerSpec(m=1, k=8, n=16), LayerSpec(m=1, k=32, n=8)])
+
+
+def test_plan_counts_macro_evals():
+    plan = plan_network([LayerSpec(m=1, k=2304, n=80, r_in=8, r_w=4)])
+    assert plan.total_macro_evals == 4          # 2 row tiles x 2 col tiles
+
+
+def test_run_network_functional_entry():
+    """Module-level entry points accept a hand-built plan."""
+    plan = plan_network([LayerSpec(m=8, k=40, n=16)], EngineConfig())
+    params = CIMInferenceEngine(
+        [LayerSpec(m=8, k=40, n=16)]).init_params(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 40))
+    y = run_network(plan, params, x)
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray(run_network_reference(plan, params, x)))
+
+
+def test_engine_mode_matches_fakequant_layer():
+    """cim_layers mode="engine" tracks the fakequant training path: same
+    quantizers, same tile math; only the zero-point folding is rearranged
+    (inside vs outside the ADC floor), so codes may differ by float-ulp on
+    exact floor boundaries — bound the output difference by one ADC LSB in
+    dequantized units."""
+    cfg = cl.CIMConfig(mode="fakequant")
+    p = cl.init_cim_linear(jax.random.PRNGKey(0), 144, 32, cfg=cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 144))
+    y_fq = cl.cim_linear_apply(p, x, cfg)
+    y_eng = cl.cim_linear_apply(p, x, cfg.replace(mode="engine"))
+    assert y_eng.shape == y_fq.shape
+    err = float(jnp.max(jnp.abs(y_eng - y_fq)))
+    scale = float(jnp.max(jnp.abs(y_fq))) + 1e-9
+    assert err <= 0.02 * scale, (err, scale)
+
+
+def test_leading_batch_dims():
+    specs = [LayerSpec(m=12, k=40, n=16, r_in=4, r_w=2)]
+    eng = CIMInferenceEngine(specs)
+    params = eng.init_params(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 4, 40))
+    y = eng(params, x)
+    assert y.shape == (3, 4, 16)
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.asarray(eng.reference(params, x)))
+
+
+def test_perf_report_schedule():
+    specs = [LayerSpec(m=32, k=576, n=64, r_in=8, r_w=4, kernel=(3, 3)),
+             LayerSpec(m=32, k=64, n=32, r_in=8, r_w=4)]
+    eng = CIMInferenceEngine(specs)
+    rep = eng.perf_report()
+    assert set(rep) == {"layers", "per_precision", "total"}
+    assert len(rep["layers"]) == 2
+    assert rep["total"]["tops_per_w"] > 0
+    assert "r8x4b" in rep["per_precision"]
+
+
+def test_perf_report_precision_scaling():
+    """Modeled efficiency rises monotonically as precision drops (Fig. 22)."""
+    def ee(r_in, r_w):
+        specs = [LayerSpec(m=32, k=1152, n=64, r_in=r_in, r_w=r_w,
+                           kernel=(3, 3))]
+        return CIMInferenceEngine(specs).perf_report()["total"]["tops_per_w"]
+    effs = [ee(8, 4), ee(4, 4), ee(2, 2), ee(1, 1)]
+    assert all(a < b for a, b in zip(effs, effs[1:])), effs

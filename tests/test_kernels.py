@@ -7,7 +7,7 @@ import pytest
 from repro.core import digital_ref as dr
 from repro.core.hw import DEFAULT_MACRO
 from repro.kernels.cim_mbiw import ops
-from repro.kernels.cim_mbiw.ref import cim_matmul_ref
+from repro.kernels.cim_mbiw.ref import cim_matmul_ref, cim_matmul_ref_serial
 
 
 def _rand_case(m, k, n, r_in, r_w, seed):
@@ -71,6 +71,40 @@ def test_row_tiled_layer_matches_fakequant_layer():
             / (gamma * g0)
     np.testing.assert_allclose(np.asarray(dp_hat), np.asarray(want),
                                rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("r_w", (1, 2, 4))
+@pytest.mark.parametrize("r_in", (1, 2, 4, 8))
+def test_precision_variant_matches_serial_oracle(r_in, r_w):
+    """Dispatch variant == direct oracle == literal per-precision serial
+    walk (bit-serial <=2b / nibble-serial >=3b input planes, 2^b weight
+    column combination)."""
+    r_out = 8
+    x, w, gamma, beta = _rand_case(8, 72, 16, r_in, r_w, seed=r_in + 2 * r_w)
+    cfg = DEFAULT_MACRO
+    units = cfg.units_for_rows(72)
+    g0 = dr.adc_gain_factor(r_in, r_w, r_out, units * cfg.rows_per_unit,
+                            cfg.swing_efficiency(units), cfg.alpha_adc())
+    fn = ops.kernel_variant(ops.KernelPrecision(r_in, r_w, r_out),
+                            bm=128, bn=128, bk=128)
+    got = fn(x, w, gamma, beta, g0)
+    want = cim_matmul_ref(x, w, gamma, beta, g0=g0, r_out=r_out)
+    serial = cim_matmul_ref_serial(x, w, gamma, beta, r_in=r_in, r_w=r_w,
+                                   r_out=r_out, g0=g0)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(serial), np.asarray(want))
+
+
+def test_kernel_variant_cache_dedup():
+    """Variants are shared across r_w (weights pre-decoded) and across
+    r_in values with the same plane layout."""
+    a = ops.kernel_variant(ops.KernelPrecision(8, 1, 8))
+    b = ops.kernel_variant(ops.KernelPrecision(8, 4, 8))
+    c = ops.kernel_variant(ops.KernelPrecision(5, 4, 8))   # also 2x4b planes
+    d = ops.kernel_variant(ops.KernelPrecision(4, 4, 8))   # 1 plane
+    e = ops.kernel_variant(ops.KernelPrecision(8, 4, 4))   # other epilogue
+    assert a is b is c
+    assert d is not a and e is not a
 
 
 def test_split_planes():

@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:               # degrade to the deterministic stub
+    from hypofallback import given, settings, st
 
 from repro.core import abn as abn_lib
 from repro.core.hw import DEFAULT_MACRO
