@@ -69,13 +69,50 @@ def bench_precision_sweep(m=128, k=1152, n=64, iters=3):
     return rows
 
 
+def bench_conv_sweep(batch=4, h=14, w=14, c_in=16, c_out=32, iters=2):
+    """Conv front-end sweep: a 3x3 conv layer through the engine's im2col
+    streaming + kernel dispatch at each precision point, checked bit-exact
+    against the digital conv reference (engine.reference)."""
+    from repro.core.mapping import conv_layer_spec
+    from repro.runtime import CIMInferenceEngine
+
+    rows = []
+    for r_in, r_w in PRECISIONS:
+        spec = conv_layer_spec(batch, h, w, c_in, c_out, kh=3, kw=3,
+                               stride=1, padding=1, r_in=r_in, r_w=r_w)
+        eng = CIMInferenceEngine([spec], activations=["none"])
+        params = eng.init_params(jax.random.PRNGKey(r_in + r_w))
+        x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(0),
+                                          (batch, h, w, c_in)))
+        out = eng(params, x)
+        out.block_until_ready()
+        t0 = time.time()
+        for _ in range(iters):
+            eng(params, x).block_until_ready()
+        us = (time.time() - t0) / iters * 1e6
+        match = bool(jnp.all(out == eng.reference(params, x)))
+        macs = 2.0 * spec.m * spec.k * spec.n
+        gops = macs / (us * 1e-6) / 1e9
+        rows.append((r_in, r_w, us, gops, match))
+    return rows
+
+
 def main():
+    ok = True
     for (m, k, n) in ((128, 1152, 64), (256, 1152, 256), (512, 512, 128)):
         us, match = bench(m, k, n)
+        ok &= match
         print(f"kernel_cim_mbiw_{m}x{k}x{n},{us:.0f},match{match}")
     for r_in, r_w, planes, us, gops, match in bench_precision_sweep():
+        ok &= match
         print(f"kernel_prec_rin{r_in}_rw{r_w},{us:.0f},"
               f"{gops:.1f}GOPS_planes{planes}_match{match}")
+    for r_in, r_w, us, gops, match in bench_conv_sweep():
+        ok &= match
+        print(f"conv_engine_rin{r_in}_rw{r_w},{us:.0f},"
+              f"{gops:.1f}GOPS_match{match}")
+    if not ok:
+        raise SystemExit("oracle mismatch in kernel/conv sweep (see log)")
 
 
 if __name__ == "__main__":

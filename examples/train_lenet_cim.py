@@ -5,6 +5,7 @@ under the voltage-domain behavioural macro — the paper's co-design flow.
   PYTHONPATH=src python examples/train_lenet_cim.py [--epochs 4]
 """
 import argparse
+import functools
 import time
 
 import jax
@@ -46,7 +47,7 @@ def main():
         params, opt, _ = adamw_update(params, g, opt, ocfg)
         return params, opt, l
 
-    @jax.jit
+    @functools.partial(jax.jit, static_argnames=("cim",))
     def accuracy(params, cim):
         logits = lenet_forward(params, xte, cim)
         return jnp.mean(jnp.argmax(logits, -1) == yte)
@@ -67,6 +68,19 @@ def main():
     logits_sim = lenet_forward(params, xte[:128], cim_eval.replace(mode="sim"))
     acc_sim = float(jnp.mean(jnp.argmax(logits_sim, -1) == yte[:128]))
     print(f"voltage-domain macro eval (128 imgs): acc={acc_sim:.3f}")
+
+    # inference-runtime check: the same images through the conv front-end of
+    # the precision-scalable engine (im2col streaming -> Pallas kernels)
+    logits_eng = lenet_forward(params, xte[:128],
+                               cim_eval.replace(mode="engine"))
+    acc_eng = float(jnp.mean(jnp.argmax(logits_eng, -1) == yte[:128]))
+    logits_fq = lenet_forward(params, xte[:128], cim_eval)
+    agree = float(jnp.mean(jnp.argmax(logits_eng, -1)
+                           == jnp.argmax(logits_fq, -1)))
+    from repro.models.cnn import lenet_engine
+    rep = lenet_engine(128, cim=cim_eval).perf_report()["total"]
+    print(f"engine eval (128 imgs): acc={acc_eng:.3f}, top-1 agreement with "
+          f"fakequant={agree:.3f}, modeled {rep['tops_per_w']:.1f} TOPS/W")
 
 
 if __name__ == "__main__":

@@ -70,8 +70,8 @@ def analytic_log_gamma_init(k: int, cfg: CIMConfig,
     expected DP std of one macro row-tile to `target_frac` of the ADC
     half-range.  Assumes amax-scaled ~N activations/weights, for which the
     integer codes have std ~2^r_in/8 and ~2^(r_w-1)/2."""
-    k_tile = min(k, cfg.macro.n_rows)
-    g0 = _code_gain(cfg, k_tile)
+    k_tile = -(-k // (-(-k // cfg.macro.n_rows)))   # rows per even row tile
+    g0 = _code_gain(cfg, k)
     sigma_dp = (k_tile ** 0.5) * (2.0 ** cfg.r_in / 8.0) * (2.0 ** (cfg.r_w - 1) / 2.0)
     gamma = target_frac * 2.0 ** (cfg.r_out - 1) / (g0 * sigma_dp)
     import math
@@ -92,10 +92,15 @@ def init_cim_linear(key: jax.Array, k: int, n: int,
 
 
 def _code_gain(cfg: CIMConfig, k_dim: int) -> float:
-    """Unity-gain codes-per-integer-dp (Eq. 7 collapsed, digital_ref)."""
+    """Unity-gain codes-per-integer-dp (Eq. 7 collapsed, digital_ref).
+
+    K > n_rows splits into the even row tiles of mapping.map_layer, so the
+    swing (and hence g0) follows rows-per-tile — keeping this path in
+    lockstep with the runtime engine's per-tile ADC configuration."""
     macro = cfg.macro
     if cfg.adaptive_swing:
-        rows = min(k_dim, macro.n_rows)
+        row_tiles = -(-k_dim // macro.n_rows)
+        rows = -(-k_dim // row_tiles)
         units = macro.units_for_rows(rows)
     else:
         units = macro.n_units          # fixed full-array swing (baseline)
@@ -190,12 +195,12 @@ def _fakequant_forward(params: Dict, x: jnp.ndarray, cfg: CIMConfig,
 
     # K > n_rows splits into row tiles, each with its own ADC conversion;
     # partial codes are dequantized and summed digitally by the host —
-    # exactly the macro-tiling of core/mapping.py.
-    n_rows = cfg.macro.n_rows
-    row_tiles = -(-k_dim // n_rows)
+    # exactly the macro-tiling of core/mapping.py (even split_k_slices,
+    # matching the runtime engine's schedule).
+    row_tiles = -(-k_dim // cfg.macro.n_rows)
     dp_hat = jnp.zeros(x32.shape[:-1] + (n,), jnp.float32)
-    for t in range(row_tiles):
-        ks, ke = t * n_rows, min((t + 1) * n_rows, k_dim)
+    for ks, ksz in mapping.split_k_slices(k_dim, row_tiles):
+        ke = ks + ksz
         # integer dot product (DP array + MBIW stages); exact in fp32 for
         # one macro row-tile (|dp| <= 1152*255*15 < 2^24).
         dp = aq.q[..., ks:ke] @ wq.q[ks:ke, :]
@@ -290,23 +295,43 @@ def _sim_forward(params: Dict, x: jnp.ndarray, cfg: CIMConfig,
 
 
 def cim_conv2d_apply(params: Dict, x: jnp.ndarray, cfg: CIMConfig,
-                     stride: int = 1, padding: int = 1,
+                     stride: int = 1, padding=1,
                      key: Optional[jax.Array] = None) -> jnp.ndarray:
-    """Conv2D via im2col + cim_linear (the accelerator's stage (ii)).
+    """Conv2D through the CIM stack (the accelerator's stage (ii)).
 
     x: (B, H, W, C_in); params["w"]: (kh*kw*C_in, C_out) flattened filters.
+    `padding` accepts an int, "SAME"/"VALID", or explicit per-edge pairs
+    (mapping.resolve_padding).  mode="engine" plans the conv natively (the
+    runtime performs the im2col streaming itself); every other mode
+    materializes the patch tensor and detours through cim_linear_apply.
     """
+    # lazy: runtime.engine lazily imports this module for init
+    from repro.runtime.engine import im2col_patches
+
     k_flat, c_out = params["w"].shape
     kh = kw = int(round((k_flat // x.shape[-1]) ** 0.5))
     assert kh * kw * x.shape[-1] == k_flat, (kh, kw, x.shape, k_flat)
-    patches = jax.lax.conv_general_dilated_patches(
-        x, (kh, kw), (stride, stride),
-        padding=[(padding, padding), (padding, padding)],
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))       # (B, OH, OW, kh*kw*C)
-    # conv_general_dilated_patches returns channel-major (C*kh*kw) features;
-    # our weights are laid out (kh*kw*C) — reorder to match.
-    b, oh, ow, _ = patches.shape
-    c_in = x.shape[-1]
-    patches = patches.reshape(b, oh, ow, c_in, kh * kw)
-    patches = jnp.swapaxes(patches, -1, -2).reshape(b, oh, ow, k_flat)
+    b, h, w, c_in = x.shape
+    spec = mapping.conv_layer_spec(
+        batch=b, h=h, w=w, c_in=c_in, c_out=c_out, kh=kh, kw=kw,
+        stride=stride, padding=padding,
+        r_in=cfg.r_in, r_w=cfg.r_w, r_out=cfg.r_out)
+    if cfg.mode == "engine":
+        return _engine_conv_forward(params, x, cfg, spec)
+    patches = im2col_patches(x, spec.conv)                # (B, OH, OW, kh*kw*C)
     return cim_linear_apply(params, patches, cfg, key)
+
+
+def _engine_conv_forward(params: Dict, x: jnp.ndarray, cfg: CIMConfig,
+                         spec: mapping.LayerSpec) -> jnp.ndarray:
+    """Route a conv layer through the runtime's native conv front-end."""
+    from repro.runtime import engine as rt
+
+    if cfg.noise.enabled:
+        raise ValueError(
+            "mode='engine' is the noise-free deployed path; use "
+            "mode='fakequant'/'sim' for noise-injection studies")
+    ecfg = rt.EngineConfig(macro=cfg.macro, adaptive_swing=cfg.adaptive_swing,
+                           gamma_bits=cfg.gamma_bits, max_gamma=cfg.max_gamma)
+    plan = rt.plan_network([spec], ecfg)
+    return rt.run_network(plan, [params], x).astype(x.dtype)

@@ -14,15 +14,74 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Tuple
+from typing import List, Optional, Tuple, Union
 
 from repro.core.hw import CIMMacroConfig, DEFAULT_MACRO
+
+Padding = Union[int, str, Tuple[Tuple[int, int], Tuple[int, int]]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvGeometry:
+    """NHWC conv geometry behind a LayerSpec's im2col GEMM view.
+
+    The engine uses it to extract patch tiles (im2col streaming) and to
+    reshape the GEMM output back to (B, out_h, out_w, c_out); the perf
+    model uses it for the Eq. (8)-(10) input/output bandwidth terms."""
+    h: int
+    w: int
+    c_in: int
+    c_out: int
+    kh: int
+    kw: int
+    stride: int
+    padding: Tuple[Tuple[int, int], Tuple[int, int]]   # ((top,bot),(lt,rt))
+    out_h: int
+    out_w: int
+    batch: int
+
+    @property
+    def spatial_in(self) -> Tuple[int, int, int]:
+        return (self.h, self.w, self.c_in)
+
+    @property
+    def spatial_out(self) -> Tuple[int, int, int]:
+        return (self.out_h, self.out_w, self.c_out)
+
+
+def resolve_padding(padding: Padding, kh: int, kw: int, h: int, w: int,
+                    stride: int) -> Tuple[Tuple[int, int], Tuple[int, int]]:
+    """Normalize int / "SAME" / "VALID" / explicit pairs to per-edge pads."""
+    if isinstance(padding, str):
+        p = padding.upper()
+        if p == "VALID":
+            return ((0, 0), (0, 0))
+        if p == "SAME":
+            pads = []
+            for dim, kd in ((h, kh), (w, kw)):
+                out = -(-dim // stride)
+                total = max((out - 1) * stride + kd - dim, 0)
+                pads.append((total // 2, total - total // 2))
+            return (pads[0], pads[1])
+        raise ValueError(f"padding {padding!r} not in ('SAME', 'VALID')")
+    if isinstance(padding, int):
+        if padding < 0:
+            raise ValueError(f"padding must be >= 0, got {padding}")
+        return ((padding, padding), (padding, padding))
+    (pt, pb), (pl, pr) = padding
+    if min(pt, pb, pl, pr) < 0:
+        raise ValueError(f"padding must be >= 0, got {padding}")
+    return ((int(pt), int(pb)), (int(pl), int(pr)))
 
 
 @dataclasses.dataclass(frozen=True)
 class LayerSpec:
     """A GEMM of shape [M, K] x [K, N] (conv layers pass K = kh*kw*C_in
-    after im2col, M = batch*out_h*out_w)."""
+    after im2col, M = batch*out_h*out_w).
+
+    `conv` tags the spec as a convolution: the runtime engine then expects
+    NHWC activations and performs the im2col itself (conv_layer_spec builds
+    tagged specs); `conv is None` means a plain dense GEMM."""
     m: int
     k: int
     n: int
@@ -30,6 +89,11 @@ class LayerSpec:
     r_w: int = 4
     r_out: int = 8
     kernel: Tuple[int, int] = (1, 1)   # (kh, kw) for conv layers
+    conv: Optional[ConvGeometry] = None
+
+    @property
+    def op(self) -> str:
+        return "dense" if self.conv is None else "conv"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,11 +134,31 @@ def map_layer(spec: LayerSpec, cfg: CIMMacroConfig = DEFAULT_MACRO
 def conv_layer_spec(batch: int, h: int, w: int, c_in: int, c_out: int,
                     kh: int = 3, kw: int = 3, stride: int = 1,
                     r_in: int = 8, r_w: int = 4, r_out: int = 8,
-                    padding: int = 1) -> LayerSpec:
-    oh = (h + 2 * padding - kh) // stride + 1
-    ow = (w + 2 * padding - kw) // stride + 1
+                    padding: Padding = 1) -> LayerSpec:
+    """Conv-tagged LayerSpec: validates geometry and propagates stride &
+    padding into out_h/out_w (and hence M = batch*out_h*out_w).
+
+    `padding` accepts an int (symmetric), "SAME"/"VALID", or explicit
+    ((top, bottom), (left, right)) pairs."""
+    if min(batch, h, w, c_in, c_out, kh, kw) < 1:
+        raise ValueError(
+            f"conv dims must be >= 1, got batch={batch} h={h} w={w} "
+            f"c_in={c_in} c_out={c_out} kh={kh} kw={kw}")
+    if stride < 1:
+        raise ValueError(f"stride must be >= 1, got {stride}")
+    pads = resolve_padding(padding, kh, kw, h, w, stride)
+    oh = (h + pads[0][0] + pads[0][1] - kh) // stride + 1
+    ow = (w + pads[1][0] + pads[1][1] - kw) // stride + 1
+    if oh < 1 or ow < 1:
+        raise ValueError(
+            f"kernel {kh}x{kw} (stride {stride}, padding {pads}) does not "
+            f"fit a {h}x{w} input: out {oh}x{ow}")
+    geom = ConvGeometry(h=h, w=w, c_in=c_in, c_out=c_out, kh=kh, kw=kw,
+                        stride=stride, padding=pads, out_h=oh, out_w=ow,
+                        batch=batch)
     return LayerSpec(m=batch * oh * ow, k=kh * kw * c_in, n=c_out,
-                     r_in=r_in, r_w=r_w, r_out=r_out, kernel=(kh, kw))
+                     r_in=r_in, r_w=r_w, r_out=r_out, kernel=(kh, kw),
+                     conv=geom)
 
 
 def split_k_slices(k: int, row_tiles: int) -> List[Tuple[int, int]]:

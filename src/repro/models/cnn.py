@@ -8,13 +8,14 @@ noise injection during training.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.cim_layers import (CIMConfig, cim_conv2d_apply,
                                    cim_linear_apply, init_cim_linear)
+from repro.core.mapping import LayerSpec, conv_layer_spec
 
 
 def init_mlp(key: jax.Array, dims=(784, 512, 128, 10),
@@ -50,9 +51,63 @@ def init_lenet(key: jax.Array, n_classes: int = 10, in_ch: int = 1,
     }
 
 
+LENET_LAYER_ORDER = ("conv1", "conv2", "fc1", "fc2")
+
+
+def lenet_engine_specs(batch: int, h: int = 28, w: int = 28, in_ch: int = 1,
+                       n_classes: int = 10,
+                       cim: Optional[CIMConfig] = None
+                       ) -> Tuple[List[LayerSpec], List[str], List[int]]:
+    """The LeNet network as one engine schedule: conv-tagged + dense
+    LayerSpecs with matching activations and max-pool epilogues — the
+    arguments of `CIMInferenceEngine(specs, activations=..., pools=...)`."""
+    cim = cim if cim is not None else CIMConfig()
+    r = dict(r_in=cim.r_in, r_w=cim.r_w, r_out=cim.r_out)
+    ph, pw = h // 2, w // 2                 # after each 2x2 max-pool
+    qh, qw = ph // 2, pw // 2
+    specs = [
+        conv_layer_spec(batch, h, w, in_ch, 16, kh=3, kw=3, padding=1, **r),
+        conv_layer_spec(batch, ph, pw, 16, 32, kh=3, kw=3, padding=1, **r),
+        LayerSpec(m=batch, k=32 * qh * qw, n=128, **r),
+        LayerSpec(m=batch, k=128, n=n_classes, **r),
+    ]
+    return specs, ["relu", "relu", "relu", "none"], [2, 2, 1, 1]
+
+
+def lenet_engine(batch: int, h: int = 28, w: int = 28, in_ch: int = 1,
+                 n_classes: int = 10, cim: Optional[CIMConfig] = None):
+    """One CIMInferenceEngine executing the whole LeNet (conv1 -> pool ->
+    conv2 -> pool -> fc1 -> fc2) through the Pallas kernel variants."""
+    from repro.runtime import CIMInferenceEngine, EngineConfig
+
+    cim = cim if cim is not None else CIMConfig()
+    specs, acts, pools = lenet_engine_specs(batch, h, w, in_ch, n_classes,
+                                            cim)
+    ecfg = EngineConfig(macro=cim.macro, adaptive_swing=cim.adaptive_swing,
+                        gamma_bits=cim.gamma_bits, max_gamma=cim.max_gamma)
+    return CIMInferenceEngine(specs, ecfg, activations=acts, pools=pools)
+
+
+def lenet_params_list(params: Dict) -> List[Dict]:
+    """init_lenet's name-keyed params in the engine's positional order."""
+    return [params[name] for name in LENET_LAYER_ORDER]
+
+
 def lenet_forward(params: Dict, x: jnp.ndarray, cim: CIMConfig,
                   key: Optional[jax.Array] = None) -> jnp.ndarray:
-    """x (B, 28, 28, C) -> logits."""
+    """x (B, 28, 28, C) -> logits.
+
+    mode="engine" runs the whole network — conv1/conv2/fc1/fc2 plus the
+    pooling and flatten epilogues — through one CIMInferenceEngine plan
+    (the jit cache is keyed on the plan, so repeated calls at one batch
+    shape reuse the compiled schedule)."""
+    if cim.mode == "engine":
+        if cim.noise.enabled:
+            raise ValueError("mode='engine' is the noise-free deployed path")
+        b, h, w, c = x.shape
+        eng = lenet_engine(b, h, w, c, params["fc2"]["w"].shape[1], cim)
+        return eng(lenet_params_list(params), x)
+
     def nk():
         nonlocal key
         if key is None:

@@ -53,8 +53,12 @@ def cim_eval_time_ns(r_in: int, r_w: int, r_out: int,
 def cycle_model(spec: LayerSpec, *, clock_ns: float = 10.0,
                 cfg: CIMMacroConfig = DEFAULT_MACRO) -> CyclePerf:
     """Eqs. (8)-(10) for one output-map value of a conv layer."""
-    k = spec.kernel[0]
-    c_in = max(spec.k // (spec.kernel[0] * spec.kernel[1]), 1)
+    if spec.conv is not None:           # conv-tagged spec: exact geometry
+        k = spec.conv.kh
+        c_in = spec.conv.c_in
+    else:
+        k = spec.kernel[0]
+        c_in = max(spec.k // (spec.kernel[0] * spec.kernel[1]), 1)
     n_cim = max(1, math.ceil(cim_eval_time_ns(spec.r_in, spec.r_w,
                                               spec.r_out, cfg) / clock_ns))
     n_in = (n_cim - 1) + math.ceil(k * spec.r_in * c_in / BW_BITS)
@@ -140,6 +144,8 @@ def schedule_report(plan, *, clock_ns: float = 10.0, pipelined: bool = True,
     tot_ops = tot_ops8 = tot_e = tot_t = 0.0
     for lp in plan.layers:
         rep = ap.layer_report(lp.spec, gamma=gamma, pipelined=pipelined)
+        if hasattr(lp, "macro_evals"):      # planned (k, n) tiles per M-row
+            rep["macro_evals_schedule"] = lp.macro_evals
         layers.append(rep)
         ops = rep["tops"] * 1e12 * rep["time_s"]
         ops8 = rep["tops_8b_norm"] * 1e12 * rep["time_s"]
@@ -190,7 +196,8 @@ class AcceleratorPerfModel:
         ops = self.energy.macro_ops_per_eval(spec, mp) * evals
         ops_norm = self.energy.macro_ops_per_eval(spec, mp, True) * evals
         t_s = total_cycles * self.clock_ns * 1e-9
-        return {
+        rep = {
+            "op": spec.op,
             "macro_evals": evals,
             "cycles_per_output": cycles,
             "total_cycles": total_cycles,
@@ -204,3 +211,11 @@ class AcceleratorPerfModel:
             "macro_fraction": e_macro / (e_macro + e_digital),
             "utilization": mp.utilization,
         }
+        if spec.conv is not None:
+            g = spec.conv
+            rep["conv"] = {
+                "kernel": (g.kh, g.kw), "stride": g.stride,
+                "out_h": g.out_h, "out_w": g.out_w,
+                "macro_evals_per_image": mp.macro_evals * g.out_h * g.out_w,
+            }
+        return rep

@@ -13,6 +13,21 @@ chip's digital partial-sum recombination between row tiles.
     y = engine(params, x)                        # jit-compiled schedule
     y_ref = engine.reference(params, x)          # pure-jnp digital oracle
 
+Convolution front-end: a `LayerSpec` built by `mapping.conv_layer_spec`
+carries its NHWC `ConvGeometry`; the engine then consumes image
+activations directly — the K = kh*kw*C_in row groups of the paper's
+Sec. III/IV conv mapping are formed on the fly by an im2col streaming
+stage (`im2col_patches` + optional `EngineConfig.stream_rows` chunking of
+the patch rows through the kernel), and the GEMM output is reshaped back
+to (B, out_h, out_w, C_out) for the next layer.  Max-pool epilogues
+(`pools`) and the conv -> dense flatten are planned per layer, so a whole
+CNN (e.g. LeNet: conv1 -> pool -> conv2 -> pool -> fc1 -> fc2) runs
+through one engine:
+
+    specs, acts, pools = models.cnn.lenet_engine_specs(batch=128)
+    engine = CIMInferenceEngine(specs, activations=acts, pools=pools)
+    logits = engine(params, images)              # (B, 28, 28, 1) -> (B, 10)
+
 Numerics: under NO_NOISE the engine is bit-exact with `reference` at every
 supported precision — both walk identical tile schedules and evaluate the
 identical ADC floor expression; the kernel's int32 accumulator is exact for
@@ -53,6 +68,9 @@ class EngineConfig:
     bm: int = 128                    # kernel block sizes (MXU-aligned)
     bn: int = 128
     bk: int = 256
+    stream_rows: int = 0             # im2col streaming: GEMM rows per kernel
+                                     # dispatch (0 = single dispatch); bounds
+                                     # the Pallas working set for large maps
 
     def replace(self, **kw) -> "EngineConfig":
         return dataclasses.replace(self, **kw)
@@ -68,10 +86,19 @@ class LayerPlan:
     k_slices: Tuple[Tuple[int, int], ...]  # (start, size) row tiles
     n_slices: Tuple[Tuple[int, int], ...]  # (start, size) col tiles
     activation: str = "none"             # "none" | "relu"
+    pool: int = 1                        # max-pool window/stride epilogue
 
     @property
     def macro_evals(self) -> int:
         return len(self.k_slices) * len(self.n_slices)
+
+    @property
+    def out_shape(self) -> Tuple[int, ...]:
+        """Per-sample feature shape this layer emits (after pooling)."""
+        g = self.spec.conv
+        if g is None:
+            return (self.spec.n,)
+        return (g.out_h // self.pool, g.out_w // self.pool, g.c_out)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,41 +130,107 @@ def _layer_g0(spec: mapping.LayerSpec, mp: mapping.MacroMapping,
 
 
 def plan_layer(spec: mapping.LayerSpec, cfg: EngineConfig = EngineConfig(),
-               activation: str = "none") -> LayerPlan:
+               activation: str = "none", pool: int = 1) -> LayerPlan:
+    if pool < 1:
+        raise ValueError(f"pool must be >= 1, got {pool}")
+    if pool > 1 and spec.conv is None:
+        raise ValueError("pooling epilogue requires a conv layer")
+    if spec.conv is not None:
+        g = spec.conv
+        if spec.k != g.kh * g.kw * g.c_in or spec.n != g.c_out:
+            raise ValueError(
+                f"conv geometry {g} inconsistent with GEMM view "
+                f"k={spec.k} n={spec.n}")
+        if pool > 1 and (g.out_h < pool or g.out_w < pool):
+            raise ValueError(f"pool {pool} larger than conv output "
+                             f"{g.out_h}x{g.out_w}")
     mp = mapping.map_layer(spec, cfg.macro)
     prec = kops.KernelPrecision(spec.r_in, spec.r_w, spec.r_out)
     return LayerPlan(
         spec=spec, mp=mp, precision=prec, g0=_layer_g0(spec, mp, cfg),
         k_slices=tuple(mapping.split_k_slices(spec.k, mp.row_tiles)),
         n_slices=tuple(mapping.split_k_slices(spec.n, mp.col_tiles)),
-        activation=activation)
+        activation=activation, pool=pool)
+
+
+def _check_chain(layers: Sequence[LayerPlan]) -> None:
+    """Feed-forward shape check across the mixed conv/dense chain: a dense
+    layer's K must equal the flattened feature count of its predecessor, a
+    conv layer's (h, w, c_in) must equal the predecessor's spatial output."""
+    prev: Optional[LayerPlan] = None
+    for i, lp in enumerate(layers):
+        g = lp.spec.conv
+        if prev is not None:
+            out = prev.out_shape
+            if g is None:
+                feed = 1
+                for d in out:
+                    feed *= d
+                if feed != lp.spec.k:
+                    raise ValueError(
+                        f"layer chain mismatch: layer {i-1} emits {out} "
+                        f"({feed} features) but layer {i} expects "
+                        f"k={lp.spec.k}")
+            else:
+                if len(out) != 3:
+                    raise ValueError(
+                        f"layer chain mismatch: conv layer {i} needs NHWC "
+                        f"input but layer {i-1} emits flat {out}")
+                if out != g.spatial_in:
+                    raise ValueError(
+                        f"layer chain mismatch: layer {i-1} emits {out} "
+                        f"but conv layer {i} expects {g.spatial_in}")
+                if prev.spec.conv is not None \
+                        and prev.spec.conv.batch != g.batch:
+                    raise ValueError(
+                        f"layer chain mismatch: conv batch "
+                        f"{prev.spec.conv.batch} != {g.batch} at layer {i}")
+        prev = lp
 
 
 def plan_network(specs: Sequence[mapping.LayerSpec],
                  cfg: EngineConfig = EngineConfig(),
-                 activations: Optional[Sequence[str]] = None) -> NetworkPlan:
-    """Plan a feed-forward network: layer i's N must equal layer i+1's K.
+                 activations: Optional[Sequence[str]] = None,
+                 pools: Optional[Sequence[int]] = None) -> NetworkPlan:
+    """Plan a feed-forward network of dense and conv-tagged LayerSpecs.
 
     `activations`: per-layer epilogue nonlinearity; defaults to relu between
     layers and none after the last (the CNN workloads of the paper).
+    `pools`: per-layer max-pool window/stride (1 = none, conv layers only),
+    applied after the activation — together with the automatic conv -> dense
+    flatten this covers the paper's LeNet-class CNNs.
     """
     specs = list(specs)
-    for a, b in zip(specs[:-1], specs[1:]):
-        if a.n != b.k:
-            raise ValueError(f"layer chain mismatch: n={a.n} feeds k={b.k}")
     if activations is None:
         activations = ["relu"] * (len(specs) - 1) + ["none"]
     if len(activations) != len(specs):
         raise ValueError("one activation per layer required")
-    return NetworkPlan(
-        layers=tuple(plan_layer(s, cfg, act)
-                     for s, act in zip(specs, activations)),
-        cfg=cfg)
+    if pools is None:
+        pools = [1] * len(specs)
+    if len(pools) != len(specs):
+        raise ValueError("one pool factor per layer required")
+    layers = tuple(plan_layer(s, cfg, act, pool)
+                   for s, act, pool in zip(specs, activations, pools))
+    _check_chain(layers)
+    return NetworkPlan(layers=layers, cfg=cfg)
 
 
 # ---------------------------------------------------------------------------
 # execution
 # ---------------------------------------------------------------------------
+
+def im2col_patches(x: jnp.ndarray, g: mapping.ConvGeometry) -> jnp.ndarray:
+    """(B, H, W, C_in) -> (B, out_h, out_w, kh*kw*C_in) patch tensor whose
+    trailing axis matches the engine's (K, N) weight layout."""
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (g.kh, g.kw), (g.stride, g.stride), padding=list(g.padding),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    b, oh, ow, kf = patches.shape
+    # conv_general_dilated_patches returns channel-major (C*kh*kw) features;
+    # weights are laid out (kh*kw*C) — reorder to match (cf. cim_layers).
+    patches = patches.reshape(b, oh, ow, g.c_in, g.kh * g.kw)
+    return jnp.swapaxes(patches, -1, -2).reshape(b, oh, ow, kf)
+
 
 def _quantize_inputs(lp: LayerPlan, params: Dict[str, jnp.ndarray],
                      x2: jnp.ndarray, cfg: EngineConfig):
@@ -152,26 +245,25 @@ def _quantize_inputs(lp: LayerPlan, params: Dict[str, jnp.ndarray],
     return aq, wq, gamma
 
 
-def _layer_tiles(lp: LayerPlan, params: Dict[str, jnp.ndarray],
-                 x2: jnp.ndarray, cfg: EngineConfig, *,
-                 matmul) -> jnp.ndarray:
-    """Run one layer's tile schedule; `matmul` evaluates one macro tile
-    (kernel variant or jnp oracle) and returns int32 ADC codes."""
-    aq, wq, gamma = _quantize_inputs(lp, params, x2, cfg)
-    beta = params["abn_beta"]
+def _tile_schedule(lp: LayerPlan, q_rows: jnp.ndarray, aq, wq,
+                   gamma: jnp.ndarray, beta: jnp.ndarray, *,
+                   matmul) -> jnp.ndarray:
+    """One chunk of GEMM rows through the layer's (k, n) tile schedule;
+    `matmul` evaluates one macro tile (kernel variant or jnp oracle) and
+    returns int32 ADC codes.  Returns dp_hat (rows, N) in dp units."""
     mid = 2.0 ** (lp.spec.r_out - 1)
     g0 = lp.g0
     dp_hat = []
     for (ns, nsz) in lp.n_slices:
         ne = ns + nsz
-        acc = jnp.zeros(x2.shape[:-1] + (nsz,), jnp.float32)
+        acc = jnp.zeros((q_rows.shape[0], nsz), jnp.float32)
         for (ks, ksz) in lp.k_slices:
             ke = ks + ksz
             # zero-point: x = q*s + z -> z*colsum is per-channel constant,
             # folded into the ABN offset inside the ADC floor
             zp_dp = (aq.zero / aq.scale) * jnp.sum(wq.q[ks:ke, ns:ne], axis=0)
             beta_eff = beta[ns:ne] + gamma[ns:ne] * g0 * zp_dp
-            codes = matmul(aq.q[..., ks:ke], wq.q[ks:ke, ns:ne],
+            codes = matmul(q_rows[:, ks:ke], wq.q[ks:ke, ns:ne],
                            gamma[ns:ne], beta_eff, g0)
             # digital partial-sum recombination in dp units; dequantizing
             # against the *raw* beta keeps the zero-point contribution in
@@ -179,11 +271,57 @@ def _layer_tiles(lp: LayerPlan, params: Dict[str, jnp.ndarray],
             acc = acc + (codes.astype(jnp.float32) + 0.5 - mid
                          - beta[None, ns:ne]) / (gamma[None, ns:ne] * g0)
         dp_hat.append(acc)
-    y = jnp.concatenate(dp_hat, axis=-1) * aq.scale * wq.scale.reshape(-1)
+    return jnp.concatenate(dp_hat, axis=-1)
+
+
+def _layer_tiles(lp: LayerPlan, params: Dict[str, jnp.ndarray],
+                 x2: jnp.ndarray, cfg: EngineConfig, *,
+                 matmul) -> jnp.ndarray:
+    """Run one layer's tile schedule over (M, K) GEMM rows.  With
+    `cfg.stream_rows` set, rows are streamed through the kernel in chunks
+    (the im2col streaming stage) — quantization stays global, and rows are
+    independent through the elementwise ADC epilogue, so chunking is
+    bit-invariant."""
+    aq, wq, gamma = _quantize_inputs(lp, params, x2, cfg)
+    beta = params["abn_beta"]
+    m = x2.shape[0]
+    chunk = cfg.stream_rows if cfg.stream_rows > 0 else max(m, 1)
+    chunks = [_tile_schedule(lp, aq.q[s:s + chunk], aq, wq, gamma, beta,
+                             matmul=matmul)
+              for s in range(0, max(m, 1), chunk)]
+    dp_hat = chunks[0] if len(chunks) == 1 else jnp.concatenate(chunks, 0)
+    y = dp_hat * aq.scale * wq.scale.reshape(-1)
     if lp.activation == "relu":
         y = jax.nn.relu(y)
     elif lp.activation != "none":
         raise ValueError(f"unknown activation {lp.activation!r}")
+    return y
+
+
+def _run_layer(lp: LayerPlan, params: Dict[str, jnp.ndarray], x: jnp.ndarray,
+               cfg: EngineConfig, *, matmul) -> jnp.ndarray:
+    """One planned layer end-to-end: im2col (conv), tile schedule,
+    activation, pooling, and the reshape back to the next layer's view."""
+    g = lp.spec.conv
+    if g is not None:
+        if x.ndim != 4 or x.shape[1:] != g.spatial_in:
+            raise ValueError(
+                f"conv layer expects (B, {g.h}, {g.w}, {g.c_in}) "
+                f"activations, got {x.shape}")
+        b = x.shape[0]
+        x2 = im2col_patches(x, g).reshape(b * g.out_h * g.out_w, lp.spec.k)
+    else:
+        x2 = x.reshape(x.shape[0], -1)        # conv -> dense flatten (NHWC)
+        if x2.shape[-1] != lp.spec.k:
+            raise ValueError(f"dense layer expects {lp.spec.k} features, "
+                             f"got {x2.shape[-1]} from {x.shape}")
+    y = _layer_tiles(lp, params, x2, cfg, matmul=matmul)
+    if g is not None:
+        y = y.reshape(b, g.out_h, g.out_w, g.c_out)
+    if lp.pool > 1:
+        y = jax.lax.reduce_window(
+            y, -jnp.inf, jax.lax.max, (1, lp.pool, lp.pool, 1),
+            (1, lp.pool, lp.pool, 1), "VALID")
     return y
 
 
@@ -210,19 +348,28 @@ def _reference_matmul(lp: LayerPlan, cfg: EngineConfig):
 
 def _forward(plan: NetworkPlan, params: Params, x: jnp.ndarray,
              reference: bool) -> jnp.ndarray:
-    k0 = plan.layers[0].spec.k
-    if x.shape[-1] != k0:
-        raise ValueError(
-            f"input width {x.shape[-1]} != first layer's k={k0}")
     if len(params) != len(plan.layers):
         raise ValueError(f"{len(params)} param dicts for "
                          f"{len(plan.layers)} planned layers")
-    lead = x.shape[:-1]
-    x2 = x.reshape((-1, x.shape[-1])).astype(jnp.float32)
+    g0 = plan.layers[0].spec.conv
+    if g0 is not None:
+        if x.ndim < 4 or x.shape[-3:] != g0.spatial_in:
+            raise ValueError(
+                f"input shape {x.shape} != first conv layer's "
+                f"(..., {g0.h}, {g0.w}, {g0.c_in})")
+        lead = x.shape[:-3]
+        xc = x.reshape((-1,) + x.shape[-3:]).astype(jnp.float32)
+    else:
+        k0 = plan.layers[0].spec.k
+        if x.shape[-1] != k0:
+            raise ValueError(
+                f"input width {x.shape[-1]} != first layer's k={k0}")
+        lead = x.shape[:-1]
+        xc = x.reshape((-1, x.shape[-1])).astype(jnp.float32)
     for lp, p in zip(plan.layers, params):
         mk = _reference_matmul if reference else _kernel_matmul
-        x2 = _layer_tiles(lp, p, x2, plan.cfg, matmul=mk(lp, plan.cfg))
-    return x2.reshape(lead + (x2.shape[-1],))
+        xc = _run_layer(lp, p, xc, plan.cfg, matmul=mk(lp, plan.cfg))
+    return xc.reshape(lead + xc.shape[1:])
 
 
 @functools.partial(jax.jit, static_argnames=("plan",))
@@ -230,7 +377,10 @@ def run_network(plan: NetworkPlan, params: Params,
                 x: jnp.ndarray) -> jnp.ndarray:
     """Execute the planned schedule through the Pallas kernel variants.
 
-    x: (..., K0) real-valued activations; returns (..., N_last)."""
+    x: (..., K0) real-valued activations for a dense-first plan, or
+    (..., H, W, C_in) NHWC images for a conv-first plan; returns
+    (..., N_last) — or (..., out_h, out_w, C_out) if the last layer is a
+    conv."""
     return _forward(plan, params, x, reference=False)
 
 
@@ -247,9 +397,10 @@ class CIMInferenceEngine:
 
     def __init__(self, specs: Sequence[mapping.LayerSpec],
                  cfg: EngineConfig = EngineConfig(),
-                 activations: Optional[Sequence[str]] = None):
+                 activations: Optional[Sequence[str]] = None,
+                 pools: Optional[Sequence[int]] = None):
         self.cfg = cfg
-        self.plan = plan_network(specs, cfg, activations)
+        self.plan = plan_network(specs, cfg, activations, pools)
 
     def init_params(self, key: jax.Array) -> Params:
         """Distribution-aware per-layer parameters (core/cim_layers init)."""
