@@ -97,6 +97,52 @@ def bench_conv_sweep(batch=4, h=14, w=14, c_in=16, c_out=32, iters=2):
     return rows
 
 
+def bench_noise_sweep(batch=8, n_trials=2, scales=(0.0, 1.0, 2.0)):
+    """Noise-injected engine mode: LeNet on pseudo_mnist through the fast
+    Pallas path at scaled noise operating points, Monte-Carlo trials each.
+
+    Reports per-scale wall-clock per trial, mean accuracy over trials, and
+    determinism (trial 0 re-run under the same seed must be bit-identical)
+    — the software analogue of the paper's Sec. V.A noise studies."""
+    from repro.core.cim_layers import CIMConfig
+    from repro.core.noise_model import NoiseConfig
+    from repro.data.pseudo_mnist import make_dataset
+    from repro.models.cnn import init_lenet, lenet_engine, lenet_params_list
+
+    _, _, xte, yte = make_dataset(n_train=1, n_test=batch)
+    imgs = jnp.asarray(xte)[..., None]
+    labels = jnp.asarray(yte)
+    base = NoiseConfig()
+    rows = []
+    for scale in scales:
+        noise = base.replace(enabled=scale > 0,
+                             thermal_rms_lsb8=base.thermal_rms_lsb8 * scale,
+                             sa_sigma_v=base.sa_sigma_v * scale)
+        cim = CIMConfig(mode="engine", r_in=4, r_w=2, noise=noise)
+        params = lenet_params_list(init_lenet(jax.random.PRNGKey(0),
+                                              cim=cim))
+        eng = lenet_engine(batch, cim=cim)
+        key = jax.random.PRNGKey(7)
+        if noise.enabled:
+            eng.monte_carlo(params, imgs, key, 1).block_until_ready()  # warm
+            t0 = time.time()
+            logits = eng.monte_carlo(params, imgs, key, n_trials)
+            logits.block_until_ready()
+            us = (time.time() - t0) / n_trials * 1e6
+            redo = eng(params, imgs, jax.random.split(key, n_trials)[0])
+            det = bool(jnp.all(logits[0] == redo))
+        else:
+            eng(params, imgs).block_until_ready()
+            t0 = time.time()
+            logits = eng(params, imgs)[None]
+            logits.block_until_ready()
+            us = (time.time() - t0) * 1e6
+            det = bool(jnp.all(logits[0] == eng(params, imgs)))
+        acc = float(jnp.mean(jnp.argmax(logits, -1) == labels[None, :]))
+        rows.append((scale, us, acc, det))
+    return rows
+
+
 def main():
     ok = True
     for (m, k, n) in ((128, 1152, 64), (256, 1152, 256), (512, 512, 128)):
@@ -111,8 +157,12 @@ def main():
         ok &= match
         print(f"conv_engine_rin{r_in}_rw{r_w},{us:.0f},"
               f"{gops:.1f}GOPS_match{match}")
+    for scale, us, acc, det in bench_noise_sweep():
+        ok &= det
+        print(f"noise_engine_x{scale:g},{us:.0f},"
+              f"acc{acc:.2f}_deterministic{det}")
     if not ok:
-        raise SystemExit("oracle mismatch in kernel/conv sweep (see log)")
+        raise SystemExit("oracle/determinism mismatch in sweep (see log)")
 
 
 if __name__ == "__main__":

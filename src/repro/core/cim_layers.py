@@ -20,7 +20,10 @@ architectures).  Three execution modes:
                   macro tiles and executed through the precision-
                   specialized Pallas kernel variants — the deployed
                   inference path, bit-exact with its digital reference
-                  under NO_NOISE.
+                  under NO_NOISE.  With cfg.noise enabled (and a key) the
+                  runtime injects the post-silicon noise model through a
+                  post-kernel epilogue — the fast path for Monte-Carlo
+                  noise studies.
 
 Parameters per layer: {"w": (K, N) fp32 master weights,
                        "abn_log_gamma": (N,), "abn_beta": (N,)}.
@@ -35,6 +38,7 @@ import jax.numpy as jnp
 
 from repro.core import abn as abn_lib
 from repro.core import digital_ref, mapping
+from repro.core import noise_model as nm
 from repro.core.cim_macro import cim_macro_forward
 from repro.core.hw import CIMMacroConfig, DEFAULT_MACRO
 from repro.core.noise_model import NO_NOISE, NoiseConfig
@@ -130,7 +134,7 @@ def cim_linear_apply(params: Dict, x: jnp.ndarray, cfg: CIMConfig,
     if cfg.mode == "sim":
         return _sim_forward(params, x, cfg, key)
     if cfg.mode == "engine":
-        return _engine_forward(params, x, cfg)
+        return _engine_forward(params, x, cfg, key)
     raise ValueError(f"unknown CIM mode {cfg.mode!r}")
 
 
@@ -184,10 +188,13 @@ def _fakequant_forward(params: Dict, x: jnp.ndarray, cfg: CIMConfig,
 
     if cfg.noise.enabled and key is not None:
         key, k2 = jax.random.split(key)
-        # residual per-column SA offset in code units (static per layer call)
-        from repro.core import noise_model as nm
-        raw = nm.sample_sa_offsets(k2, n, cfg.noise, cfg.macro)
-        res_v = nm.calibration_residue(raw, cfg.noise, cfg.macro)
+        # residual SA offset in code units (static per layer call): sampled
+        # per *physical* macro column and gathered per logical channel, so
+        # channels beyond one col tile's budget reuse the same residues —
+        # matching the engine noise path (and the chip, which has exactly
+        # n_cols comparators however wide the layer is)
+        res_v = nm.sample_column_residues(k2, n, cfg.r_w, cfg.noise,
+                                          cfg.macro)
         lsb_v = cfg.macro.alpha_adc() * cfg.macro.vddh / 2.0 ** (cfg.r_out - 1)
         offset_codes = gamma * res_v / lsb_v
     else:
@@ -211,8 +218,9 @@ def _fakequant_forward(params: Dict, x: jnp.ndarray, cfg: CIMConfig,
         if cfg.noise.enabled and key is not None:
             key, k1 = jax.random.split(key)
             # thermal noise referred to dp units through the code gain
-            dp = dp + cfg.noise.thermal_rms_lsb8 / g0 \
-                * (2.0 ** (cfg.r_out - 8)) * jax.random.normal(k1, dp.shape)
+            # (single expression shared with the engine noise epilogue)
+            dp = dp + nm.thermal_sigma_dp(cfg.noise, cfg.r_out, g0) \
+                * jax.random.normal(k1, dp.shape)
         code = adc_quantize(dp + zp_dp, r_out=cfg.r_out, gain=gamma * g0,
                             beta_codes=params["abn_beta"] + offset_codes)
         dp_hat = dp_hat + (code - mid - params["abn_beta"]) / (gamma * g0)
@@ -221,29 +229,27 @@ def _fakequant_forward(params: Dict, x: jnp.ndarray, cfg: CIMConfig,
     return y.astype(compute_dtype)
 
 
-def _engine_forward(params: Dict, x: jnp.ndarray,
-                    cfg: CIMConfig) -> jnp.ndarray:
+def _engine_forward(params: Dict, x: jnp.ndarray, cfg: CIMConfig,
+                    key: Optional[jax.Array] = None) -> jnp.ndarray:
     """Route the layer through the precision-scalable inference runtime.
 
-    Inference only (no STE gradients, no noise injection); the runtime plans
-    the layer into the macro's row/col tile schedule and dispatches the
-    precision-specialized Pallas kernel variant."""
+    Inference only (no STE gradients); the runtime plans the layer into
+    the macro's row/col tile schedule and dispatches the precision-
+    specialized Pallas kernel variant.  cfg.noise propagates into the
+    engine's noise-injected mode (requires `key`)."""
     # imported lazily: runtime.engine depends on this module for init
     from repro.runtime import engine as rt
 
-    if cfg.noise.enabled:
-        raise ValueError(
-            "mode='engine' is the noise-free deployed path; use "
-            "mode='fakequant'/'sim' for noise-injection studies")
     k_dim, n = params["w"].shape
     lead = x.shape[:-1]
     x2 = x.reshape((-1, k_dim))
     spec = mapping.LayerSpec(m=x2.shape[0], k=k_dim, n=n, r_in=cfg.r_in,
                              r_w=cfg.r_w, r_out=cfg.r_out)
     ecfg = rt.EngineConfig(macro=cfg.macro, adaptive_swing=cfg.adaptive_swing,
-                           gamma_bits=cfg.gamma_bits, max_gamma=cfg.max_gamma)
+                           gamma_bits=cfg.gamma_bits, max_gamma=cfg.max_gamma,
+                           noise=cfg.noise)
     plan = rt.plan_network([spec], ecfg)
-    y = rt.run_network(plan, [params], x2)
+    y = rt.run_network(plan, [params], x2, key)
     return y.reshape(lead + (n,)).astype(x.dtype)
 
 
@@ -271,6 +277,16 @@ def _sim_forward(params: Dict, x: jnp.ndarray, cfg: CIMConfig,
     lsb_v = cfg.macro.alpha_adc() * cfg.macro.vddh / 2.0 ** (cfg.r_out - 1)
     beta_v = params["abn_beta"] * lsb_v / gamma           # code -> volts
 
+    # static per-physical-column SA residues, sampled once per layer and
+    # shared by every row tile (the comparators don't change between
+    # tiles) — same column mapping as the fakequant and engine paths
+    if cfg.noise.enabled and key is not None:
+        key, ksa = jax.random.split(key)
+        sa_offset_v = nm.sample_column_residues(ksa, n, cfg.r_w, cfg.noise,
+                                                cfg.macro)
+    else:
+        sa_offset_v = jnp.zeros((n,))
+
     dp_hat = jnp.zeros((x2.shape[0], n), jnp.float32)
     for (ks, ksz) in mapping.split_k_slices(k_dim, mp.row_tiles):
         xs = aq.q[:, ks:ks + ksz]
@@ -281,7 +297,8 @@ def _sim_forward(params: Dict, x: jnp.ndarray, cfg: CIMConfig,
             sub = None
         code = cim_macro_forward(
             xs, ps, r_in=cfg.r_in, r_out=cfg.r_out, gamma=gamma,
-            beta_v=beta_v, cfg=cfg.macro, noise=cfg.noise, key=sub)
+            beta_v=beta_v, cfg=cfg.macro, noise=cfg.noise, key=sub,
+            sa_offset_v=sa_offset_v)
         units = cfg.macro.units_for_rows(ksz)
         n_dp = units * cfg.macro.rows_per_unit
         g0 = digital_ref.adc_gain_factor(
@@ -317,21 +334,20 @@ def cim_conv2d_apply(params: Dict, x: jnp.ndarray, cfg: CIMConfig,
         stride=stride, padding=padding,
         r_in=cfg.r_in, r_w=cfg.r_w, r_out=cfg.r_out)
     if cfg.mode == "engine":
-        return _engine_conv_forward(params, x, cfg, spec)
+        return _engine_conv_forward(params, x, cfg, spec, key)
     patches = im2col_patches(x, spec.conv)                # (B, OH, OW, kh*kw*C)
     return cim_linear_apply(params, patches, cfg, key)
 
 
 def _engine_conv_forward(params: Dict, x: jnp.ndarray, cfg: CIMConfig,
-                         spec: mapping.LayerSpec) -> jnp.ndarray:
-    """Route a conv layer through the runtime's native conv front-end."""
+                         spec: mapping.LayerSpec,
+                         key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """Route a conv layer through the runtime's native conv front-end
+    (cfg.noise propagates into the engine's noise-injected mode)."""
     from repro.runtime import engine as rt
 
-    if cfg.noise.enabled:
-        raise ValueError(
-            "mode='engine' is the noise-free deployed path; use "
-            "mode='fakequant'/'sim' for noise-injection studies")
     ecfg = rt.EngineConfig(macro=cfg.macro, adaptive_swing=cfg.adaptive_swing,
-                           gamma_bits=cfg.gamma_bits, max_gamma=cfg.max_gamma)
+                           gamma_bits=cfg.gamma_bits, max_gamma=cfg.max_gamma,
+                           noise=cfg.noise)
     plan = rt.plan_network([spec], ecfg)
-    return rt.run_network(plan, [params], x).astype(x.dtype)
+    return rt.run_network(plan, [params], x, key).astype(x.dtype)

@@ -100,15 +100,19 @@ def dsci_adc(v_dev: jnp.ndarray, *, r_out: int, gamma: jnp.ndarray,
     mid = 2 ** (r_out - 1)
     if noise.enabled and key is not None:
         # ladder mismatch: per-step relative error, grows with gamma since
-        # the absolute step shrinks but the mismatch floor does not.
+        # the absolute step shrinks but the mismatch floor does not.  The
+        # per-step draw is shared across columns; gamma (scalar or (N,))
+        # only scales its magnitude — so per-channel ABN gains broadcast.
         step_sigma = 0.0015 * jnp.sqrt(jnp.asarray(gamma, jnp.float32))
-        eta = step_sigma * jax.random.normal(key, (r_out,))
+        eta = jax.random.normal(key, (r_out,))
     else:
+        step_sigma = jnp.float32(0.0)
         eta = jnp.zeros((r_out,))
     code = jnp.zeros(v.shape, jnp.int32)
     for k in range(r_out - 1, -1, -1):            # MSB first
         trial = code + (1 << k)
-        thresh = (trial.astype(jnp.float32) - mid) * lsb_v * (1.0 + eta[r_out - 1 - k])
+        thresh = (trial.astype(jnp.float32) - mid) * lsb_v \
+            * (1.0 + step_sigma * eta[r_out - 1 - k])
         code = jnp.where(v >= thresh, trial, code)
     return jnp.clip(code, 0, 2 ** r_out - 1)
 

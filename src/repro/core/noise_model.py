@@ -49,8 +49,12 @@ class NoiseConfig:
     # leakage droop on the accumulation cap
     leak_v_per_us: float = 2.0e-4
 
-    def none() -> "NoiseConfig":  # noqa: N805 - convenience constructor
+    @staticmethod
+    def none() -> "NoiseConfig":
         return NoiseConfig(enabled=False)
+
+    def replace(self, **kw) -> "NoiseConfig":
+        return dataclasses.replace(self, **kw)
 
 
 NO_NOISE = NoiseConfig(enabled=False)
@@ -66,10 +70,25 @@ def thermal_sigma_v(noise: NoiseConfig, cfg: CIMMacroConfig) -> float:
 
 
 def sample_thermal(key: jax.Array, shape, noise: NoiseConfig,
-                   cfg: CIMMacroConfig = DEFAULT_MACRO) -> jnp.ndarray:
+                   cfg: CIMMacroConfig = DEFAULT_MACRO,
+                   dtype=jnp.float32) -> jnp.ndarray:
     if not noise.enabled:
-        return jnp.zeros(shape)
-    return thermal_sigma_v(noise, cfg) * jax.random.normal(key, shape)
+        return jnp.zeros(shape, dtype)
+    return (thermal_sigma_v(noise, cfg)
+            * jax.random.normal(key, shape, dtype)).astype(dtype)
+
+
+def thermal_sigma_dp(noise: NoiseConfig, r_out: int, g0: float) -> float:
+    """Thermal kT/C RMS referred to integer dp units through the code gain.
+
+    The measured 0.52 LSB_8b RMS (gamma=1) maps to r_out-bit code units via
+    2^(r_out-8) and to dp units via the unity-gain code gain g0.  Both the
+    fakequant training path and the engine's noise epilogue draw their
+    thermal term from this single expression, so the paths agree
+    statistically by construction."""
+    if not noise.enabled:
+        return 0.0
+    return noise.thermal_rms_lsb8 * 2.0 ** (r_out - 8) / g0
 
 
 def sample_sa_offsets(key: jax.Array, n_cols: int, noise: NoiseConfig,
@@ -95,14 +114,18 @@ def calibration_residue(offsets_v: jnp.ndarray, noise: NoiseConfig,
     return residual_offsets(offsets_v, cfg)
 
 
-def settle_fraction(n_units_on: int, t_dp_ns: float,
-                    noise: NoiseConfig) -> float:
-    """Fraction of the final DPL deviation reached after T_dp (Fig. 8b)."""
+def settle_fraction(n_units_on, t_dp_ns: float,
+                    noise: NoiseConfig) -> jnp.ndarray:
+    """Fraction of the final DPL deviation reached after T_dp (Fig. 8b).
+
+    `n_units_on` may be a python int or an array of unit counts: the
+    settling curve is pure jnp so it traces/vmaps (e.g. sweeping the split
+    configuration in one shot, Fig. 8c)."""
+    n = jnp.asarray(n_units_on, jnp.float32)
     if not noise.enabled:
-        return 1.0
-    tau = noise.tau0_ns + noise.tau_per_unit_ns * n_units_on
-    import math
-    return 1.0 - math.exp(-t_dp_ns / tau)
+        return jnp.ones_like(n)
+    tau = noise.tau0_ns + noise.tau_per_unit_ns * n
+    return 1.0 - jnp.exp(-jnp.float32(t_dp_ns) / tau)
 
 
 def charge_injection_error(v_in: jnp.ndarray, v_acc: jnp.ndarray,
@@ -114,7 +137,8 @@ def charge_injection_error(v_in: jnp.ndarray, v_acc: jnp.ndarray,
     accumulation voltage through the TG gate-source capacitances; the zero-
     error locus is the diagonal v_in ~ (kappa_acc/kappa_in) * v_acc."""
     if not noise.enabled:
-        return jnp.zeros_like(v_in)
+        return jnp.zeros(jnp.broadcast_shapes(v_in.shape, v_acc.shape),
+                         jnp.result_type(v_in, v_acc))
     mid = cfg.vddl
     return noise.kappa_in * (v_in - mid) - noise.kappa_acc * (v_acc - mid)
 
@@ -125,3 +149,53 @@ def leakage_droop(r_in: int, t_dp_ns: float, noise: NoiseConfig) -> float:
         return 0.0
     window_us = r_in * 2.0 * t_dp_ns * 1e-3
     return noise.leak_v_per_us * window_us
+
+
+def channels_per_col_tile(r_w: int, cfg: CIMMacroConfig = DEFAULT_MACRO
+                          ) -> int:
+    """Output channels one macro col tile carries (cf. mapping.map_layer):
+    one channel per 4-column block at r_w in (3, 4), more at narrow
+    weights."""
+    return cfg.n_blocks * max(1, cfg.cols_per_block // r_w)
+
+
+def sample_column_residues(key: jax.Array, n_channels: int, r_w: int,
+                           noise: NoiseConfig,
+                           cfg: CIMMacroConfig = DEFAULT_MACRO
+                           ) -> jnp.ndarray:
+    """Calibrated SA-offset residues per *logical* output channel (volts).
+
+    The physical offsets are static per macro column: there are exactly
+    `cfg.n_cols` comparators, sampled once, and a layer with more output
+    channels than one col tile carries reuses the same physical columns
+    sequentially — so logical channels j and j + channels_per_col_tile see
+    the *same* residue.  Channel c inside a tile owns r_w adjacent columns
+    of its block; its comparator sits at column c * (n_cols / ch_per_tile).
+    """
+    raw = sample_sa_offsets(key, cfg.n_cols, noise, cfg)
+    res = calibration_residue(raw, noise, cfg)
+    ch_per_tile = channels_per_col_tile(r_w, cfg)
+    c = jnp.arange(n_channels) % ch_per_tile
+    return res[c * (cfg.n_cols // ch_per_tile)]
+
+
+def charge_injection_gain(r_in: int, noise: NoiseConfig,
+                          cfg: CIMMacroConfig = DEFAULT_MACRO) -> float:
+    """Equivalent multiplicative error of the MBIW charge injection,
+    referred to the final accumulated voltage (code units see it as a gain
+    term on g0).
+
+    The per-step bilinear map of `charge_injection_error` makes the
+    recursion  v_{k+1} = (a - kappa_acc) v_k + (1 - a + kappa_in) u_k  with
+    a = alpha_mb.  To first order in kappa, and exactly when every input
+    bit contributes the same per-bit deviation, the accumulated error is
+    proportional to the ideal final voltage with the constant returned
+    here; the weight-parallel combination is linear, so the same constant
+    refers it to the combined MBIW voltage."""
+    if not noise.enabled:
+        return 0.0
+    a = cfg.alpha_mb()
+    geo = (1.0 - a ** r_in) / (1.0 - a)
+    err = (noise.kappa_in * geo
+           - noise.kappa_acc * (geo - r_in * a ** (r_in - 1)))
+    return err / (1.0 - a ** r_in)

@@ -53,7 +53,7 @@ def plane_layout(r_in: int) -> tuple[int, int]:
 
 def _cim_mbiw_kernel(x_ref, w_ref, gamma_ref, beta_ref, o_ref, acc_ref, *,
                      n_k_total: int, n_k_inner: int, plane_shift: int,
-                     g0: float, r_out: int):
+                     g0: float, r_out: int, fuse_adc: bool):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -69,6 +69,11 @@ def _cim_mbiw_kernel(x_ref, w_ref, gamma_ref, beta_ref, o_ref, acc_ref, *,
 
     @pl.when(k == n_k_total - 1)
     def _epilogue():
+        if not fuse_adc:
+            # raw-dp mode: the caller owns the ADC conversion (the engine's
+            # noise epilogue injects pre-floor terms it cannot fuse here)
+            o_ref[...] = acc_ref[...]
+            return
         dp = acc_ref[...].astype(jnp.float32)
         gamma = gamma_ref[...].astype(jnp.float32)      # (1, bn)
         beta = beta_ref[...].astype(jnp.float32)        # (1, bn)
@@ -79,19 +84,22 @@ def _cim_mbiw_kernel(x_ref, w_ref, gamma_ref, beta_ref, o_ref, acc_ref, *,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "plane_shift", "g0", "r_out", "bm", "bn", "bk", "interpret"))
+    "plane_shift", "g0", "r_out", "bm", "bn", "bk", "interpret", "fuse_adc"))
 def cim_mbiw_matmul_planes(x_planes: jnp.ndarray, w_q: jnp.ndarray,
                            gamma: jnp.ndarray, beta: jnp.ndarray, *,
                            plane_shift: int, g0: float, r_out: int,
                            bm: int = 256, bn: int = 256, bk: int = 512,
-                           interpret: bool = True) -> jnp.ndarray:
+                           interpret: bool = True,
+                           fuse_adc: bool = True) -> jnp.ndarray:
     """CIM matmul over input planes; shapes pre-padded to block multiples.
 
     x_planes : (M, P*K) int8 — P nibble planes laid out plane-major along
                the last axis; plane p carries bits [p*plane_shift, ...).
     w_q      : (K, N) int8 odd weights (+/-(2^r_w - 1))
     gamma, beta : (1, N) float32 ABN parameters (beta in ADC codes)
-    returns  : (M, N) int32 ADC codes in [0, 2^r_out - 1]
+    returns  : (M, N) int32 ADC codes in [0, 2^r_out - 1], or the raw int32
+               dp accumulator when `fuse_adc=False` (the noise-injected
+               engine applies its own ADC epilogue after the kernel)
     """
     m, pk = x_planes.shape
     k_dim, n = w_q.shape
@@ -103,7 +111,7 @@ def cim_mbiw_matmul_planes(x_planes: jnp.ndarray, w_q: jnp.ndarray,
 
     kernel = functools.partial(
         _cim_mbiw_kernel, n_k_total=n_k_total, n_k_inner=n_k_inner,
-        plane_shift=plane_shift, g0=g0, r_out=r_out)
+        plane_shift=plane_shift, g0=g0, r_out=r_out, fuse_adc=fuse_adc)
     return pl.pallas_call(
         kernel,
         grid=(m // bm, n // bn, n_k_total),

@@ -89,11 +89,14 @@ def split_planes(x_q: jnp.ndarray, r_in: int,
 
 
 def kernel_variant(prec: KernelPrecision, bm: int = 256, bn: int = 256,
-                   bk: int = 512, interpret: bool = True) -> Callable:
+                   bk: int = 512, interpret: bool = True,
+                   fuse_adc: bool = True) -> Callable:
     """Precision-specialized kernel callable (cached per operating point).
 
     Returned fn: (x_q (M,K) uint<2^r_in, w_q (K,N) odd ints, gamma (N,),
     beta (N,), g0) -> (M,N) int32 ADC codes.  Shapes need not be padded.
+    With `fuse_adc=False` the fn returns the raw int32 dp instead (gamma/
+    beta/g0 ignored): the noise-injected engine epilogue owns the ADC.
 
     The cache is keyed on what the compiled kernel actually depends on —
     the (plane_shift, n_planes) input walk and the r_out epilogue — so
@@ -102,21 +105,22 @@ def kernel_variant(prec: KernelPrecision, bm: int = 256, bn: int = 256,
     """
     shift, n_planes = plane_layout(prec.r_in)
     return _kernel_variant(shift, n_planes, prec.r_out, bm, bn, bk,
-                           interpret)
+                           interpret, fuse_adc)
 
 
 @functools.lru_cache(maxsize=None)
 def _kernel_variant(shift: int, n_planes: int, r_out: int, bm: int, bn: int,
-                    bk: int, interpret: bool) -> Callable:
+                    bk: int, interpret: bool, fuse_adc: bool) -> Callable:
     r_eff = shift * n_planes          # widest r_in with this plane layout
 
     def run(x_q, w_q, gamma, beta, g0: float):
         return cim_matmul(x_q, w_q, gamma, beta, r_in=r_eff, r_out=r_out,
                           g0=g0, plane_shift=shift, bm=bm, bn=bn, bk=bk,
-                          interpret=interpret)
+                          interpret=interpret, fuse_adc=fuse_adc)
     run.plane_shift = shift
     run.n_planes = n_planes
     run.r_out = r_out
+    run.fuse_adc = fuse_adc
     return run
 
 
@@ -124,11 +128,11 @@ def cim_matmul(x_q: jnp.ndarray, w_q: jnp.ndarray, gamma: jnp.ndarray,
                beta: jnp.ndarray, *, r_in: int, r_out: int, g0: float,
                plane_shift: Optional[int] = None,
                bm: int = 256, bn: int = 256, bk: int = 512,
-               interpret: bool = True) -> jnp.ndarray:
+               interpret: bool = True, fuse_adc: bool = True) -> jnp.ndarray:
     """One macro row-tile (K <= n_rows recommended): int inputs -> ADC codes.
 
     x_q: (M, K) unsigned ints < 2^r_in; w_q: (K, N) odd ints; gamma/beta (N,).
-    Returns (M, N) int32 codes.
+    Returns (M, N) int32 codes (raw int32 dp when `fuse_adc=False`).
     """
     m, k_dim = x_q.shape
     _, n = w_q.shape
@@ -151,7 +155,8 @@ def cim_matmul(x_q: jnp.ndarray, w_q: jnp.ndarray, gamma: jnp.ndarray,
 
     codes = cim_mbiw_matmul_planes(
         x_planes, w_q, gamma2, beta2, plane_shift=shift, g0=g0,
-        r_out=r_out, bm=bm, bn=bn, bk=bk, interpret=interpret)
+        r_out=r_out, bm=bm, bn=bn, bk=bk, interpret=interpret,
+        fuse_adc=fuse_adc)
     return codes[:m, :n]
 
 

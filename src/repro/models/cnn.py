@@ -84,7 +84,8 @@ def lenet_engine(batch: int, h: int = 28, w: int = 28, in_ch: int = 1,
     specs, acts, pools = lenet_engine_specs(batch, h, w, in_ch, n_classes,
                                             cim)
     ecfg = EngineConfig(macro=cim.macro, adaptive_swing=cim.adaptive_swing,
-                        gamma_bits=cim.gamma_bits, max_gamma=cim.max_gamma)
+                        gamma_bits=cim.gamma_bits, max_gamma=cim.max_gamma,
+                        noise=cim.noise)
     return CIMInferenceEngine(specs, ecfg, activations=acts, pools=pools)
 
 
@@ -100,13 +101,12 @@ def lenet_forward(params: Dict, x: jnp.ndarray, cim: CIMConfig,
     mode="engine" runs the whole network — conv1/conv2/fc1/fc2 plus the
     pooling and flatten epilogues — through one CIMInferenceEngine plan
     (the jit cache is keyed on the plan, so repeated calls at one batch
-    shape reuse the compiled schedule)."""
+    shape reuse the compiled schedule).  With cim.noise enabled the engine
+    runs in its noise-injected mode and `key` seeds the noise model."""
     if cim.mode == "engine":
-        if cim.noise.enabled:
-            raise ValueError("mode='engine' is the noise-free deployed path")
         b, h, w, c = x.shape
         eng = lenet_engine(b, h, w, c, params["fc2"]["w"].shape[1], cim)
-        return eng(lenet_params_list(params), x)
+        return eng(lenet_params_list(params), x, key=key)
 
     def nk():
         nonlocal key

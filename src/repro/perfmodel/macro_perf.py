@@ -132,12 +132,20 @@ def schedule_report(plan, *, clock_ns: float = 10.0, pipelined: bool = True,
     """Cycle/energy estimates for a runtime engine schedule.
 
     `plan` is a runtime.engine.NetworkPlan (duck-typed: only
-    `plan.layers[i].spec` / `.precision` are read, so there is no perfmodel
-    -> runtime import cycle).  Returns per-layer reports, per-precision
-    aggregates keyed "r{r_in}x{r_w}b", and schedule totals — the model
-    behind the paper's Fig. 22 precision-scaling curves, applied to an
-    executable schedule instead of a lone macro.
+    `plan.layers[i].spec` / `.precision` and `plan.cfg.noise` are read, so
+    there is no perfmodel -> runtime import cycle).  Returns per-layer
+    reports, per-precision aggregates keyed "r{r_in}x{r_w}b", schedule
+    totals, and an echo of the schedule's noise settings (so a Monte-Carlo
+    accuracy report and its perf numbers always carry the operating point
+    they were taken at) — the model behind the paper's Fig. 22
+    precision-scaling curves, applied to an executable schedule instead of
+    a lone macro.
     """
+    noise = getattr(getattr(plan, "cfg", None), "noise", None)
+    if noise is not None and noise.enabled:
+        noise_echo = dict(dataclasses.asdict(noise))
+    else:
+        noise_echo = {"enabled": False}
     ap = AcceleratorPerfModel(clock_ns=clock_ns)
     layers = []
     per_prec: Dict[str, Dict[str, float]] = {}
@@ -146,6 +154,8 @@ def schedule_report(plan, *, clock_ns: float = 10.0, pipelined: bool = True,
         rep = ap.layer_report(lp.spec, gamma=gamma, pipelined=pipelined)
         if hasattr(lp, "macro_evals"):      # planned (k, n) tiles per M-row
             rep["macro_evals_schedule"] = lp.macro_evals
+        if noise_echo["enabled"]:
+            rep["noise"] = dict(noise_echo)   # per-layer copy, no aliasing
         layers.append(rep)
         ops = rep["tops"] * 1e12 * rep["time_s"]
         ops8 = rep["tops_8b_norm"] * 1e12 * rep["time_s"]
@@ -167,6 +177,7 @@ def schedule_report(plan, *, clock_ns: float = 10.0, pipelined: bool = True,
     return {
         "layers": layers,
         "per_precision": per_prec,
+        "noise": noise_echo,
         "total": {
             "time_s": tot_t,
             "energy_j": tot_e,

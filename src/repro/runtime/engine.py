@@ -39,6 +39,21 @@ signed-to-unsigned conversion + beta block does.
 Per-layer precision is free: each layer's (r_in, r_w, r_out) selects its
 kernel variant from a small cached table, so a mixed-precision network
 compiles one kernel per distinct operating point, not per layer.
+
+Noise-injected mode (post-silicon studies, paper Sec. III.E/V.A): with
+`EngineConfig(noise=NoiseConfig(...))` the full equivalent noise model runs
+through the same planned schedule — the kernel variants dispatch in raw-dp
+mode (`fuse_adc=False`) and a vectorized post-kernel epilogue applies, in
+code units and at the exact points the fakequant/sim paths inject them:
+per-physical-column SA offsets + 7b calibration residue (static per macro,
+shared across col tiles), thermal kT/C noise on the dp, DPL settling INL
+and MBIW charge-injection as gain terms on g0, and leakage droop.  Runs
+take a PRNG key (`engine(params, x, key)`); per-tile keys are derived by
+folding (layer, stream chunk, row tile, col tile) indices, so a fixed key
+is fully deterministic while tiles stay statistically independent.
+`CIMInferenceEngine.monte_carlo(params, x, key, n_trials)` stacks seeded
+trials for Monte-Carlo accuracy-vs-noise sweeps.  Under NO_NOISE the fused
+bit-exact path is unchanged.
 """
 from __future__ import annotations
 
@@ -51,7 +66,9 @@ import jax.numpy as jnp
 
 from repro.core import abn as abn_lib
 from repro.core import digital_ref, mapping
+from repro.core import noise_model as nm
 from repro.core.hw import CIMMacroConfig, DEFAULT_MACRO
+from repro.core.noise_model import NO_NOISE, NoiseConfig
 from repro.kernels.cim_mbiw import ops as kops
 
 Params = List[Dict[str, jnp.ndarray]]
@@ -71,6 +88,8 @@ class EngineConfig:
     stream_rows: int = 0             # im2col streaming: GEMM rows per kernel
                                      # dispatch (0 = single dispatch); bounds
                                      # the Pallas working set for large maps
+    noise: NoiseConfig = NO_NOISE    # post-silicon equivalent noise model;
+                                     # enabled -> runs require a PRNG key
 
     def replace(self, **kw) -> "EngineConfig":
         return dataclasses.replace(self, **kw)
@@ -245,26 +264,95 @@ def _quantize_inputs(lp: LayerPlan, params: Dict[str, jnp.ndarray],
     return aq, wq, gamma
 
 
+@dataclasses.dataclass
+class _LayerNoise:
+    """Per-layer noise context of one engine run (built at trace time).
+
+    `offset_codes`/`droop_codes` are per *global* output channel; tiles
+    slice them.  `gain_mult` collects the deterministic INL terms (DPL
+    settling, MBIW charge injection) as a multiplier on the code gain;
+    `sigma_dp` is the thermal RMS in dp units (shared expression with the
+    fakequant path, noise_model.thermal_sigma_dp).  `key` seeds the
+    per-tile thermal draws."""
+    offset_codes: jnp.ndarray        # (N,) static SA residue, code units
+    droop_codes: jnp.ndarray         # (N,) leakage droop, code units
+    gain_mult: jnp.ndarray           # scalar, multiplies gamma * g0 on dp
+    sigma_dp: float                  # thermal RMS in dp units
+    key: jax.Array                   # base key for per-tile thermal draws
+
+
+def _layer_noise(lp: LayerPlan, cfg: EngineConfig, gamma: jnp.ndarray,
+                 key: jax.Array) -> _LayerNoise:
+    """Noise terms of one layer in code units, injected exactly where the
+    fakequant (thermal, SA residue) and sim (settling, charge injection,
+    leakage) paths put them."""
+    noise, macro, spec = cfg.noise, cfg.macro, lp.spec
+    units = lp.mp.units_per_tile if cfg.adaptive_swing else macro.n_units
+    # static per-physical-column SA offsets after 7b calibration, shared
+    # across col tiles (the macro is reused sequentially)
+    res_v = nm.sample_column_residues(jax.random.fold_in(key, 0), spec.n,
+                                      spec.r_w, noise, macro)
+    lsb0_v = macro.alpha_adc() * macro.vddh / 2.0 ** (spec.r_out - 1)
+    offset_codes = gamma * res_v / lsb0_v
+    # leakage droop on V_acc, attenuated by the weight-parallel combination
+    droop_v = nm.leakage_droop(spec.r_in, macro.t_dp_ns, noise) \
+        * (1.0 - 2.0 ** (-spec.r_w))
+    droop_codes = gamma * droop_v / lsb0_v
+    settle = nm.settle_fraction(units, macro.t_dp_ns, noise)
+    ci = nm.charge_injection_gain(spec.r_in, noise, macro)
+    return _LayerNoise(
+        offset_codes=offset_codes, droop_codes=droop_codes,
+        gain_mult=settle * (1.0 + ci),
+        sigma_dp=nm.thermal_sigma_dp(noise, spec.r_out, lp.g0),
+        key=jax.random.fold_in(key, 1))
+
+
+def _noise_adc_code(lp: LayerPlan, dp: jnp.ndarray, gamma_t: jnp.ndarray,
+                    beta_eff: jnp.ndarray, nctx: _LayerNoise,
+                    n_slice: Tuple[int, int], tkey: jax.Array) -> jnp.ndarray:
+    """ADC conversion of one macro tile's raw dp with the noise terms
+    applied pre-floor — the engine-side mirror of fakequant's
+    adc_quantize(dp + thermal, gain, beta + offsets)."""
+    ns, ne = n_slice
+    dp = dp.astype(jnp.float32) + nctx.sigma_dp * jax.random.normal(
+        tkey, dp.shape)
+    mid = 2.0 ** (lp.spec.r_out - 1)
+    code = jnp.floor(mid + gamma_t * lp.g0 * nctx.gain_mult * dp + beta_eff
+                     + nctx.offset_codes[ns:ne] - nctx.droop_codes[ns:ne])
+    return jnp.clip(code, 0.0, 2.0 ** lp.spec.r_out - 1.0).astype(jnp.int32)
+
+
 def _tile_schedule(lp: LayerPlan, q_rows: jnp.ndarray, aq, wq,
                    gamma: jnp.ndarray, beta: jnp.ndarray, *,
-                   matmul) -> jnp.ndarray:
+                   matmul, nctx: Optional[_LayerNoise] = None,
+                   chunk_idx: int = 0) -> jnp.ndarray:
     """One chunk of GEMM rows through the layer's (k, n) tile schedule;
     `matmul` evaluates one macro tile (kernel variant or jnp oracle) and
-    returns int32 ADC codes.  Returns dp_hat (rows, N) in dp units."""
+    returns int32 ADC codes — or raw int32 dp when a noise context is
+    given, in which case the ADC conversion (with the noise terms and a
+    per-tile PRNG key) runs here.  Returns dp_hat (rows, N) in dp units."""
     mid = 2.0 ** (lp.spec.r_out - 1)
     g0 = lp.g0
     dp_hat = []
-    for (ns, nsz) in lp.n_slices:
+    for ni, (ns, nsz) in enumerate(lp.n_slices):
         ne = ns + nsz
         acc = jnp.zeros((q_rows.shape[0], nsz), jnp.float32)
-        for (ks, ksz) in lp.k_slices:
+        for ki, (ks, ksz) in enumerate(lp.k_slices):
             ke = ks + ksz
             # zero-point: x = q*s + z -> z*colsum is per-channel constant,
             # folded into the ABN offset inside the ADC floor
             zp_dp = (aq.zero / aq.scale) * jnp.sum(wq.q[ks:ke, ns:ne], axis=0)
             beta_eff = beta[ns:ne] + gamma[ns:ne] * g0 * zp_dp
-            codes = matmul(q_rows[:, ks:ke], wq.q[ks:ke, ns:ne],
-                           gamma[ns:ne], beta_eff, g0)
+            out = matmul(q_rows[:, ks:ke], wq.q[ks:ke, ns:ne],
+                         gamma[ns:ne], beta_eff, g0)
+            if nctx is None:
+                codes = out
+            else:
+                # independent thermal draw per (stream chunk, row, col) tile
+                tkey = jax.random.fold_in(jax.random.fold_in(
+                    jax.random.fold_in(nctx.key, chunk_idx), ki), ni)
+                codes = _noise_adc_code(lp, out, gamma[ns:ne], beta_eff,
+                                        nctx, (ns, ne), tkey)
             # digital partial-sum recombination in dp units; dequantizing
             # against the *raw* beta keeps the zero-point contribution in
             # dp_hat, exactly like the fakequant training path
@@ -276,19 +364,21 @@ def _tile_schedule(lp: LayerPlan, q_rows: jnp.ndarray, aq, wq,
 
 def _layer_tiles(lp: LayerPlan, params: Dict[str, jnp.ndarray],
                  x2: jnp.ndarray, cfg: EngineConfig, *,
-                 matmul) -> jnp.ndarray:
+                 matmul, key: Optional[jax.Array] = None) -> jnp.ndarray:
     """Run one layer's tile schedule over (M, K) GEMM rows.  With
     `cfg.stream_rows` set, rows are streamed through the kernel in chunks
     (the im2col streaming stage) — quantization stays global, and rows are
     independent through the elementwise ADC epilogue, so chunking is
-    bit-invariant."""
+    bit-invariant (and under noise, chunks draw from disjoint fold_in
+    keys, so chunking changes no distribution)."""
     aq, wq, gamma = _quantize_inputs(lp, params, x2, cfg)
     beta = params["abn_beta"]
+    nctx = _layer_noise(lp, cfg, gamma, key) if cfg.noise.enabled else None
     m = x2.shape[0]
     chunk = cfg.stream_rows if cfg.stream_rows > 0 else max(m, 1)
     chunks = [_tile_schedule(lp, aq.q[s:s + chunk], aq, wq, gamma, beta,
-                             matmul=matmul)
-              for s in range(0, max(m, 1), chunk)]
+                             matmul=matmul, nctx=nctx, chunk_idx=ci)
+              for ci, s in enumerate(range(0, max(m, 1), chunk))]
     dp_hat = chunks[0] if len(chunks) == 1 else jnp.concatenate(chunks, 0)
     y = dp_hat * aq.scale * wq.scale.reshape(-1)
     if lp.activation == "relu":
@@ -299,7 +389,8 @@ def _layer_tiles(lp: LayerPlan, params: Dict[str, jnp.ndarray],
 
 
 def _run_layer(lp: LayerPlan, params: Dict[str, jnp.ndarray], x: jnp.ndarray,
-               cfg: EngineConfig, *, matmul) -> jnp.ndarray:
+               cfg: EngineConfig, *, matmul,
+               key: Optional[jax.Array] = None) -> jnp.ndarray:
     """One planned layer end-to-end: im2col (conv), tile schedule,
     activation, pooling, and the reshape back to the next layer's view."""
     g = lp.spec.conv
@@ -315,7 +406,7 @@ def _run_layer(lp: LayerPlan, params: Dict[str, jnp.ndarray], x: jnp.ndarray,
         if x2.shape[-1] != lp.spec.k:
             raise ValueError(f"dense layer expects {lp.spec.k} features, "
                              f"got {x2.shape[-1]} from {x.shape}")
-    y = _layer_tiles(lp, params, x2, cfg, matmul=matmul)
+    y = _layer_tiles(lp, params, x2, cfg, matmul=matmul, key=key)
     if g is not None:
         y = y.reshape(b, g.out_h, g.out_w, g.c_out)
     if lp.pool > 1:
@@ -326,8 +417,11 @@ def _run_layer(lp: LayerPlan, params: Dict[str, jnp.ndarray], x: jnp.ndarray,
 
 
 def _kernel_matmul(lp: LayerPlan, cfg: EngineConfig):
+    # under noise the kernel dispatches in raw-dp mode; the noise ADC
+    # epilogue in _tile_schedule owns the conversion
     fn = kops.kernel_variant(lp.precision, bm=cfg.bm, bn=cfg.bn, bk=cfg.bk,
-                             interpret=cfg.interpret)
+                             interpret=cfg.interpret,
+                             fuse_adc=not cfg.noise.enabled)
 
     def matmul(xq, wqt, gamma_t, beta_t, g0):
         return fn(xq, wqt, gamma_t, beta_t, g0)
@@ -335,8 +429,14 @@ def _kernel_matmul(lp: LayerPlan, cfg: EngineConfig):
 
 
 def _reference_matmul(lp: LayerPlan, cfg: EngineConfig):
-    del cfg
     from repro.kernels.cim_mbiw.ref import cim_matmul_ref
+
+    if cfg.noise.enabled:
+        def matmul(xq, wqt, gamma_t, beta_t, g0):
+            # raw integer dp: the shared noise ADC epilogue runs outside,
+            # so kernel and reference stay bit-exact under a common key
+            return xq.astype(jnp.int32) @ wqt.astype(jnp.int32)
+        return matmul
 
     def matmul(xq, wqt, gamma_t, beta_t, g0):
         # the shared oracle keeps the ADC floor expression in float-op
@@ -347,10 +447,15 @@ def _reference_matmul(lp: LayerPlan, cfg: EngineConfig):
 
 
 def _forward(plan: NetworkPlan, params: Params, x: jnp.ndarray,
-             reference: bool) -> jnp.ndarray:
+             reference: bool, key: Optional[jax.Array] = None) -> jnp.ndarray:
     if len(params) != len(plan.layers):
         raise ValueError(f"{len(params)} param dicts for "
                          f"{len(plan.layers)} planned layers")
+    if plan.cfg.noise.enabled and key is None:
+        raise ValueError(
+            "noise-injected engine run requires a PRNG key: pass key= to "
+            "run_network/CIMInferenceEngine.__call__ (or plan with "
+            "noise=NO_NOISE for the deterministic deployed path)")
     g0 = plan.layers[0].spec.conv
     if g0 is not None:
         if x.ndim < 4 or x.shape[-3:] != g0.spatial_in:
@@ -366,29 +471,35 @@ def _forward(plan: NetworkPlan, params: Params, x: jnp.ndarray,
                 f"input width {x.shape[-1]} != first layer's k={k0}")
         lead = x.shape[:-1]
         xc = x.reshape((-1, x.shape[-1])).astype(jnp.float32)
-    for lp, p in zip(plan.layers, params):
+    noisy = plan.cfg.noise.enabled
+    for i, (lp, p) in enumerate(zip(plan.layers, params)):
         mk = _reference_matmul if reference else _kernel_matmul
-        xc = _run_layer(lp, p, xc, plan.cfg, matmul=mk(lp, plan.cfg))
+        lkey = jax.random.fold_in(key, i) if noisy else None
+        xc = _run_layer(lp, p, xc, plan.cfg, matmul=mk(lp, plan.cfg),
+                        key=lkey)
     return xc.reshape(lead + xc.shape[1:])
 
 
 @functools.partial(jax.jit, static_argnames=("plan",))
-def run_network(plan: NetworkPlan, params: Params,
-                x: jnp.ndarray) -> jnp.ndarray:
+def run_network(plan: NetworkPlan, params: Params, x: jnp.ndarray,
+                key: Optional[jax.Array] = None) -> jnp.ndarray:
     """Execute the planned schedule through the Pallas kernel variants.
 
     x: (..., K0) real-valued activations for a dense-first plan, or
     (..., H, W, C_in) NHWC images for a conv-first plan; returns
     (..., N_last) — or (..., out_h, out_w, C_out) if the last layer is a
-    conv."""
-    return _forward(plan, params, x, reference=False)
+    conv.  `key` seeds the noise model when the plan has noise enabled
+    (required then, ignored under NO_NOISE)."""
+    return _forward(plan, params, x, reference=False, key=key)
 
 
 @functools.partial(jax.jit, static_argnames=("plan",))
-def run_network_reference(plan: NetworkPlan, params: Params,
-                          x: jnp.ndarray) -> jnp.ndarray:
-    """Pure-jnp digital oracle of the identical schedule (bit-exact)."""
-    return _forward(plan, params, x, reference=True)
+def run_network_reference(plan: NetworkPlan, params: Params, x: jnp.ndarray,
+                          key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """Pure-jnp digital oracle of the identical schedule (bit-exact with
+    the kernel path — including under noise, where both share the same
+    post-matmul ADC epilogue and per-tile keys)."""
+    return _forward(plan, params, x, reference=True, key=key)
 
 
 class CIMInferenceEngine:
@@ -417,11 +528,30 @@ class CIMInferenceEngine:
                                           cfg=lcfg))
         return params
 
-    def __call__(self, params: Params, x: jnp.ndarray) -> jnp.ndarray:
-        return run_network(self.plan, params, x)
+    def __call__(self, params: Params, x: jnp.ndarray,
+                 key: Optional[jax.Array] = None) -> jnp.ndarray:
+        return run_network(self.plan, params, x, key)
 
-    def reference(self, params: Params, x: jnp.ndarray) -> jnp.ndarray:
-        return run_network_reference(self.plan, params, x)
+    def reference(self, params: Params, x: jnp.ndarray,
+                  key: Optional[jax.Array] = None) -> jnp.ndarray:
+        return run_network_reference(self.plan, params, x, key)
+
+    def monte_carlo(self, params: Params, x: jnp.ndarray, key: jax.Array,
+                    n_trials: int) -> jnp.ndarray:
+        """Batched seeded noise trials: (n_trials, *engine(params, x).shape).
+
+        Splits `key` into one subkey per trial and stacks the outputs;
+        every trial reuses the jit cache of the planned schedule, so the
+        cost is n_trials dispatches, not n_trials compiles.  Deterministic
+        for a fixed key; requires a noise-enabled plan."""
+        if not self.cfg.noise.enabled:
+            raise ValueError("monte_carlo requires EngineConfig(noise=...) "
+                             "with noise enabled")
+        if n_trials < 1:
+            raise ValueError(f"n_trials must be >= 1, got {n_trials}")
+        keys = jax.random.split(key, n_trials)
+        return jnp.stack([run_network(self.plan, params, x, k)
+                          for k in keys])
 
     def perf_report(self, **kw):
         """Per-layer + aggregate cycle/energy estimates (perfmodel)."""

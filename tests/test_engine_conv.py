@@ -406,10 +406,19 @@ def test_cim_conv2d_apply_engine_mode():
                                    rtol=1e-4, atol=1e-5)
 
 
-def test_engine_conv_rejects_noise():
-    from repro.core.noise_model import NoiseConfig
+def test_engine_conv_noise_mode():
+    """Noise-injected conv through the native engine plan: a key is
+    required, and a fixed key is deterministic (per-tile fold_in keys)."""
+    from repro.core.noise_model import NO_NOISE, NoiseConfig
     cfg = cl.CIMConfig(mode="engine", noise=NoiseConfig())
-    p = cl.init_cim_linear(jax.random.PRNGKey(0), 3 * 3 * 4, 8)
-    x = jnp.ones((1, 6, 6, 4))
-    with pytest.raises(ValueError, match="noise-free"):
+    p = cl.init_cim_linear(jax.random.PRNGKey(0), 3 * 3 * 4, 8, cfg=cfg)
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(1), (2, 6, 6, 4)))
+    with pytest.raises(ValueError, match="requires a PRNG key"):
         cl.cim_conv2d_apply(p, x, cfg)
+    key = jax.random.PRNGKey(2)
+    y = cl.cim_conv2d_apply(p, x, cfg, key=key)
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray(cl.cim_conv2d_apply(p, x, cfg, key=key)))
+    y_clean = cl.cim_conv2d_apply(p, x, cfg.replace(noise=NO_NOISE))
+    assert y.shape == y_clean.shape == (2, 6, 6, 8)
+    assert bool(jnp.any(y != y_clean))

@@ -1,0 +1,344 @@
+"""Noise-injected engine mode: seeded statistical acceptance tests.
+
+The acceptance bar (ISSUE 3): the engine runs the full post-silicon noise
+model end to end through the Pallas path, deterministically under a fixed
+PRNG key, while NO_NOISE stays bit-exact with the digital reference across
+the precision grid; its noise statistics match the analytic model and the
+fakequant training path within the tolerances below.  Plus the noise-model
+bugfix sweep regressions (staticmethod none(), traceable settle_fraction,
+dtype-preserving disabled paths, physical-column SA offset sharing).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cim_layers as cl
+from repro.core import noise_model as nm
+from repro.core.hw import DEFAULT_MACRO
+from repro.core.mapping import LayerSpec
+from repro.core.noise_model import NO_NOISE, NoiseConfig
+from repro.runtime import CIMInferenceEngine, EngineConfig
+
+R_INS = (1, 2, 4, 8)
+R_WS = (1, 2, 4)
+
+# thermal-only operating point: static/deterministic terms zeroed, settling
+# instantaneous — isolates the kT/C Gaussian for the analytic-std check
+THERMAL_ONLY = NoiseConfig(sa_sigma_v=0.0, kappa_in=0.0, kappa_acc=0.0,
+                           leak_v_per_us=0.0, tau0_ns=1e-4,
+                           tau_per_unit_ns=0.0)
+
+
+def _case(specs, seed=0, m=8, noise=NO_NOISE):
+    eng = CIMInferenceEngine(specs, EngineConfig(noise=noise))
+    params = eng.init_params(jax.random.PRNGKey(seed))
+    x = jax.nn.relu(
+        jax.random.normal(jax.random.PRNGKey(seed + 1), (m, specs[0].k)))
+    return eng, params, x
+
+
+# ---- NO_NOISE stays the bit-exact deployed path ---------------------------
+
+@pytest.mark.parametrize("r_w", R_WS)
+@pytest.mark.parametrize("r_in", R_INS)
+def test_no_noise_grid_stays_bitexact(r_in, r_w):
+    """A key passed to a NO_NOISE engine is ignored: same fused kernels,
+    bit-exact with the reference, across the precision grid."""
+    specs = [LayerSpec(m=8, k=72, n=16, r_in=r_in, r_w=r_w, r_out=8)]
+    eng, params, x = _case(specs, seed=r_in * 10 + r_w)
+    y = eng(params, x)
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray(eng(params, x, jax.random.PRNGKey(3))))
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.asarray(eng.reference(params, x)))
+
+
+# ---- noise mode: determinism + kernel/reference lockstep ------------------
+
+def test_noise_requires_key():
+    eng, params, x = _case([LayerSpec(m=8, k=72, n=16)], noise=NoiseConfig())
+    with pytest.raises(ValueError, match="requires a PRNG key"):
+        eng(params, x)
+
+
+def test_noise_deterministic_and_key_dependent():
+    eng, params, x = _case([LayerSpec(m=8, k=144, n=16, r_in=4, r_w=2)],
+                           noise=NoiseConfig())
+    k1, k2 = jax.random.PRNGKey(5), jax.random.PRNGKey(6)
+    np.testing.assert_array_equal(np.asarray(eng(params, x, k1)),
+                                  np.asarray(eng(params, x, k1)))
+    assert bool(jnp.any(eng(params, x, k1) != eng(params, x, k2)))
+
+
+@pytest.mark.parametrize("spec", [
+    LayerSpec(m=8, k=144, n=16, r_in=8, r_w=4, r_out=8),
+    LayerSpec(m=8, k=72, n=16, r_in=2, r_w=1, r_out=6),
+    # K > 1152 row tiles + N > 64 col tiles: per-tile keys must agree too
+    LayerSpec(m=4, k=2304, n=80, r_in=8, r_w=4, r_out=8),
+])
+def test_noise_kernel_matches_reference_bitexact(spec):
+    """Kernel (raw-dp Pallas) and jnp reference share the noise ADC
+    epilogue and per-tile keys -> bit-exact even under noise."""
+    eng, params, x = _case([spec], seed=3, m=spec.m, noise=NoiseConfig())
+    key = jax.random.PRNGKey(11)
+    np.testing.assert_array_equal(np.asarray(eng(params, x, key)),
+                                  np.asarray(eng.reference(params, x, key)))
+
+
+def test_stream_chunks_draw_independent_keys():
+    """Chunked im2col streaming must not reuse one thermal key per chunk:
+    with every GEMM row identical, equal chunk outputs would betray key
+    reuse — chunks must fold their index into the key.  Each chunked run
+    stays deterministic."""
+    spec = LayerSpec(m=16, k=72, n=16, r_in=4, r_w=2)
+    eng = CIMInferenceEngine([spec],
+                             EngineConfig(noise=THERMAL_ONLY, stream_rows=4))
+    params = eng.init_params(jax.random.PRNGKey(0))
+    row = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(1), (1, 72)))
+    x = jnp.tile(row, (16, 1))                          # identical rows
+    key = jax.random.PRNGKey(2)
+    y = eng(params, x, key)
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.asarray(eng(params, x, key)))
+    chunks = np.asarray(y).reshape(4, 4, 16)
+    assert not all(np.array_equal(chunks[0], c) for c in chunks[1:])
+
+
+def test_monte_carlo_shape_determinism_and_guard():
+    eng, params, x = _case([LayerSpec(m=8, k=72, n=16, r_in=4, r_w=2)],
+                           noise=NoiseConfig())
+    key = jax.random.PRNGKey(9)
+    mc = eng.monte_carlo(params, x, key, 3)
+    assert mc.shape == (3, 8, 16)
+    np.testing.assert_array_equal(
+        np.asarray(mc[1]), np.asarray(eng(params, x,
+                                          jax.random.split(key, 3)[1])))
+    clean, params_c, _ = _case([LayerSpec(m=8, k=72, n=16, r_in=4, r_w=2)])
+    with pytest.raises(ValueError, match="noise"):
+        clean.monte_carlo(params_c, x, key, 2)
+
+
+# ---- statistical acceptance -----------------------------------------------
+
+def test_mc_thermal_std_matches_analytic():
+    """Monte-Carlo thermal std in dequantized units tracks the analytic
+    sigma (thermal_sigma_dp through the act/weight scales)."""
+    spec = LayerSpec(m=64, k=144, n=16, r_in=8, r_w=4, r_out=8)
+    eng, params, x = _case([spec], seed=1, m=64, noise=THERMAL_ONLY)
+    clean = CIMInferenceEngine([spec])
+    y0 = clean(params, x)
+    mc = eng.monte_carlo(params, x, jax.random.PRNGKey(2), 24)
+    dev = np.asarray(mc - y0[None])                     # (T, M, N)
+
+    from repro.core.quantization import quantize_act, quantize_weight
+    aq = quantize_act(x.astype(jnp.float32), spec.r_in)
+    wq = quantize_weight(params[0]["w"], spec.r_w, axis=0)
+    sigma_dp = nm.thermal_sigma_dp(THERMAL_ONLY, spec.r_out,
+                                   eng.plan.layers[0].g0)
+    want = sigma_dp * np.asarray(aq.scale) * np.asarray(wq.scale).ravel()
+    got = dev.std(axis=(0, 1))                          # per column
+    ratio = got / want
+    assert abs(np.median(ratio) - 1.0) < 0.12, (np.median(ratio), ratio)
+
+
+def test_calibration_residue_within_2lsb_bound():
+    """Fig. 19: offsets inside the 7b calibration range reduce to the
+    quantization residue, bounded by 2 calibration LSBs; saturating columns
+    (the 'few dysfunctional columns') may exceed it."""
+    noise = NoiseConfig()
+    raw = nm.sample_sa_offsets(jax.random.PRNGKey(0), 2048, noise)
+    res = np.asarray(nm.calibration_residue(raw, noise))
+    lsb, rng = DEFAULT_MACRO.cal_lsb_v, DEFAULT_MACRO.cal_range_v
+    in_range = np.abs(np.asarray(raw)) <= rng - 2 * lsb
+    assert in_range.sum() > 1000                        # test has teeth
+    assert np.abs(res[in_range]).max() <= 2 * lsb
+    # post-layout sigma is ~1.7x the range/2 -> some columns must saturate
+    assert (np.abs(res) > 2 * lsb).any()
+
+
+def test_engine_vs_fakequant_noise_stats_agree():
+    """Engine MC deviations match the fakequant training path's on a small
+    layer (shared thermal expression + shared physical-column offsets)."""
+    noise = NoiseConfig()
+    cfg_f = cl.CIMConfig(mode="fakequant", noise=noise)
+    params = cl.init_cim_linear(jax.random.PRNGKey(0), 144, 16, cfg=cfg_f)
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(1), (64, 144)))
+    clean = {m: cl.cim_linear_apply(params, x,
+                                    cfg_f.replace(mode=m, noise=NO_NOISE))
+             for m in ("fakequant", "engine")}
+
+    def mc_std(mode, trials=16):
+        cfg = cfg_f.replace(mode=mode)
+        devs = [np.asarray(cl.cim_linear_apply(
+            params, x, cfg, key=jax.random.PRNGKey(100 + t)) - clean[mode])
+            for t in range(trials)]
+        return np.stack(devs).std()
+
+    s_fq, s_eng = mc_std("fakequant"), mc_std("engine")
+    assert 0.75 < s_eng / s_fq < 1.33, (s_eng, s_fq)
+
+
+# ---- physical-column SA offsets (satellite bugfix) ------------------------
+
+def test_column_residues_shared_across_col_tiles():
+    """Two col tiles mapping to the same physical column see the same
+    residue: channels j and j + ch_per_tile share one comparator."""
+    noise = NoiseConfig()
+    for r_w, ch in ((4, 64), (2, 128), (1, 256), (3, 64)):
+        assert nm.channels_per_col_tile(r_w) == ch
+        res = np.asarray(nm.sample_column_residues(
+            jax.random.PRNGKey(0), 2 * ch, r_w, noise))
+        np.testing.assert_array_equal(res[:ch], res[ch:])
+        assert np.any(res[:ch] != 0.0)
+
+
+def _dup_column_params(k, n, seed=0):
+    """Params whose second half of weight columns duplicates the first."""
+    cfg = cl.CIMConfig(r_in=4, r_w=4)
+    p = cl.init_cim_linear(jax.random.PRNGKey(seed), k, n, cfg=cfg)
+    w = p["w"]
+    p["w"] = jnp.concatenate([w[:, :n // 2], w[:, :n // 2]], axis=1)
+    return p
+
+
+@pytest.mark.parametrize("mode", ["fakequant", "engine", "sim"])
+def test_same_physical_column_same_residue_end_to_end(mode):
+    """With thermal off and duplicated weight columns, channels 64 apart
+    (r_w=4 -> one col-tile budget) see identical static offsets, so both
+    output halves are identical — training, engine AND voltage-sim paths."""
+    noise = NoiseConfig(thermal_rms_lsb8=0.0)
+    cfg = cl.CIMConfig(mode=mode, r_in=4, r_w=4, noise=noise)
+    p = _dup_column_params(144, 128)
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(1), (8, 144)))
+    y = np.asarray(cl.cim_linear_apply(p, x, cfg, key=jax.random.PRNGKey(2)))
+    np.testing.assert_array_equal(y[:, :64], y[:, 64:])
+    # the offsets do something: a different key moves the output
+    y2 = np.asarray(cl.cim_linear_apply(p, x, cfg,
+                                        key=jax.random.PRNGKey(3)))
+    assert np.any(y != y2)
+
+
+# ---- noise-model bugfix sweep regressions ---------------------------------
+
+def test_noiseconfig_none_is_staticmethod():
+    """Regression: NoiseConfig.none() was an instance-method-shaped
+    constructor; calling it on an instance raised TypeError."""
+    assert NoiseConfig.none().enabled is False
+    assert NO_NOISE.none().enabled is False             # instance call works
+
+
+def test_settle_fraction_traces_over_arrays():
+    noise = NoiseConfig()
+    units = jnp.arange(1, 33)
+    s = jax.vmap(lambda u: nm.settle_fraction(u, 5.0, noise))(units)
+    assert s.shape == (32,)
+    assert bool(jnp.all((s > 0.0) & (s < 1.0)))
+    assert bool(jnp.all(jnp.diff(s) < 0))               # tau grows with units
+    sj = jax.jit(nm.settle_fraction, static_argnums=(1, 2))(units, 5.0, noise)
+    np.testing.assert_allclose(np.asarray(sj), np.asarray(s))
+    assert float(nm.settle_fraction(4, 5.0, NO_NOISE)) == 1.0
+
+
+def test_disabled_paths_follow_dtype():
+    z = nm.sample_thermal(jax.random.PRNGKey(0), (4, 4), NO_NOISE,
+                          dtype=jnp.bfloat16)
+    assert z.dtype == jnp.bfloat16 and float(jnp.abs(z).max()) == 0.0
+    on = nm.sample_thermal(jax.random.PRNGKey(0), (4,), NoiseConfig(),
+                           dtype=jnp.bfloat16)
+    assert on.dtype == jnp.bfloat16
+    v = jnp.ones((3, 5), jnp.bfloat16)
+    e = nm.charge_injection_error(v, v, NO_NOISE)
+    assert e.dtype == jnp.bfloat16 and e.shape == (3, 5)
+
+
+def test_dsci_adc_noise_with_per_channel_gamma():
+    """Regression: the ladder-mismatch term crashed on per-channel ABN
+    gamma ((N,) x (r_out,) broadcast); the per-step draw is now shared
+    across columns with per-channel magnitude."""
+    from repro.core.cim_macro import dsci_adc
+    v = 0.01 * jax.random.normal(jax.random.PRNGKey(0), (4, 16))
+    gamma = jnp.linspace(1.0, 8.0, 16)
+    code = dsci_adc(v, r_out=8, gamma=gamma, beta_v=jnp.zeros(16),
+                    sa_offset_v=jnp.zeros(16), cfg=DEFAULT_MACRO,
+                    noise=NoiseConfig(), key=jax.random.PRNGKey(1))
+    assert code.shape == (4, 16)
+    assert bool(jnp.all((code >= 0) & (code <= 255)))
+
+
+def test_charge_injection_gain_matches_recursion():
+    """The closed form equals the literal per-step recursion when every
+    input bit contributes the same per-bit deviation."""
+    noise, cfg = NoiseConfig(), DEFAULT_MACRO
+    for r_in in (1, 2, 4, 8):
+        a, vbar = cfg.alpha_mb(), 0.01
+        v_ideal = v_noisy = 0.0
+        for _ in range(r_in):
+            v_noisy = (a * v_noisy + (1 - a) * vbar
+                       + noise.kappa_in * vbar - noise.kappa_acc * v_noisy)
+            v_ideal = a * v_ideal + (1 - a) * vbar
+        got = nm.charge_injection_gain(r_in, noise, cfg)
+        want = (v_noisy - v_ideal) / v_ideal
+        assert abs(got - want) < 5e-4, (r_in, got, want)
+    assert nm.charge_injection_gain(8, NO_NOISE, cfg) == 0.0
+
+
+# ---- reporting + model integration ---------------------------------------
+
+def test_perf_report_echoes_noise_settings():
+    specs = [LayerSpec(m=8, k=144, n=16, r_in=4, r_w=2)]
+    noisy = CIMInferenceEngine(specs, EngineConfig(noise=NoiseConfig()))
+    rep = noisy.perf_report()
+    assert rep["noise"]["enabled"] is True
+    assert rep["noise"]["thermal_rms_lsb8"] == NoiseConfig().thermal_rms_lsb8
+    assert rep["layers"][0]["noise"]["sa_sigma_v"] == NoiseConfig().sa_sigma_v
+    clean = CIMInferenceEngine(specs).perf_report()
+    assert clean["noise"] == {"enabled": False}
+    assert "noise" not in clean["layers"][0]
+
+
+def test_lenet_forward_engine_noise_smoke():
+    """cim.noise no longer raises in mode='engine': the whole LeNet runs
+    noise-injected through one plan, deterministically."""
+    from repro.models import cnn
+    cfg = cl.CIMConfig(mode="engine", r_in=4, r_w=2, noise=NoiseConfig())
+    params = cnn.init_lenet(jax.random.PRNGKey(0), cim=cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (2, 28, 28, 1))
+    key = jax.random.PRNGKey(2)
+    y = cnn.lenet_forward(params, x, cfg, key=key)
+    assert y.shape == (2, 10)
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray(cnn.lenet_forward(params, x, cfg, key=key)))
+    y_clean = cnn.lenet_forward(params, x, cfg.replace(noise=NO_NOISE))
+    assert bool(jnp.any(y != y_clean))
+
+
+@pytest.mark.slow
+def test_lenet_monte_carlo_noise_sweep_slow():
+    """Full-scale seeded MC sweep on LeNet (scheduled CI): accuracy
+    degrades monotonically-ish with noise scale, every point reproducible."""
+    from repro.data.pseudo_mnist import make_dataset
+    from repro.models.cnn import (init_lenet, lenet_engine,
+                                  lenet_params_list)
+    _, _, xte, _ = make_dataset(n_train=1, n_test=32)
+    imgs = jnp.asarray(xte)[..., None]
+    base = NoiseConfig()
+    rms = []
+    for scale in (0.25, 1.0, 4.0):
+        noise = base.replace(thermal_rms_lsb8=base.thermal_rms_lsb8 * scale,
+                             sa_sigma_v=base.sa_sigma_v * scale)
+        cim = cl.CIMConfig(mode="engine", r_in=4, r_w=2, noise=noise)
+        params = lenet_params_list(init_lenet(jax.random.PRNGKey(0),
+                                              cim=cim))
+        eng = lenet_engine(32, cim=cim)
+        mc = eng.monte_carlo(params, imgs, jax.random.PRNGKey(1), 4)
+        assert mc.shape == (4, 32, 10)
+        np.testing.assert_array_equal(
+            np.asarray(mc),
+            np.asarray(eng.monte_carlo(params, imgs, jax.random.PRNGKey(1),
+                                       4)))
+        clean = lenet_engine(32, cim=cim.replace(noise=NO_NOISE))(
+            params, imgs)
+        rms.append(float(jnp.sqrt(jnp.mean((mc - clean[None]) ** 2))))
+        assert jnp.all(jnp.isfinite(mc))
+    assert rms[0] < rms[1] < rms[2], rms
