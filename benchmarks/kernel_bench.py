@@ -5,8 +5,19 @@ TPU performance — the TPU projection is the roofline analysis).
 Sweeps the macro's precision operating points (r_in x r_w) through the
 precision-specialized kernel variants, reporting per-precision wall-clock,
 achieved integer-op rate, and bit-exactness against the oracle — the
-software analogue of the paper's Fig. 22 sweep."""
+software analogue of the paper's Fig. 22 sweep.  The scaling sweep
+additionally shards the engine across 1/2/4/8 (emulated) devices — when
+run as a script the process requests 8 fake CPU devices via XLA_FLAGS
+*before* jax initializes, so CPU-only CI exercises the multi-macro
+dispatch."""
+import os
 import time
+
+if __name__ == "__main__":      # must precede the first jax import
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count=8").strip()
 
 import jax
 import jax.numpy as jnp
@@ -143,6 +154,67 @@ def bench_noise_sweep(batch=8, n_trials=2, scales=(0.0, 1.0, 2.0)):
     return rows
 
 
+def bench_scaling_sweep(devices=(1, 2, 4, 8), iters=3):
+    """Weak/strong-scaling of the sharded engine (ISSUE 4 tentpole).
+
+    Strong scaling: a fixed 2-layer schedule (col-tile-rich first layer,
+    rows-sharded second) at constant global work, sharded over D devices.
+    Weak scaling: the GEMM-row extent grows with D (64 rows per device).
+    Every point is checked bit-exact against the single-device engine.
+    Wall-clock on emulated CPU devices measures dispatch plumbing, not
+    macro performance — the numbers are for trend/regression tracking."""
+    from repro.core.mapping import LayerSpec
+    from repro.runtime import CIMInferenceEngine, EngineConfig, ShardingConfig
+
+    def build(m, d):
+        specs = [LayerSpec(m=m, k=576, n=256, r_in=4, r_w=4),   # 4 col tiles
+                 LayerSpec(m=m, k=256, n=32, r_in=4, r_w=4)]    # rows kind
+        cfg = EngineConfig()
+        if d:
+            cfg = cfg.replace(sharding=ShardingConfig(devices=d))
+        return CIMInferenceEngine(specs, cfg)
+
+    def run(eng, params, x, n=iters):
+        eng(params, x).block_until_ready()          # compile
+        t0 = time.time()
+        for _ in range(n):
+            eng(params, x).block_until_ready()
+        return (time.time() - t0) / n * 1e6
+
+    avail = len(jax.devices())
+    m_strong = 256
+    base = build(m_strong, 0)
+    params = base.init_params(jax.random.PRNGKey(0))
+    x_strong = jax.nn.relu(
+        jax.random.normal(jax.random.PRNGKey(1), (m_strong, 576)))
+    t_serial = run(base, params, x_strong)
+    y_serial = jax.device_get(base(params, x_strong))
+
+    rows = []
+    for d in devices:
+        if d > avail:
+            rows.append((d, None, None, None, None))
+            continue
+        eng = build(m_strong, d)
+        t_strong = run(eng, params, x_strong)
+        match = bool((jax.device_get(eng(params, x_strong))
+                      == y_serial).all())
+        # weak scaling: 64 GEMM rows per device
+        m_weak = 64 * d
+        engw = build(m_weak, d)
+        pw = engw.init_params(jax.random.PRNGKey(0))
+        xw = jax.nn.relu(
+            jax.random.normal(jax.random.PRNGKey(1), (m_weak, 576)))
+        t_weak = run(engw, pw, xw)
+        # the weak-scaling shapes exercise per-d rows-kind padding the
+        # strong point does not — bit-check them too
+        match &= bool((jax.device_get(engw(pw, xw))
+                       == jax.device_get(build(m_weak, 0)(pw, xw))).all())
+        eff = engw.perf_report()["total"]["parallel_efficiency"]
+        rows.append((d, t_strong, t_weak, eff, match))
+    return t_serial, rows
+
+
 def main():
     ok = True
     for (m, k, n) in ((128, 1152, 64), (256, 1152, 256), (512, 512, 128)):
@@ -161,6 +233,16 @@ def main():
         ok &= det
         print(f"noise_engine_x{scale:g},{us:.0f},"
               f"acc{acc:.2f}_deterministic{det}")
+    t_serial, srows = bench_scaling_sweep()
+    print(f"shard_engine_serial,{t_serial:.0f}")
+    for d, t_strong, t_weak, eff, match in srows:
+        if t_strong is None:
+            print(f"shard_engine_d{d},skipped_needs_{d}_devices")
+            continue
+        ok &= match
+        print(f"shard_engine_d{d},{t_strong:.0f},"
+              f"strong_x{t_serial / t_strong:.2f}_weak{t_weak:.0f}us_"
+              f"eff{eff:.2f}_match{match}")
     if not ok:
         raise SystemExit("oracle/determinism mismatch in sweep (see log)")
 

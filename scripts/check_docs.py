@@ -1,0 +1,110 @@
+#!/usr/bin/env python
+"""Docs gate for CI (ISSUE 4): fail on broken relative markdown links and on
+missing docstrings in the public engine API.
+
+Two checks, both dependency-free (a pydocstyle/interrogate subset — the
+container must not pip-install anything):
+
+  * link check: every non-http `[text](target)` in README.md and
+    docs/ARCHITECTURE.md must resolve to an existing file relative to the
+    markdown file (anchors `#...` are stripped before checking);
+  * docstring check: every public module-level function/class — and every
+    public method defined on those classes — of the four engine-API
+    modules below must carry a non-trivial docstring.
+
+Usage: PYTHONPATH=src python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import importlib
+import inspect
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+MARKDOWN_FILES = ("README.md", "docs/ARCHITECTURE.md")
+
+API_MODULES = (
+    "repro.runtime.engine",
+    "repro.core.mapping",
+    "repro.core.noise_model",
+    "repro.kernels.cim_mbiw.ops",
+)
+
+# markdown inline links, skipping images; target group up to the first ')'
+_LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+
+
+def check_links() -> list:
+    errors = []
+    for md in MARKDOWN_FILES:
+        path = os.path.join(REPO, md)
+        if not os.path.exists(path):
+            errors.append(f"{md}: file missing")
+            continue
+        base = os.path.dirname(path)
+        with open(path, encoding="utf-8") as fh:
+            text = fh.read()
+        for target in _LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not os.path.exists(os.path.normpath(os.path.join(base, rel))):
+                errors.append(f"{md}: broken link -> {target}")
+    return errors
+
+
+def _missing_doc(obj) -> bool:
+    doc = inspect.getdoc(obj)
+    return doc is None or len(doc.strip()) < 10
+
+
+def check_docstrings() -> list:
+    errors = []
+    for modname in API_MODULES:
+        mod = importlib.import_module(modname)
+        if _missing_doc(mod):
+            errors.append(f"{modname}: missing module docstring")
+        for name, obj in vars(mod).items():
+            if name.startswith("_"):
+                continue
+            if not (inspect.isfunction(obj) or inspect.isclass(obj)):
+                continue
+            if getattr(obj, "__module__", None) != modname:
+                continue                       # re-exported, owned elsewhere
+            if _missing_doc(obj):
+                errors.append(f"{modname}.{name}: missing docstring")
+            if inspect.isclass(obj):
+                for mname, meth in vars(obj).items():
+                    if mname.startswith("_"):
+                        continue
+                    if not (inspect.isfunction(meth)
+                            or isinstance(meth, (staticmethod, classmethod,
+                                                 property))):
+                        continue
+                    target = meth.fget if isinstance(meth, property) \
+                        else getattr(meth, "__func__", meth)
+                    if _missing_doc(target):
+                        errors.append(
+                            f"{modname}.{name}.{mname}: missing docstring")
+    return errors
+
+
+def main() -> int:
+    errors = check_links() + check_docstrings()
+    for e in errors:
+        print(f"check_docs: {e}", file=sys.stderr)
+    if errors:
+        print(f"check_docs: FAILED ({len(errors)} problems)",
+              file=sys.stderr)
+        return 1
+    print("check_docs: links + public-API docstrings OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -60,6 +60,9 @@ class CIMConfig:
                                      # paper mode, see DESIGN.md §3)
     noise: NoiseConfig = NO_NOISE
     macro: CIMMacroConfig = DEFAULT_MACRO
+    sharding: Optional[object] = None   # runtime.engine.ShardingConfig —
+                                        # multi-macro dispatch in mode
+                                        # "engine" (ignored by other modes)
 
     def replace(self, **kw) -> "CIMConfig":
         return dataclasses.replace(self, **kw)
@@ -247,7 +250,7 @@ def _engine_forward(params: Dict, x: jnp.ndarray, cfg: CIMConfig,
                              r_w=cfg.r_w, r_out=cfg.r_out)
     ecfg = rt.EngineConfig(macro=cfg.macro, adaptive_swing=cfg.adaptive_swing,
                            gamma_bits=cfg.gamma_bits, max_gamma=cfg.max_gamma,
-                           noise=cfg.noise)
+                           noise=cfg.noise, sharding=cfg.sharding)
     plan = rt.plan_network([spec], ecfg)
     y = rt.run_network(plan, [params], x2, key)
     return y.reshape(lead + (n,)).astype(x.dtype)
@@ -348,6 +351,6 @@ def _engine_conv_forward(params: Dict, x: jnp.ndarray, cfg: CIMConfig,
 
     ecfg = rt.EngineConfig(macro=cfg.macro, adaptive_swing=cfg.adaptive_swing,
                            gamma_bits=cfg.gamma_bits, max_gamma=cfg.max_gamma,
-                           noise=cfg.noise)
+                           noise=cfg.noise, sharding=cfg.sharding)
     plan = rt.plan_network([spec], ecfg)
     return rt.run_network(plan, [params], x, key).astype(x.dtype)

@@ -1,5 +1,6 @@
 """Layer -> macro tiling (Sec. III.A/IV): how a GEMM or conv maps onto the
-1152x256 array, and how many macro invocations / cycles it costs.
+1152x256 array, how many macro invocations / cycles it costs, and how the
+resulting tile schedule partitions across replicated macros (devices).
 
 Constraints reproduced from the chip:
   * rows: K_eff = kernel_h*kernel_w*C_in bitcell rows per filter column,
@@ -9,6 +10,19 @@ Constraints reproduced from the chip:
   * columns: each output channel occupies r_w adjacent columns inside a
     4-column block; 64 blocks -> 64 output channels per tile (r_w<=4).
   * minimum configuration: 4 input channels (one 36-row unit) in conv mode.
+
+Multi-macro sharding (the paper's system-level scaling assumption — the
+1152x256 macro is a building block replicated for the 40 TOPS/W system
+numbers): column tiles of one layer are independent macro programs, so a
+bank of D macros (devices) evaluates them in parallel (`shard_layer` kind
+"col"); a layer with fewer col tiles than macros instead splits its
+GEMM-row dimension M = batch*out_h*out_w, every macro holding the same
+weights ("rows" kind — weight-stationary data parallelism).  Both choices
+preserve the single-macro numerics exactly: columns and GEMM rows never
+interact before the digital partial-sum recombination.
+
+Units note: everything in this module is *integer geometry* (rows, columns,
+tiles, devices) — no voltages, no code units.
 """
 from __future__ import annotations
 
@@ -42,10 +56,12 @@ class ConvGeometry:
 
     @property
     def spatial_in(self) -> Tuple[int, int, int]:
+        """Per-sample input feature shape (H, W, C_in)."""
         return (self.h, self.w, self.c_in)
 
     @property
     def spatial_out(self) -> Tuple[int, int, int]:
+        """Per-sample output feature shape (out_h, out_w, c_out)."""
         return (self.out_h, self.out_w, self.c_out)
 
 
@@ -93,6 +109,7 @@ class LayerSpec:
 
     @property
     def op(self) -> str:
+        """Layer kind tag: "dense" or "conv" (conv-geometry-tagged)."""
         return "dense" if self.conv is None else "conv"
 
 
@@ -108,11 +125,25 @@ class MacroMapping:
 
     @property
     def needs_digital_accum(self) -> bool:
+        """True when K splits into row tiles whose partial ADC codes the
+        host must sum digitally (requantization between tiles)."""
         return self.row_tiles > 1
 
 
 def map_layer(spec: LayerSpec, cfg: CIMMacroConfig = DEFAULT_MACRO
               ) -> MacroMapping:
+    """Map one LayerSpec onto the macro's row/column tile grid.
+
+    Args:
+      spec: the GEMM/conv layer; spec.k sets the bitcell-row demand,
+        spec.n the output-channel demand, spec.r_w the columns per channel.
+      cfg:  macro geometry (1152 rows x 256 cols by default).
+    Returns:
+      MacroMapping with the sequential row/col tile counts, the serial-split
+      unit count per row tile (adaptive swing) and the utilization.
+    Raises:
+      ValueError when spec.r_w exceeds the macro's column budget.
+    """
     if spec.r_w > cfg.max_r_w:
         raise ValueError(f"r_w={spec.r_w} > macro max {cfg.max_r_w}")
     ch_per_tile = cfg.n_blocks * (cfg.cols_per_block // max(spec.r_w, 1))
@@ -162,7 +193,16 @@ def conv_layer_spec(batch: int, h: int, w: int, c_in: int, c_out: int,
 
 
 def split_k_slices(k: int, row_tiles: int) -> List[Tuple[int, int]]:
-    """Even (start, size) K slices for digital partial-sum accumulation."""
+    """Even (start, size) row-tile slices of a K-dim for digital partial-sum
+    accumulation.
+
+    Args:
+      k: total reduction length (bitcell rows of the layer).
+      row_tiles: number of sequential macro row tiles (map_layer.row_tiles).
+    Returns:
+      (start, size) pairs covering [0, k); all slices have size
+      ceil(k / row_tiles) except a possibly-smaller last one.
+    """
     base = math.ceil(k / row_tiles)
     out, s = [], 0
     while s < k:
@@ -170,3 +210,77 @@ def split_k_slices(k: int, row_tiles: int) -> List[Tuple[int, int]]:
         out.append((s, size))
         s += size
     return out
+
+
+def split_even_slices(n: int, tiles: int) -> List[Tuple[int, int]]:
+    """Uniform (start, size) column-tile slices, padded to a common size.
+
+    Sharded schedules execute col tiles SPMD across devices, which requires
+    every tile to have the same shape; callers pad their column arrays to
+    `tiles * size` and discard outputs at column index >= n.  The uniform
+    size also makes the engine's per-tile noise draws independent of how
+    many devices later execute the schedule (the bit-exactness contract of
+    sharded noisy inference).
+
+    Args:
+      n: real extent (output channels of the layer).
+      tiles: number of col tiles (map_layer.col_tiles).
+    Returns:
+      `tiles` pairs (i*size, size) with size = ceil(n / tiles); the covered
+      extent tiles*size may exceed n (column padding).
+    """
+    size = math.ceil(n / max(tiles, 1))
+    return [(i * size, size) for i in range(max(tiles, 1))]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerShard:
+    """How one layer's tile schedule partitions across `devices` macros.
+
+    kind "col": independent col tiles round-robin to devices in contiguous
+    groups of `tiles_per_device` (the tile count is padded up to
+    devices * tiles_per_device with all-zero dummy tiles when it does not
+    divide evenly).  kind "rows": the layer has fewer col tiles than
+    devices, so the M = batch*out_h*out_w GEMM-row dimension splits into
+    `rows_per_device`-row blocks instead (stream_rows-style chunking,
+    weights replicated).  `efficiency` is useful work / (devices x
+    per-device work) — 1.0 when the partition divides evenly.
+    """
+    devices: int            # mesh axis size D (>= 1)
+    kind: str               # "col" | "rows"
+    tiles_per_device: int   # col tiles per device ("col" kind, else 0)
+    rows_per_device: int    # GEMM rows per device ("rows" kind, else 0)
+    efficiency: float       # load balance in [1/D, 1.0]
+
+
+def shard_layer(spec: LayerSpec, mp: MacroMapping,
+                devices: int) -> LayerShard:
+    """Partition one mapped layer across a bank of `devices` macros.
+
+    Col tiles are the natural parallel axis (they share inputs but touch
+    disjoint output channels); a layer offering at least one col tile per
+    device shards those.  Otherwise the schedule falls back to sharding the
+    GEMM-row dimension M (every device runs the full tile schedule on an
+    M/devices row block — bit-identical because GEMM rows are independent
+    through the elementwise ADC epilogue).
+
+    Args:
+      spec: the layer (spec.m supplies the GEMM-row extent for "rows").
+      mp:   its macro mapping (col_tiles decides the kind).
+      devices: number of macros/devices (>= 1).
+    Returns:
+      LayerShard; devices=1 degenerates to a single-device "col" plan with
+      every tile on the one device.
+    """
+    if devices < 1:
+        raise ValueError(f"devices must be >= 1, got {devices}")
+    if mp.col_tiles >= devices:
+        tiles_per_device = math.ceil(mp.col_tiles / devices)
+        eff = mp.col_tiles / (devices * tiles_per_device)
+        return LayerShard(devices=devices, kind="col",
+                          tiles_per_device=tiles_per_device,
+                          rows_per_device=0, efficiency=eff)
+    rows_per_device = math.ceil(spec.m / devices)
+    eff = spec.m / (devices * rows_per_device) if spec.m else 1.0
+    return LayerShard(devices=devices, kind="rows", tiles_per_device=0,
+                      rows_per_device=rows_per_device, efficiency=eff)

@@ -20,6 +20,19 @@ CIM-aware training forward pass (paper Sec. III.E, V.A):
                                      (V_in, V_acc) (Fig. 10c), +/-1 LSB_8b
   * leakage                       -> linear droop on V_acc over the input-
                                      accumulation window (Fig. 10a)
+
+Units convention (shared with runtime/engine.py): functions suffixed `_v`
+return volts; `*_dp` quantities are integer dot-product units (pre-ADC);
+`*_codes` are ADC output codes in [0, 2^r_out); conversion between them
+goes through the unity-gain code gain g0 (codes per dp unit) and
+lsb = alpha_adc * VDDH / 2^(r_out-1) (volts per code).
+
+`NoiseConfig` is registered as a JAX pytree: its numeric fields are
+*leaves* (traced scalars inside jit), while `enabled`/`calibrated` stay
+static aux data.  A jitted consumer therefore compiles once per
+enabled/calibrated combination and reuses that compile across numeric
+operating points — the engine's `run_network(..., noise=point)` sweeps
+rely on this.
 """
 from __future__ import annotations
 
@@ -33,6 +46,11 @@ from repro.core.hw import CIMMacroConfig, DEFAULT_MACRO
 
 @dataclasses.dataclass(frozen=True)
 class NoiseConfig:
+    """One operating point of the equivalent noise model.
+
+    All numeric fields are traced pytree leaves (see module docstring);
+    `enabled` and `calibrated` are static flags.  Field units are noted
+    inline — volts unless stated otherwise."""
     enabled: bool = True
     # thermal noise, expressed as RMS in 8b ADC LSBs at gamma=1 (measured)
     thermal_rms_lsb8: float = 0.52
@@ -51,13 +69,35 @@ class NoiseConfig:
 
     @staticmethod
     def none() -> "NoiseConfig":
+        """The disabled operating point (same object shape as NO_NOISE)."""
         return NoiseConfig(enabled=False)
 
     def replace(self, **kw) -> "NoiseConfig":
+        """A copy with the given fields replaced (dataclasses.replace)."""
         return dataclasses.replace(self, **kw)
 
 
 NO_NOISE = NoiseConfig(enabled=False)
+
+# numeric fields = traced pytree leaves; (enabled, calibrated) = static aux
+_NOISE_LEAF_FIELDS = (
+    "thermal_rms_lsb8", "sa_sigma_v", "sa_postlayout_mult", "tau0_ns",
+    "tau_per_unit_ns", "kappa_in", "kappa_acc", "leak_v_per_us")
+
+
+def _noise_flatten(nc: "NoiseConfig"):
+    return (tuple(getattr(nc, f) for f in _NOISE_LEAF_FIELDS),
+            (nc.enabled, nc.calibrated))
+
+
+def _noise_unflatten(aux, leaves) -> "NoiseConfig":
+    enabled, calibrated = aux
+    return NoiseConfig(enabled=enabled, calibrated=calibrated,
+                       **dict(zip(_NOISE_LEAF_FIELDS, leaves)))
+
+
+jax.tree_util.register_pytree_node(NoiseConfig, _noise_flatten,
+                                   _noise_unflatten)
 
 
 def lsb8_volts(cfg: CIMMacroConfig = DEFAULT_MACRO) -> float:
@@ -66,12 +106,18 @@ def lsb8_volts(cfg: CIMMacroConfig = DEFAULT_MACRO) -> float:
 
 
 def thermal_sigma_v(noise: NoiseConfig, cfg: CIMMacroConfig) -> float:
+    """Thermal kT/C RMS on the MBIW voltage in volts (the measured
+    0.52 LSB_8b at gamma=1, Fig. 18a, referred through the 8b LSB)."""
     return noise.thermal_rms_lsb8 * lsb8_volts(cfg)
 
 
 def sample_thermal(key: jax.Array, shape, noise: NoiseConfig,
                    cfg: CIMMacroConfig = DEFAULT_MACRO,
                    dtype=jnp.float32) -> jnp.ndarray:
+    """Gaussian thermal-noise draw in volts with the configured RMS.
+
+    Returns zeros of `dtype` when the model is disabled (the dtype is
+    honored either way — regression-tested)."""
     if not noise.enabled:
         return jnp.zeros(shape, dtype)
     return (thermal_sigma_v(noise, cfg)

@@ -11,8 +11,17 @@ Precision dispatch
 r_out); `kernel_variant` returns a jit-compiled kernel specialized to that
 point (plane walk + accumulator shift from r_in, ADC epilogue from r_out)
 and caches it, so a network executes through a small table of compiled
-variants instead of re-tracing per layer.  The runtime engine
-(repro/runtime/engine.py) is the intended caller.
+variants instead of re-tracing per layer.  `kernel_variant_for_tile`
+additionally keys the cache on the dispatched tile geometry — block sizes
+clamped to one (rows, k, n) macro tile — so the smaller per-device tiles
+of a sharded schedule do not pad up to full-macro blocks.  The runtime
+engine (repro/runtime/engine.py) is the intended caller.
+
+Units: inputs/weights are integer codes (unsigned < 2^r_in / odd ints in
++/-(2^r_w - 1)); outputs are int32 ADC codes in [0, 2^r_out) — or raw
+int32 dp (integer dot-product units) with `fuse_adc=False`; gamma/beta are
+the per-channel ABN gain (unitless) and offset (ADC code units); `g0` is
+the unity-gain code gain in codes per dp unit.
 """
 from __future__ import annotations
 
@@ -50,10 +59,13 @@ class KernelPrecision:
 
     @property
     def plane_shift(self) -> int:
+        """Bits per input plane of the serial walk (1 bit-serial at
+        r_in <= 2, 4 nibble-serial above)."""
         return plane_layout(self.r_in)[0]
 
     @property
     def n_planes(self) -> int:
+        """Number of input planes the kernel walks (ceil(r_in/shift))."""
         return plane_layout(self.r_in)[1]
 
 
@@ -106,6 +118,35 @@ def kernel_variant(prec: KernelPrecision, bm: int = 256, bn: int = 256,
     shift, n_planes = plane_layout(prec.r_in)
     return _kernel_variant(shift, n_planes, prec.r_out, bm, bn, bk,
                            interpret, fuse_adc)
+
+
+def _clamp_block(pref: int, dim: int, align: int = 8) -> int:
+    """Largest useful block for `dim`: `pref` capped at dim rounded up to
+    `align` (Pallas blocks must tile the padded array)."""
+    return max(align, min(pref, -(-dim // align) * align))
+
+
+def kernel_variant_for_tile(prec: KernelPrecision, rows: int, k: int, n: int,
+                            *, bm: int = 256, bn: int = 256, bk: int = 512,
+                            interpret: bool = True,
+                            fuse_adc: bool = True) -> Callable:
+    """Kernel variant fitted to one dispatched tile's geometry.
+
+    Args:
+      prec: the (r_in, r_w, r_out) operating point.
+      rows, k, n: the tile's GEMM shape — stream-chunk rows x row-tile K x
+        col-tile N.  Under a sharded schedule these are the *per-device*
+        extents, so each device compiles blocks sized to its own tile
+        instead of padding to the full-macro defaults.
+      bm, bn, bk: preferred (maximum) block sizes; clamped per dimension.
+    Returns:
+      The cached callable of `kernel_variant` at the clamped block sizes —
+      numerically identical at any block size (exact int32 accumulation +
+      elementwise epilogue), so geometry clamping never changes a bit.
+    """
+    return kernel_variant(prec, bm=_clamp_block(bm, rows),
+                          bn=_clamp_block(bn, n), bk=_clamp_block(bk, k),
+                          interpret=interpret, fuse_adc=fuse_adc)
 
 
 @functools.lru_cache(maxsize=None)

@@ -21,3 +21,23 @@ def make_host_mesh():
     """Whatever this host offers (CPU smoke tests: 1 device)."""
     n = len(jax.devices())
     return make_mesh((n, 1), ("data", "model"))
+
+
+def make_engine_mesh(devices: int = 0, axis: str = "macro"):
+    """1-D mesh over the first `devices` host devices for the CIM engine's
+    sharded multi-macro dispatch (runtime.engine.ShardingConfig).
+
+    `devices=0` takes every visible device.  CPU-only dev/CI emulates a
+    bank of macros with XLA_FLAGS=--xla_force_host_platform_device_count=N
+    (set before jax import).  Raises ValueError when asking for more
+    devices than jax reports."""
+    import numpy as np
+
+    devs = jax.devices()
+    n = devices if devices > 0 else len(devs)
+    if n > len(devs):
+        raise ValueError(
+            f"sharded engine dispatch wants {n} devices but jax reports "
+            f"{len(devs)}; on CPU, relaunch with XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n}")
+    return jax.sharding.Mesh(np.asarray(devs[:n]), (axis,))

@@ -2,6 +2,12 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --smoke \
       --prompt-len 32 --gen-len 16 --batch 4
+
+`--cim-mode engine` routes every CIM linear through the precision-scalable
+inference runtime's batched dispatch (runtime/engine.py); with
+`--engine-devices D > 1` each layer's macro schedule additionally shards
+across a D-device mesh (ShardingConfig) — on CPU-only hosts emulate the
+bank of macros with XLA_FLAGS=--xla_force_host_platform_device_count=D.
 """
 from __future__ import annotations
 
@@ -25,12 +31,25 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--cim-mode", default="bypass",
-                    choices=["bypass", "fakequant"])
+                    choices=["bypass", "fakequant", "engine"])
+    ap.add_argument("--engine-devices", type=int, default=0,
+                    help="shard the engine-mode macro schedule across this "
+                         "many devices (0 = no sharding; engine mode only)")
+    ap.add_argument("--engine-axis", default="macro",
+                    help="mesh axis name for the sharded engine dispatch")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    sharding = None
+    if args.engine_devices:
+        if args.cim_mode != "engine":
+            ap.error("--engine-devices requires --cim-mode engine")
+        from repro.runtime import ShardingConfig
+        sharding = ShardingConfig(devices=args.engine_devices,
+                                  axis=args.engine_axis)
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    cfg = cfg.replace(cim=CIMConfig(mode=args.cim_mode, max_gamma=2.0**16))
+    cfg = cfg.replace(cim=CIMConfig(mode=args.cim_mode, max_gamma=2.0**16,
+                                    sharding=sharding))
     key = jax.random.PRNGKey(args.seed)
     params = tf.init_params(cfg, key)
     max_len = args.prompt_len + args.gen_len + 8

@@ -85,7 +85,7 @@ def lenet_engine(batch: int, h: int = 28, w: int = 28, in_ch: int = 1,
                                             cim)
     ecfg = EngineConfig(macro=cim.macro, adaptive_swing=cim.adaptive_swing,
                         gamma_bits=cim.gamma_bits, max_gamma=cim.max_gamma,
-                        noise=cim.noise)
+                        noise=cim.noise, sharding=cim.sharding)
     return CIMInferenceEngine(specs, ecfg, activations=acts, pools=pools)
 
 

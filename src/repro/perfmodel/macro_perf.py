@@ -132,28 +132,53 @@ def schedule_report(plan, *, clock_ns: float = 10.0, pipelined: bool = True,
     """Cycle/energy estimates for a runtime engine schedule.
 
     `plan` is a runtime.engine.NetworkPlan (duck-typed: only
-    `plan.layers[i].spec` / `.precision` and `plan.cfg.noise` are read, so
-    there is no perfmodel -> runtime import cycle).  Returns per-layer
-    reports, per-precision aggregates keyed "r{r_in}x{r_w}b", schedule
-    totals, and an echo of the schedule's noise settings (so a Monte-Carlo
-    accuracy report and its perf numbers always carry the operating point
-    they were taken at) — the model behind the paper's Fig. 22
-    precision-scaling curves, applied to an executable schedule instead of
-    a lone macro.
+    `plan.layers[i].spec` / `.precision` / `.shard` and `plan.cfg.noise` /
+    `.sharding` are read, so there is no perfmodel -> runtime import
+    cycle).  Returns per-layer reports, per-precision aggregates keyed
+    "r{r_in}x{r_w}b", schedule totals, and an echo of the schedule's noise
+    settings (so a Monte-Carlo accuracy report and its perf numbers always
+    carry the operating point they were taken at) — the model behind the
+    paper's Fig. 22 precision-scaling curves, applied to an executable
+    schedule instead of a lone macro.
+
+    Sharded plans (plan.cfg.sharding set) additionally report the device
+    partition: per-layer `rep["shard"]` carries the kind ("col" tiles vs
+    "rows" of the GEMM M dim), `macro_evals_per_device` (the critical-path
+    macro invocations one device performs) and `parallel_efficiency`
+    (useful work / devices x per-device work — 1.0 for an even split);
+    the report totals gain the same two columns plus a "sharding" echo.
     """
     noise = getattr(getattr(plan, "cfg", None), "noise", None)
     if noise is not None and noise.enabled:
         noise_echo = dict(dataclasses.asdict(noise))
     else:
         noise_echo = {"enabled": False}
+    sharding = getattr(getattr(plan, "cfg", None), "sharding", None)
     ap = AcceleratorPerfModel(clock_ns=clock_ns)
     layers = []
     per_prec: Dict[str, Dict[str, float]] = {}
     tot_ops = tot_ops8 = tot_e = tot_t = 0.0
+    tot_evals_dev = 0
     for lp in plan.layers:
         rep = ap.layer_report(lp.spec, gamma=gamma, pipelined=pipelined)
         if hasattr(lp, "macro_evals"):      # planned (k, n) tiles per M-row
             rep["macro_evals_schedule"] = lp.macro_evals
+        shard = getattr(lp, "shard", None)
+        if shard is not None:
+            # critical-path macro invocations one device performs: col
+            # sharding splits the col tiles, row sharding splits the M rows
+            row_tiles = len(lp.k_slices)
+            if shard.kind == "col":
+                evals_dev = row_tiles * shard.tiles_per_device * lp.spec.m
+            else:
+                evals_dev = lp.macro_evals * shard.rows_per_device
+            rep["shard"] = {
+                "kind": shard.kind,
+                "devices": shard.devices,
+                "macro_evals_per_device": evals_dev,
+                "parallel_efficiency": shard.efficiency,
+            }
+            tot_evals_dev += evals_dev
         if noise_echo["enabled"]:
             rep["noise"] = dict(noise_echo)   # per-layer copy, no aliasing
         layers.append(rep)
@@ -174,19 +199,41 @@ def schedule_report(plan, *, clock_ns: float = 10.0, pipelined: bool = True,
     for agg in per_prec.values():
         agg["tops"] = agg["ops"] / max(agg["time_s"], 1e-30) / 1e12
         agg["tops_per_w"] = agg["ops"] / max(agg["energy_j"], 1e-30) / 1e12
-    return {
+    total = {
+        "time_s": tot_t,
+        "energy_j": tot_e,
+        "tops": tot_ops / max(tot_t, 1e-30) / 1e12,
+        "tops_8b_norm": tot_ops8 / max(tot_t, 1e-30) / 1e12,
+        "tops_per_w": tot_ops / max(tot_e, 1e-30) / 1e12,
+        "macro_evals": plan.total_macro_evals,
+    }
+    report = {
         "layers": layers,
         "per_precision": per_prec,
         "noise": noise_echo,
-        "total": {
-            "time_s": tot_t,
-            "energy_j": tot_e,
-            "tops": tot_ops / max(tot_t, 1e-30) / 1e12,
-            "tops_8b_norm": tot_ops8 / max(tot_t, 1e-30) / 1e12,
-            "tops_per_w": tot_ops / max(tot_e, 1e-30) / 1e12,
-            "macro_evals": plan.total_macro_evals,
-        },
+        "total": total,
     }
+    if sharding is not None:
+        # schedule-level parallel efficiency: total single-device work over
+        # devices x the summed per-device critical paths.  NB units:
+        # total["macro_evals"] counts (row x col) tiles per M-row batch
+        # (plan.total_macro_evals, pre-sharding API); the two keys below
+        # count full macro *invocations* (x the GEMM-row extent m), the
+        # same unit as every per-layer rep["macro_evals"] — compare
+        # macro_evals_total against macro_evals_per_device, never
+        # macro_evals against macro_evals_per_device.
+        tot_evals = sum(rep["macro_evals"] for rep in layers)
+        devices = max((getattr(lp, "shard").devices
+                       for lp in plan.layers
+                       if getattr(lp, "shard", None) is not None),
+                      default=1)
+        total["macro_evals_total"] = tot_evals
+        total["macro_evals_per_device"] = tot_evals_dev
+        total["parallel_efficiency"] = (
+            tot_evals / max(devices * tot_evals_dev, 1))
+        report["sharding"] = {"devices": devices,
+                             "axis": getattr(sharding, "axis", None)}
+    return report
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,6 +1,7 @@
-"""Runtime subsystems: the precision-scalable CIM inference engine plus the
-elastic-mesh and fault-tolerance helpers used by the training launchers."""
+"""Runtime subsystems: the precision-scalable CIM inference engine (single-
+and multi-macro sharded dispatch) plus the elastic-mesh and fault-tolerance
+helpers used by the training launchers."""
 from repro.runtime.engine import (CIMInferenceEngine, EngineConfig,  # noqa
-                                  LayerPlan, NetworkPlan, im2col_patches,
-                                  plan_layer, plan_network, run_network,
-                                  run_network_reference)
+                                  LayerPlan, NetworkPlan, ShardingConfig,
+                                  im2col_patches, plan_layer, plan_network,
+                                  run_network, run_network_reference)

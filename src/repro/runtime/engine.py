@@ -1,4 +1,4 @@
-"""Precision-scalable CIM inference runtime.
+"""Precision-scalable CIM inference runtime (single- and multi-macro).
 
 The paper's headline lever is workload-adaptive 8-to-1b precision scaling
 (0.15-8 POPS/W); this module exposes it end-to-end: a network described as
@@ -28,6 +28,22 @@ through one engine:
     engine = CIMInferenceEngine(specs, activations=acts, pools=pools)
     logits = engine(params, images)              # (B, 28, 28, 1) -> (B, 10)
 
+Multi-macro sharding: the 1152x256 macro is a building block — the paper's
+system-level 40 TOPS/W numbers assume it is replicated.  With
+`EngineConfig(sharding=ShardingConfig(devices=D))` each layer's schedule
+partitions across a 1-D `jax.sharding.Mesh` of D devices (the
+`jax_compat.shard_map` shim; the per-device body is the same cached Pallas
+variant): layers with at least D independent col tiles shard those
+(`mapping.shard_layer` kind "col", disjoint output channels per device);
+layers with fewer col tiles shard the GEMM-row dimension M = B*OH*OW via
+the same stream_rows-style row chunking ("rows" kind, weights replicated).
+Both partitions are bit-exact with the single-device schedule — columns
+and GEMM rows never interact before the digital partial-sum recombination,
+and the noise model's per-tile draws are device-count independent (below).
+
+    cfg = EngineConfig(sharding=ShardingConfig(devices=8))
+    engine = CIMInferenceEngine(specs, cfg)      # same API, D-macro dispatch
+
 Numerics: under NO_NOISE the engine is bit-exact with `reference` at every
 supported precision — both walk identical tile schedules and evaluate the
 identical ADC floor expression; the kernel's int32 accumulator is exact for
@@ -38,7 +54,10 @@ signed-to-unsigned conversion + beta block does.
 
 Per-layer precision is free: each layer's (r_in, r_w, r_out) selects its
 kernel variant from a small cached table, so a mixed-precision network
-compiles one kernel per distinct operating point, not per layer.
+compiles one kernel per distinct operating point, not per layer; the
+variant's block sizes are clamped to the dispatched tile geometry
+(ops.kernel_variant_for_tile), so a sharded schedule's smaller per-device
+tiles do not pad up to full-macro blocks.
 
 Noise-injected mode (post-silicon studies, paper Sec. III.E/V.A): with
 `EngineConfig(noise=NoiseConfig(...))` the full equivalent noise model runs
@@ -48,12 +67,28 @@ code units and at the exact points the fakequant/sim paths inject them:
 per-physical-column SA offsets + 7b calibration residue (static per macro,
 shared across col tiles), thermal kT/C noise on the dp, DPL settling INL
 and MBIW charge-injection as gain terms on g0, and leakage droop.  Runs
-take a PRNG key (`engine(params, x, key)`); per-tile keys are derived by
-folding (layer, stream chunk, row tile, col tile) indices, so a fixed key
-is fully deterministic while tiles stay statistically independent.
-`CIMInferenceEngine.monte_carlo(params, x, key, n_trials)` stacks seeded
-trials for Monte-Carlo accuracy-vs-noise sweeps.  Under NO_NOISE the fused
-bit-exact path is unchanged.
+take a PRNG key (`engine(params, x, key)`); thermal draws are generated
+per (layer, row tile, col tile) over the layer's *full* GEMM-row extent
+and sliced per stream chunk / device shard, so a fixed key is fully
+deterministic AND invariant to both the stream_rows chunking and the
+device count — sharded noisy inference is bit-exact with the
+single-device path.  `CIMInferenceEngine.monte_carlo(params, x, key,
+n_trials)` stacks seeded trials for Monte-Carlo accuracy-vs-noise sweeps.
+Under NO_NOISE the fused bit-exact path is unchanged.
+
+Compilation: only `NoiseConfig.enabled`/`.calibrated` are static (they
+switch the kernel's fuse_adc path and the calibration branch); the numeric
+sigma/offset/gain terms enter the jitted schedule as *traced* scalars
+(NoiseConfig is a JAX pytree), so a sweep across noise operating points
+shares one compile: `engine(params, x, key, noise=point_i)`.
+
+Units cheat-sheet (see also core/noise_model.py):
+  * `dp` / `dp_hat`            — integer dot-product units (codes of the
+                                  ideal digital MAC, pre-ADC);
+  * `*_codes`                  — ADC output codes in [0, 2^r_out);
+  * `g0`                       — codes per dp unit at gamma=1 (unitless);
+  * `*_v`                      — volts (only inside the noise model);
+  * activations in/out         — real-valued (dequantized) float32.
 """
 from __future__ import annotations
 
@@ -73,6 +108,31 @@ from repro.kernels.cim_mbiw import ops as kops
 
 Params = List[Dict[str, jnp.ndarray]]
 
+# incremented once per jit trace of the schedule (a trace == a compile);
+# tests assert that a noise operating-point sweep does not grow it
+TRACE_COUNT = {"n": 0}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingConfig:
+    """Multi-macro (multi-device) partitioning of the planned schedule.
+
+    Attributes:
+      devices: mesh size D; 0 means "every device jax reports at plan
+        time".  The run raises if fewer devices are visible at dispatch.
+      axis: mesh axis name (purely cosmetic; shows up in shard_map specs).
+
+    Per-layer kind selection (col tiles vs GEMM rows) is automatic — see
+    `mapping.shard_layer`.  A `devices=1` config is a valid degenerate
+    case that still routes dispatch through shard_map on a 1-device mesh.
+    """
+    devices: int = 0
+    axis: str = "macro"
+
+    def resolve_devices(self) -> int:
+        """Concrete mesh size: `devices`, or every visible device."""
+        return self.devices if self.devices > 0 else jax.device_count()
+
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
@@ -82,34 +142,56 @@ class EngineConfig:
     gamma_bits: int = -1             # -1: continuous gamma; >=0: HW quant
     max_gamma: float = 32.0
     interpret: bool = True           # Pallas interpret mode (CPU) vs TPU
-    bm: int = 128                    # kernel block sizes (MXU-aligned)
-    bn: int = 128
+    bm: int = 128                    # kernel block sizes (MXU-aligned),
+    bn: int = 128                    # clamped per dispatched tile geometry
     bk: int = 256
     stream_rows: int = 0             # im2col streaming: GEMM rows per kernel
                                      # dispatch (0 = single dispatch); bounds
                                      # the Pallas working set for large maps
     noise: NoiseConfig = NO_NOISE    # post-silicon equivalent noise model;
                                      # enabled -> runs require a PRNG key
+    sharding: Optional[ShardingConfig] = None  # multi-macro dispatch; None
+                                     # keeps the single-device path
 
     def replace(self, **kw) -> "EngineConfig":
+        """A copy with the given fields replaced (dataclasses.replace)."""
         return dataclasses.replace(self, **kw)
 
 
 @dataclasses.dataclass(frozen=True)
 class LayerPlan:
-    """One layer's macro-tile schedule."""
+    """One layer's macro-tile schedule.
+
+    `n_slices` are *uniform* col tiles (mapping.split_even_slices): every
+    tile spans `tile_n` channels and the covered extent `n_pad` may exceed
+    spec.n — execution pads the column arrays and discards the excess.
+    Uniformity is what lets col tiles dispatch SPMD across devices and
+    keeps noise draws device-count independent.  `shard` is the layer's
+    device partition (None on single-device plans)."""
     spec: mapping.LayerSpec
     mp: mapping.MacroMapping
     precision: kops.KernelPrecision
     g0: float                            # unity-gain codes per dp unit
     k_slices: Tuple[Tuple[int, int], ...]  # (start, size) row tiles
-    n_slices: Tuple[Tuple[int, int], ...]  # (start, size) col tiles
+    n_slices: Tuple[Tuple[int, int], ...]  # (start, size) uniform col tiles
     activation: str = "none"             # "none" | "relu"
     pool: int = 1                        # max-pool window/stride epilogue
+    shard: Optional[mapping.LayerShard] = None
 
     @property
     def macro_evals(self) -> int:
+        """Macro invocations per M-row batch: row tiles x col tiles."""
         return len(self.k_slices) * len(self.n_slices)
+
+    @property
+    def tile_n(self) -> int:
+        """Channels per (uniform) col tile."""
+        return self.n_slices[0][1]
+
+    @property
+    def n_pad(self) -> int:
+        """Column extent covered by the uniform col tiles (>= spec.n)."""
+        return len(self.n_slices) * self.tile_n
 
     @property
     def out_shape(self) -> Tuple[int, ...]:
@@ -122,11 +204,14 @@ class LayerPlan:
 
 @dataclasses.dataclass(frozen=True)
 class NetworkPlan:
+    """An immutable, hashable planned schedule (the jit static argument)."""
     layers: Tuple[LayerPlan, ...]
     cfg: EngineConfig
 
     @property
     def precisions(self) -> Tuple[kops.KernelPrecision, ...]:
+        """Distinct kernel operating points, in first-use order (the
+        compiled-variant table of the schedule)."""
         seen: List[kops.KernelPrecision] = []
         for lp in self.layers:
             if lp.precision not in seen:
@@ -135,6 +220,7 @@ class NetworkPlan:
 
     @property
     def total_macro_evals(self) -> int:
+        """Schedule-wide macro invocations per M-row batch of work."""
         return sum(lp.macro_evals for lp in self.layers)
 
 
@@ -150,6 +236,17 @@ def _layer_g0(spec: mapping.LayerSpec, mp: mapping.MacroMapping,
 
 def plan_layer(spec: mapping.LayerSpec, cfg: EngineConfig = EngineConfig(),
                activation: str = "none", pool: int = 1) -> LayerPlan:
+    """Plan one layer: macro mapping, uniform col tiles, device partition.
+
+    Args:
+      spec: the GEMM/conv layer.
+      cfg: shared execution config; cfg.sharding (if set) adds the layer's
+        LayerShard for cfg.sharding.resolve_devices() macros.
+      activation: "none" | "relu" epilogue.
+      pool: max-pool window/stride (conv layers only, 1 = none).
+    Returns:
+      LayerPlan (hashable; part of the jit-static NetworkPlan).
+    """
     if pool < 1:
         raise ValueError(f"pool must be >= 1, got {pool}")
     if pool > 1 and spec.conv is None:
@@ -165,11 +262,14 @@ def plan_layer(spec: mapping.LayerSpec, cfg: EngineConfig = EngineConfig(),
                              f"{g.out_h}x{g.out_w}")
     mp = mapping.map_layer(spec, cfg.macro)
     prec = kops.KernelPrecision(spec.r_in, spec.r_w, spec.r_out)
+    shard = None
+    if cfg.sharding is not None:
+        shard = mapping.shard_layer(spec, mp, cfg.sharding.resolve_devices())
     return LayerPlan(
         spec=spec, mp=mp, precision=prec, g0=_layer_g0(spec, mp, cfg),
         k_slices=tuple(mapping.split_k_slices(spec.k, mp.row_tiles)),
-        n_slices=tuple(mapping.split_k_slices(spec.n, mp.col_tiles)),
-        activation=activation, pool=pool)
+        n_slices=tuple(mapping.split_even_slices(spec.n, mp.col_tiles)),
+        activation=activation, pool=pool, shard=shard)
 
 
 def _check_chain(layers: Sequence[LayerPlan]) -> None:
@@ -264,95 +364,137 @@ def _quantize_inputs(lp: LayerPlan, params: Dict[str, jnp.ndarray],
     return aq, wq, gamma
 
 
+def _pad_dim(x: jnp.ndarray, axis: int, size: int,
+             value: float = 0.0) -> jnp.ndarray:
+    """Pad `axis` of `x` up to `size` with a constant (no-op if already)."""
+    pad = size - x.shape[axis]
+    if pad <= 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg, constant_values=value)
+
+
 @dataclasses.dataclass
 class _LayerNoise:
     """Per-layer noise context of one engine run (built at trace time).
 
-    `offset_codes`/`droop_codes` are per *global* output channel; tiles
-    slice them.  `gain_mult` collects the deterministic INL terms (DPL
-    settling, MBIW charge injection) as a multiplier on the code gain;
-    `sigma_dp` is the thermal RMS in dp units (shared expression with the
-    fakequant path, noise_model.thermal_sigma_dp).  `key` seeds the
-    per-tile thermal draws."""
-    offset_codes: jnp.ndarray        # (N,) static SA residue, code units
-    droop_codes: jnp.ndarray         # (N,) leakage droop, code units
-    gain_mult: jnp.ndarray           # scalar, multiplies gamma * g0 on dp
-    sigma_dp: float                  # thermal RMS in dp units
-    key: jax.Array                   # base key for per-tile thermal draws
+    `offset_codes`/`droop_codes` are per padded output column (code units);
+    tiles slice them.  `gain_mult` collects the deterministic INL terms
+    (DPL settling, MBIW charge injection) as a multiplier on the code gain.
+    `thermal` holds the pre-drawn kT/C noise in dp units for every
+    (row tile, col tile) over the layer's full GEMM-row extent — shape
+    (k_tiles, n_tiles_padded, rows, tile_n) — so slicing rows (stream
+    chunks, row shards) or col tiles (device shards) never changes a
+    draw: noisy execution is chunking- and device-count-invariant."""
+    offset_codes: jnp.ndarray        # (n_cols_padded,) code units
+    droop_codes: jnp.ndarray         # (n_cols_padded,) code units
+    gain_mult: jnp.ndarray           # scalar multiplier on gamma * g0
+    thermal: jnp.ndarray             # (KT, NT_pad, rows, tile_n) dp units
+
+    def rows(self, sl: slice) -> "_LayerNoise":
+        """The context restricted to a GEMM-row slice."""
+        return dataclasses.replace(self, thermal=self.thermal[:, :, sl, :])
 
 
-def _layer_noise(lp: LayerPlan, cfg: EngineConfig, gamma: jnp.ndarray,
-                 key: jax.Array) -> _LayerNoise:
-    """Noise terms of one layer in code units, injected exactly where the
+def _layer_noise(lp: LayerPlan, cfg: EngineConfig, noise: NoiseConfig,
+                 gamma_p: jnp.ndarray, key: jax.Array, m: int) -> _LayerNoise:
+    """Noise terms of one layer in code/dp units, injected exactly where the
     fakequant (thermal, SA residue) and sim (settling, charge injection,
-    leakage) paths put them."""
-    noise, macro, spec = cfg.noise, cfg.macro, lp.spec
+    leakage) paths put them.  `noise` carries *traced* scalars; only its
+    enabled/calibrated flags are static.  `gamma_p` is the column-padded
+    ABN gain; `m` the layer's full GEMM-row extent (thermal draws cover it
+    once, device/chunk slices reuse them)."""
+    macro, spec = cfg.macro, lp.spec
     units = lp.mp.units_per_tile if cfg.adaptive_swing else macro.n_units
+    # memory note: the thermal field is O(row_tiles * n_pad * m) floats —
+    # the same order as the layer's aq.q/dp_hat buffers the engine already
+    # materializes (a small constant factor, not a new asymptotic class),
+    # but it is NOT bounded by stream_rows.  If a workload ever needs
+    # chunk-bounded noise memory, draw per fixed-size global row block
+    # instead (keys folding the block index keep the invariance contract).
     # static per-physical-column SA offsets after 7b calibration, shared
     # across col tiles (the macro is reused sequentially)
     res_v = nm.sample_column_residues(jax.random.fold_in(key, 0), spec.n,
                                       spec.r_w, noise, macro)
+    res_v = _pad_dim(res_v, 0, gamma_p.shape[0])
     lsb0_v = macro.alpha_adc() * macro.vddh / 2.0 ** (spec.r_out - 1)
-    offset_codes = gamma * res_v / lsb0_v
+    offset_codes = gamma_p * res_v / lsb0_v
     # leakage droop on V_acc, attenuated by the weight-parallel combination
     droop_v = nm.leakage_droop(spec.r_in, macro.t_dp_ns, noise) \
         * (1.0 - 2.0 ** (-spec.r_w))
-    droop_codes = gamma * droop_v / lsb0_v
+    droop_codes = gamma_p * droop_v / lsb0_v
     settle = nm.settle_fraction(units, macro.t_dp_ns, noise)
     ci = nm.charge_injection_gain(spec.r_in, noise, macro)
+    sigma_dp = nm.thermal_sigma_dp(noise, spec.r_out, lp.g0)
+    # one independent draw per (row tile, col tile) spanning all GEMM rows;
+    # keys fold the *global* tile indices, so any partition of rows or
+    # tiles across chunks/devices sees identical values
+    tkey = jax.random.fold_in(key, 1)
+    tsz = lp.tile_n
+    thermal = jnp.stack([
+        jnp.stack([
+            sigma_dp * jax.random.normal(
+                jax.random.fold_in(jax.random.fold_in(tkey, ki), ni),
+                (m, tsz))
+            for ni in range(len(lp.n_slices))])
+        for ki in range(len(lp.k_slices))])
     return _LayerNoise(
         offset_codes=offset_codes, droop_codes=droop_codes,
-        gain_mult=settle * (1.0 + ci),
-        sigma_dp=nm.thermal_sigma_dp(noise, spec.r_out, lp.g0),
-        key=jax.random.fold_in(key, 1))
+        gain_mult=jnp.asarray(settle * (1.0 + ci), jnp.float32),
+        thermal=thermal)
 
 
 def _noise_adc_code(lp: LayerPlan, dp: jnp.ndarray, gamma_t: jnp.ndarray,
                     beta_eff: jnp.ndarray, nctx: _LayerNoise,
-                    n_slice: Tuple[int, int], tkey: jax.Array) -> jnp.ndarray:
+                    n_slice: Tuple[int, int],
+                    thermal: jnp.ndarray) -> jnp.ndarray:
     """ADC conversion of one macro tile's raw dp with the noise terms
     applied pre-floor — the engine-side mirror of fakequant's
-    adc_quantize(dp + thermal, gain, beta + offsets)."""
+    adc_quantize(dp + thermal, gain, beta + offsets).  `thermal` is the
+    tile's pre-drawn kT/C slice (dp units, already row-aligned)."""
     ns, ne = n_slice
-    dp = dp.astype(jnp.float32) + nctx.sigma_dp * jax.random.normal(
-        tkey, dp.shape)
+    dp = dp.astype(jnp.float32) + thermal
     mid = 2.0 ** (lp.spec.r_out - 1)
     code = jnp.floor(mid + gamma_t * lp.g0 * nctx.gain_mult * dp + beta_eff
                      + nctx.offset_codes[ns:ne] - nctx.droop_codes[ns:ne])
     return jnp.clip(code, 0.0, 2.0 ** lp.spec.r_out - 1.0).astype(jnp.int32)
 
 
-def _tile_schedule(lp: LayerPlan, q_rows: jnp.ndarray, aq, wq,
-                   gamma: jnp.ndarray, beta: jnp.ndarray, *,
-                   matmul, nctx: Optional[_LayerNoise] = None,
-                   chunk_idx: int = 0) -> jnp.ndarray:
-    """One chunk of GEMM rows through the layer's (k, n) tile schedule;
-    `matmul` evaluates one macro tile (kernel variant or jnp oracle) and
-    returns int32 ADC codes — or raw int32 dp when a noise context is
-    given, in which case the ADC conversion (with the noise terms and a
-    per-tile PRNG key) runs here.  Returns dp_hat (rows, N) in dp units."""
+def _tile_schedule(lp: LayerPlan, q_rows: jnp.ndarray, zp: jnp.ndarray,
+                   wqq: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
+                   *, matmul,
+                   nctx: Optional[_LayerNoise] = None) -> jnp.ndarray:
+    """One block of GEMM rows through a (k, n) tile schedule.
+
+    `wqq`/`gamma`/`beta` span a whole number of uniform col tiles (the
+    caller's local column extent — all tiles on a single-device run, one
+    device's tiles under col sharding); `matmul` evaluates one macro tile
+    (kernel variant or jnp oracle) and returns int32 ADC codes — or raw
+    int32 dp when a noise context is given, in which case the ADC
+    conversion (with the noise terms and the tile's pre-drawn thermal
+    slice) runs here.  Returns dp_hat (rows, local cols) in dp units."""
     mid = 2.0 ** (lp.spec.r_out - 1)
     g0 = lp.g0
+    tsz = lp.tile_n
     dp_hat = []
-    for ni, (ns, nsz) in enumerate(lp.n_slices):
-        ne = ns + nsz
-        acc = jnp.zeros((q_rows.shape[0], nsz), jnp.float32)
+    for ni in range(wqq.shape[1] // tsz):
+        ns, ne = ni * tsz, (ni + 1) * tsz
+        acc = jnp.zeros((q_rows.shape[0], tsz), jnp.float32)
         for ki, (ks, ksz) in enumerate(lp.k_slices):
             ke = ks + ksz
             # zero-point: x = q*s + z -> z*colsum is per-channel constant,
             # folded into the ABN offset inside the ADC floor
-            zp_dp = (aq.zero / aq.scale) * jnp.sum(wq.q[ks:ke, ns:ne], axis=0)
+            zp_dp = zp * jnp.sum(wqq[ks:ke, ns:ne], axis=0)
             beta_eff = beta[ns:ne] + gamma[ns:ne] * g0 * zp_dp
-            out = matmul(q_rows[:, ks:ke], wq.q[ks:ke, ns:ne],
+            out = matmul(q_rows[:, ks:ke], wqq[ks:ke, ns:ne],
                          gamma[ns:ne], beta_eff, g0)
             if nctx is None:
                 codes = out
             else:
-                # independent thermal draw per (stream chunk, row, col) tile
-                tkey = jax.random.fold_in(jax.random.fold_in(
-                    jax.random.fold_in(nctx.key, chunk_idx), ki), ni)
                 codes = _noise_adc_code(lp, out, gamma[ns:ne], beta_eff,
-                                        nctx, (ns, ne), tkey)
+                                        nctx, (ns, ne),
+                                        nctx.thermal[ki, ni])
             # digital partial-sum recombination in dp units; dequantizing
             # against the *raw* beta keeps the zero-point contribution in
             # dp_hat, exactly like the fakequant training path
@@ -362,25 +504,118 @@ def _tile_schedule(lp: LayerPlan, q_rows: jnp.ndarray, aq, wq,
     return jnp.concatenate(dp_hat, axis=-1)
 
 
-def _layer_tiles(lp: LayerPlan, params: Dict[str, jnp.ndarray],
-                 x2: jnp.ndarray, cfg: EngineConfig, *,
-                 matmul, key: Optional[jax.Array] = None) -> jnp.ndarray:
-    """Run one layer's tile schedule over (M, K) GEMM rows.  With
-    `cfg.stream_rows` set, rows are streamed through the kernel in chunks
-    (the im2col streaming stage) — quantization stays global, and rows are
-    independent through the elementwise ADC epilogue, so chunking is
-    bit-invariant (and under noise, chunks draw from disjoint fold_in
-    keys, so chunking changes no distribution)."""
-    aq, wq, gamma = _quantize_inputs(lp, params, x2, cfg)
-    beta = params["abn_beta"]
-    nctx = _layer_noise(lp, cfg, gamma, key) if cfg.noise.enabled else None
-    m = x2.shape[0]
+def _schedule_rows(lp: LayerPlan, cfg: EngineConfig, q_rows: jnp.ndarray,
+                   zp: jnp.ndarray, wqq: jnp.ndarray, gamma: jnp.ndarray,
+                   beta: jnp.ndarray, *, matmul,
+                   nctx: Optional[_LayerNoise]) -> jnp.ndarray:
+    """Stream `q_rows` through the tile schedule in cfg.stream_rows chunks
+    (the im2col streaming stage).  Quantization stays global and the noise
+    context pre-draws per-tile thermal fields over all rows, so chunking is
+    bit-invariant — with or without noise."""
+    m = q_rows.shape[0]
     chunk = cfg.stream_rows if cfg.stream_rows > 0 else max(m, 1)
-    chunks = [_tile_schedule(lp, aq.q[s:s + chunk], aq, wq, gamma, beta,
-                             matmul=matmul, nctx=nctx, chunk_idx=ci)
-              for ci, s in enumerate(range(0, max(m, 1), chunk))]
-    dp_hat = chunks[0] if len(chunks) == 1 else jnp.concatenate(chunks, 0)
-    y = dp_hat * aq.scale * wq.scale.reshape(-1)
+    parts = []
+    for s in range(0, max(m, 1), chunk):
+        sl = slice(s, min(s + chunk, m))
+        parts.append(_tile_schedule(
+            lp, q_rows[sl], zp, wqq, gamma, beta, matmul=matmul,
+            nctx=nctx.rows(sl) if nctx is not None else None))
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, 0)
+
+
+def _engine_mesh(sharding: ShardingConfig, devices: int):
+    from repro.launch.mesh import make_engine_mesh
+    return make_engine_mesh(devices, sharding.axis)
+
+
+def _sharded_schedule(lp: LayerPlan, cfg: EngineConfig, q_rows: jnp.ndarray,
+                      zp: jnp.ndarray, wqq: jnp.ndarray, gamma: jnp.ndarray,
+                      beta: jnp.ndarray, *, matmul,
+                      nctx: Optional[_LayerNoise]) -> jnp.ndarray:
+    """Dispatch one layer's tile schedule across the device mesh.
+
+    kind "col": the uniform col tiles (padded up to a multiple of the
+    device count with all-zero dummy tiles) spread over the mesh axis —
+    each device runs `_schedule_rows` on its contiguous tile group, output
+    columns concatenate across devices.  kind "rows": the GEMM rows
+    (zero-padded to a multiple of the device count) spread instead, every
+    device holding the full weight tiles.  The per-device body is the same
+    `_schedule_rows` the serial path runs, and all noise terms are
+    pre-drawn outside the shard_map, so both kinds are bit-exact with the
+    single-device schedule (padding only ever adds discarded rows/cols)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.jax_compat import shard_map
+
+    shard, m = lp.shard, q_rows.shape[0]
+    mesh = _engine_mesh(cfg.sharding, shard.devices)
+    ax = cfg.sharding.axis
+    noisy = nctx is not None
+
+    def body(q_l, zp_l, wq_l, g_l, b_l, *noise_l):
+        nl = _LayerNoise(*noise_l) if noisy else None
+        return _schedule_rows(lp, cfg, q_l, zp_l, wq_l, g_l, b_l,
+                              matmul=matmul, nctx=nl)
+
+    if shard.kind == "col":
+        t_tot = shard.devices * shard.tiles_per_device
+        n_tot = t_tot * lp.tile_n
+        wqq = _pad_dim(wqq, 1, n_tot)
+        gamma = _pad_dim(gamma, 0, n_tot, value=1.0)   # 1.0: dequant div
+        beta = _pad_dim(beta, 0, n_tot)
+        args = [q_rows, zp, wqq, gamma, beta]
+        specs = [P(), P(), P(None, ax), P(ax), P(ax)]
+        if noisy:
+            args += [_pad_dim(nctx.offset_codes, 0, n_tot),
+                     _pad_dim(nctx.droop_codes, 0, n_tot),
+                     nctx.gain_mult, _pad_dim(nctx.thermal, 1, t_tot)]
+            specs += [P(ax), P(ax), P(), P(None, ax, None, None)]
+
+        out = shard_map(body, mesh=mesh, in_specs=tuple(specs),
+                        out_specs=P(None, ax), check_vma=False)(*args)
+        return out                       # (m, n_tot); caller slices cols
+
+    # kind == "rows": data-parallel over the GEMM-row dimension
+    m_tot = shard.devices * -(-max(m, 1) // shard.devices)
+    q_pad = _pad_dim(q_rows, 0, m_tot)
+    args = [q_pad, zp, wqq, gamma, beta]
+    specs = [P(ax, None), P(), P(), P(), P()]
+    if noisy:
+        args += [nctx.offset_codes, nctx.droop_codes, nctx.gain_mult,
+                 _pad_dim(nctx.thermal, 2, m_tot)]
+        specs += [P(), P(), P(), P(None, None, ax, None)]
+
+    out = shard_map(body, mesh=mesh, in_specs=tuple(specs),
+                    out_specs=P(ax, None), check_vma=False)(*args)
+    return out[:m]                       # drop row padding
+
+
+def _layer_tiles(lp: LayerPlan, params: Dict[str, jnp.ndarray],
+                 x2: jnp.ndarray, cfg: EngineConfig, *, matmul,
+                 key: Optional[jax.Array] = None,
+                 noise: Optional[NoiseConfig] = None,
+                 sharded: bool = False) -> jnp.ndarray:
+    """Run one layer's tile schedule over (M, K) GEMM rows.
+
+    Quantization and the noise context (offsets, per-tile thermal fields)
+    are built globally, then the schedule executes serially in stream
+    chunks or sharded across the mesh — numerically identical paths."""
+    aq, wq, gamma = _quantize_inputs(lp, params, x2, cfg)
+    n, n_pad = lp.spec.n, lp.n_pad
+    wqq = _pad_dim(wq.q, 1, n_pad)
+    gamma_p = _pad_dim(gamma, 0, n_pad, value=1.0)
+    beta_p = _pad_dim(params["abn_beta"], 0, n_pad)
+    m = x2.shape[0]
+    nctx = (_layer_noise(lp, cfg, noise, gamma_p, key, m)
+            if noise is not None else None)
+    zp = jnp.asarray(aq.zero / aq.scale, jnp.float32)
+    if sharded and lp.shard is not None:
+        dp_hat = _sharded_schedule(lp, cfg, aq.q, zp, wqq, gamma_p, beta_p,
+                                   matmul=matmul, nctx=nctx)
+    else:
+        dp_hat = _schedule_rows(lp, cfg, aq.q, zp, wqq, gamma_p, beta_p,
+                                matmul=matmul, nctx=nctx)
+    y = dp_hat[:, :n] * aq.scale * wq.scale.reshape(-1)
     if lp.activation == "relu":
         y = jax.nn.relu(y)
     elif lp.activation != "none":
@@ -390,7 +625,9 @@ def _layer_tiles(lp: LayerPlan, params: Dict[str, jnp.ndarray],
 
 def _run_layer(lp: LayerPlan, params: Dict[str, jnp.ndarray], x: jnp.ndarray,
                cfg: EngineConfig, *, matmul,
-               key: Optional[jax.Array] = None) -> jnp.ndarray:
+               key: Optional[jax.Array] = None,
+               noise: Optional[NoiseConfig] = None,
+               sharded: bool = False) -> jnp.ndarray:
     """One planned layer end-to-end: im2col (conv), tile schedule,
     activation, pooling, and the reshape back to the next layer's view."""
     g = lp.spec.conv
@@ -406,7 +643,8 @@ def _run_layer(lp: LayerPlan, params: Dict[str, jnp.ndarray], x: jnp.ndarray,
         if x2.shape[-1] != lp.spec.k:
             raise ValueError(f"dense layer expects {lp.spec.k} features, "
                              f"got {x2.shape[-1]} from {x.shape}")
-    y = _layer_tiles(lp, params, x2, cfg, matmul=matmul, key=key)
+    y = _layer_tiles(lp, params, x2, cfg, matmul=matmul, key=key,
+                     noise=noise, sharded=sharded)
     if g is not None:
         y = y.reshape(b, g.out_h, g.out_w, g.c_out)
     if lp.pool > 1:
@@ -419,11 +657,16 @@ def _run_layer(lp: LayerPlan, params: Dict[str, jnp.ndarray], x: jnp.ndarray,
 def _kernel_matmul(lp: LayerPlan, cfg: EngineConfig):
     # under noise the kernel dispatches in raw-dp mode; the noise ADC
     # epilogue in _tile_schedule owns the conversion
-    fn = kops.kernel_variant(lp.precision, bm=cfg.bm, bn=cfg.bn, bk=cfg.bk,
-                             interpret=cfg.interpret,
-                             fuse_adc=not cfg.noise.enabled)
+    fuse = not cfg.noise.enabled
 
     def matmul(xq, wqt, gamma_t, beta_t, g0):
+        # variant cache keyed on the dispatched tile geometry: per-device
+        # tiles of a sharded schedule get fitted block sizes, not
+        # full-macro padding
+        fn = kops.kernel_variant_for_tile(
+            lp.precision, xq.shape[0], xq.shape[1], wqt.shape[1],
+            bm=cfg.bm, bn=cfg.bn, bk=cfg.bk, interpret=cfg.interpret,
+            fuse_adc=fuse)
         return fn(xq, wqt, gamma_t, beta_t, g0)
     return matmul
 
@@ -447,7 +690,8 @@ def _reference_matmul(lp: LayerPlan, cfg: EngineConfig):
 
 
 def _forward(plan: NetworkPlan, params: Params, x: jnp.ndarray,
-             reference: bool, key: Optional[jax.Array] = None) -> jnp.ndarray:
+             reference: bool, key: Optional[jax.Array] = None,
+             noise: Optional[NoiseConfig] = None) -> jnp.ndarray:
     if len(params) != len(plan.layers):
         raise ValueError(f"{len(params)} param dicts for "
                          f"{len(plan.layers)} planned layers")
@@ -471,40 +715,81 @@ def _forward(plan: NetworkPlan, params: Params, x: jnp.ndarray,
                 f"input width {x.shape[-1]} != first layer's k={k0}")
         lead = x.shape[:-1]
         xc = x.reshape((-1, x.shape[-1])).astype(jnp.float32)
-    noisy = plan.cfg.noise.enabled
+    noisy = noise is not None
+    sharded = (not reference) and plan.cfg.sharding is not None
     for i, (lp, p) in enumerate(zip(plan.layers, params)):
         mk = _reference_matmul if reference else _kernel_matmul
         lkey = jax.random.fold_in(key, i) if noisy else None
         xc = _run_layer(lp, p, xc, plan.cfg, matmul=mk(lp, plan.cfg),
-                        key=lkey)
+                        key=lkey, noise=noise, sharded=sharded)
     return xc.reshape(lead + xc.shape[1:])
 
 
-@functools.partial(jax.jit, static_argnames=("plan",))
+@functools.partial(jax.jit, static_argnames=("plan", "reference"))
+def _run_network_jit(plan: NetworkPlan, params: Params, x: jnp.ndarray,
+                     key, noise, reference: bool) -> jnp.ndarray:
+    TRACE_COUNT["n"] += 1            # trace-time side effect: 1 per compile
+    return _forward(plan, params, x, reference=reference, key=key,
+                    noise=noise)
+
+
+def _dispatch_noise(plan: NetworkPlan,
+                    noise: Optional[NoiseConfig]) -> Optional[NoiseConfig]:
+    """Resolve the run's noise operating point as a *traced* operand.
+
+    None -> the planned point (or no noise at all under NO_NOISE plans);
+    an explicit NoiseConfig overrides the planned numeric terms at dispatch
+    time without recompiling, but must agree on `enabled` (that flag
+    switches the static fuse_adc kernel path — replan to change modes)."""
+    base = plan.cfg.noise
+    if noise is None:
+        return base if base.enabled else None
+    if bool(noise.enabled) != bool(base.enabled):
+        raise ValueError(
+            f"noise override enabled={noise.enabled} conflicts with the "
+            f"planned enabled={base.enabled}; replan with "
+            "EngineConfig(noise=...) to switch modes")
+    return noise if noise.enabled else None
+
+
 def run_network(plan: NetworkPlan, params: Params, x: jnp.ndarray,
-                key: Optional[jax.Array] = None) -> jnp.ndarray:
+                key: Optional[jax.Array] = None,
+                noise: Optional[NoiseConfig] = None) -> jnp.ndarray:
     """Execute the planned schedule through the Pallas kernel variants.
 
-    x: (..., K0) real-valued activations for a dense-first plan, or
-    (..., H, W, C_in) NHWC images for a conv-first plan; returns
-    (..., N_last) — or (..., out_h, out_w, C_out) if the last layer is a
-    conv.  `key` seeds the noise model when the plan has noise enabled
-    (required then, ignored under NO_NOISE)."""
-    return _forward(plan, params, x, reference=False, key=key)
+    Args:
+      plan: the (jit-static) NetworkPlan; with plan.cfg.sharding set the
+        schedule dispatches across the device mesh via shard_map.
+      params: one {"w", "abn_log_gamma", "abn_beta"} dict per layer.
+      x: (..., K0) real-valued activations for a dense-first plan, or
+        (..., H, W, C_in) NHWC images for a conv-first plan.
+      key: PRNG key seeding the noise model (required when the plan has
+        noise enabled, ignored under NO_NOISE).
+      noise: optional NoiseConfig whose *numeric* terms override the
+        planned operating point at dispatch time — traced scalars, so a
+        sweep across operating points shares one compile.
+    Returns:
+      (..., N_last) activations — or (..., out_h, out_w, C_out) if the
+      last layer is a conv.
+    """
+    return _run_network_jit(plan, params, x, key,
+                            _dispatch_noise(plan, noise), False)
 
 
-@functools.partial(jax.jit, static_argnames=("plan",))
 def run_network_reference(plan: NetworkPlan, params: Params, x: jnp.ndarray,
-                          key: Optional[jax.Array] = None) -> jnp.ndarray:
+                          key: Optional[jax.Array] = None,
+                          noise: Optional[NoiseConfig] = None) -> jnp.ndarray:
     """Pure-jnp digital oracle of the identical schedule (bit-exact with
     the kernel path — including under noise, where both share the same
-    post-matmul ADC epilogue and per-tile keys)."""
-    return _forward(plan, params, x, reference=True, key=key)
+    post-matmul ADC epilogue and pre-drawn per-tile thermal fields, and
+    including sharded plans, which the oracle executes serially)."""
+    return _run_network_jit(plan, params, x, key,
+                            _dispatch_noise(plan, noise), True)
 
 
 class CIMInferenceEngine:
     """Plans a LayerSpec network once; every call dispatches the cached
-    jit-compiled schedule."""
+    jit-compiled schedule (single-device or sharded per cfg.sharding)."""
 
     def __init__(self, specs: Sequence[mapping.LayerSpec],
                  cfg: EngineConfig = EngineConfig(),
@@ -529,31 +814,38 @@ class CIMInferenceEngine:
         return params
 
     def __call__(self, params: Params, x: jnp.ndarray,
-                 key: Optional[jax.Array] = None) -> jnp.ndarray:
-        return run_network(self.plan, params, x, key)
+                 key: Optional[jax.Array] = None,
+                 noise: Optional[NoiseConfig] = None) -> jnp.ndarray:
+        return run_network(self.plan, params, x, key, noise)
 
     def reference(self, params: Params, x: jnp.ndarray,
-                  key: Optional[jax.Array] = None) -> jnp.ndarray:
-        return run_network_reference(self.plan, params, x, key)
+                  key: Optional[jax.Array] = None,
+                  noise: Optional[NoiseConfig] = None) -> jnp.ndarray:
+        """The pure-jnp digital oracle of the same plan (bit-exact with
+        __call__ at every precision, clean or under a common key)."""
+        return run_network_reference(self.plan, params, x, key, noise)
 
     def monte_carlo(self, params: Params, x: jnp.ndarray, key: jax.Array,
-                    n_trials: int) -> jnp.ndarray:
+                    n_trials: int,
+                    noise: Optional[NoiseConfig] = None) -> jnp.ndarray:
         """Batched seeded noise trials: (n_trials, *engine(params, x).shape).
 
         Splits `key` into one subkey per trial and stacks the outputs;
         every trial reuses the jit cache of the planned schedule, so the
-        cost is n_trials dispatches, not n_trials compiles.  Deterministic
-        for a fixed key; requires a noise-enabled plan."""
+        cost is n_trials dispatches, not n_trials compiles (`noise` points
+        share the compile too — traced operands).  Deterministic for a
+        fixed key; requires a noise-enabled plan."""
         if not self.cfg.noise.enabled:
             raise ValueError("monte_carlo requires EngineConfig(noise=...) "
                              "with noise enabled")
         if n_trials < 1:
             raise ValueError(f"n_trials must be >= 1, got {n_trials}")
         keys = jax.random.split(key, n_trials)
-        return jnp.stack([run_network(self.plan, params, x, k)
+        return jnp.stack([run_network(self.plan, params, x, k, noise)
                           for k in keys])
 
     def perf_report(self, **kw):
-        """Per-layer + aggregate cycle/energy estimates (perfmodel)."""
+        """Per-layer + aggregate cycle/energy estimates (perfmodel);
+        sharded plans add per-device macro_evals and parallel efficiency."""
         from repro.perfmodel.macro_perf import schedule_report
         return schedule_report(self.plan, **kw)

@@ -119,6 +119,27 @@ def test_monte_carlo_shape_determinism_and_guard():
         clean.monte_carlo(params_c, x, key, 2)
 
 
+def test_noise_point_sweep_shares_one_compile():
+    """Noise sigma/offset terms are traced operands (NoiseConfig is a
+    pytree with static enabled/calibrated): sweeping the operating point
+    through `noise=` must not retrace/recompile the schedule."""
+    from repro.runtime import engine as rt
+    eng, params, x = _case([LayerSpec(m=8, k=144, n=16, r_in=4, r_w=2)],
+                           noise=NoiseConfig())
+    key = jax.random.PRNGKey(3)
+    base = np.asarray(eng(params, x, key))              # warm the jit cache
+    n0 = rt.TRACE_COUNT["n"]
+    outs = []
+    for s in (0.25, 1.0, 3.0):
+        point = NoiseConfig(thermal_rms_lsb8=0.52 * s, sa_sigma_v=0.02 * s)
+        outs.append(np.asarray(eng(params, x, key, noise=point)))
+    assert rt.TRACE_COUNT["n"] == n0, "noise-point sweep recompiled"
+    np.testing.assert_array_equal(outs[1], base)        # same point, same bits
+    assert np.any(outs[0] != outs[2])                   # terms really traced
+    with pytest.raises(ValueError, match="enabled"):
+        eng(params, x, key, noise=NO_NOISE)             # mode switch: replan
+
+
 # ---- statistical acceptance -----------------------------------------------
 
 def test_mc_thermal_std_matches_analytic():

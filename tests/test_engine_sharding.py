@@ -1,0 +1,272 @@
+"""Sharded multi-macro engine dispatch: bit-exactness acceptance suite.
+
+The acceptance bar (ISSUE 4): an engine sharded across a D-device mesh
+(col tiles when the layer offers >= D of them, GEMM rows otherwise) must be
+*bit-exact* with the plain single-device engine — across the precision
+grid, under NO_NOISE and under a fixed noise key, through uneven
+col-tile/device-count splits, and in the mesh-of-1 degenerate case.  The
+pure-jnp reference (which always executes serially) doubles as the oracle
+for the sharded kernel path.
+
+Multi-device cases need fake CPU devices:
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m pytest tests/test_engine_sharding.py
+Under the plain tier-1 run (1 device) those cases skip; the dedicated CI
+job runs them on 8 fake devices.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mapping
+from repro.core.mapping import LayerSpec
+from repro.core.noise_model import NoiseConfig
+from repro.models.cnn import lenet_engine_specs
+from repro.runtime import CIMInferenceEngine, EngineConfig, ShardingConfig
+
+N_DEV = len(jax.devices())
+R_INS = (1, 2, 4, 8)
+R_WS = (1, 2, 4)
+MESHES = (2, 8)             # >= 2 mesh shapes for the multi-device cases
+
+
+def _need(devices: int) -> None:
+    if N_DEV < devices:
+        pytest.skip(f"needs {devices} devices, jax reports {N_DEV} (set "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+def _sharded_pair(specs, devices, *, noise=None, seed=0, stream_rows=0,
+                  activations=None, pools=None):
+    """(single-device engine, sharded engine) over identical specs."""
+    base = EngineConfig(stream_rows=stream_rows)
+    if noise is not None:
+        base = base.replace(noise=noise)
+    eng1 = CIMInferenceEngine(specs, base, activations=activations,
+                              pools=pools)
+    engd = CIMInferenceEngine(
+        specs, base.replace(sharding=ShardingConfig(devices=devices)),
+        activations=activations, pools=pools)
+    params = eng1.init_params(jax.random.PRNGKey(seed))
+    return eng1, engd, params
+
+
+# ---- shard planning (no devices needed) -----------------------------------
+
+def test_shard_layer_kind_selection():
+    """Col tiles shard when there is at least one per device; otherwise the
+    GEMM-row dimension M shards (weights replicated)."""
+    spec = LayerSpec(m=24, k=144, n=320, r_in=4, r_w=4)   # 5 col tiles
+    mp = mapping.map_layer(spec)
+    assert mp.col_tiles == 5
+    col = mapping.shard_layer(spec, mp, 2)
+    assert col.kind == "col" and col.tiles_per_device == 3
+    assert col.efficiency == pytest.approx(5 / 6)
+    rows = mapping.shard_layer(spec, mp, 8)               # 5 < 8 -> rows
+    assert rows.kind == "rows" and rows.rows_per_device == 3
+    assert rows.efficiency == pytest.approx(24 / 24)
+    with pytest.raises(ValueError, match="devices"):
+        mapping.shard_layer(spec, mp, 0)
+
+
+def test_split_even_slices_uniform():
+    """Even col tiles are uniform (SPMD requirement); the covered extent
+    may pad past n."""
+    sl = mapping.split_even_slices(130, 3)
+    assert sl == [(0, 44), (44, 44), (88, 44)]
+    assert mapping.split_even_slices(64, 1) == [(0, 64)]
+
+
+def test_plan_carries_shard_and_uniform_tiles():
+    cfg = EngineConfig(sharding=ShardingConfig(devices=1))
+    eng = CIMInferenceEngine([LayerSpec(m=4, k=72, n=130, r_in=4, r_w=2)],
+                             cfg)
+    lp = eng.plan.layers[0]
+    assert lp.shard is not None and lp.shard.devices == 1
+    sizes = {sz for _, sz in lp.n_slices}
+    assert len(sizes) == 1                  # uniform
+    assert lp.n_pad >= lp.spec.n
+    assert CIMInferenceEngine(
+        [LayerSpec(m=4, k=72, n=130, r_in=4, r_w=2)]).plan.layers[0].shard \
+        is None
+
+
+def test_perf_report_shard_columns():
+    specs = [LayerSpec(m=8, k=144, n=80, r_in=4, r_w=4),
+             LayerSpec(m=8, k=80, n=32, r_in=4, r_w=4)]
+    rep = CIMInferenceEngine(
+        specs, EngineConfig(sharding=ShardingConfig(devices=1))
+    ).perf_report()
+    assert rep["sharding"]["devices"] == 1
+    assert rep["layers"][0]["shard"]["kind"] == "col"
+    assert rep["layers"][0]["shard"]["parallel_efficiency"] == 1.0
+    assert rep["total"]["macro_evals_per_device"] > 0
+    # unit consistency: *_total and *_per_device both count full macro
+    # invocations (x m), matching the per-layer macro_evals column
+    assert rep["total"]["macro_evals_total"] == sum(
+        l["macro_evals"] for l in rep["layers"])
+    assert rep["total"]["parallel_efficiency"] == pytest.approx(
+        rep["total"]["macro_evals_total"]
+        / (1 * rep["total"]["macro_evals_per_device"]))
+    assert 0.0 < rep["total"]["parallel_efficiency"] <= 1.0
+    plain = CIMInferenceEngine(specs).perf_report()
+    assert "sharding" not in plain and "shard" not in plain["layers"][0]
+
+
+# ---- mesh-of-1 degenerate case (always runs) ------------------------------
+
+def test_mesh_of_one_degenerate():
+    """A 1-device ShardingConfig still routes through shard_map and stays
+    bit-exact with the plain engine and the serial reference."""
+    specs = [LayerSpec(m=8, k=144, n=80, r_in=4, r_w=4),
+             LayerSpec(m=8, k=80, n=32, r_in=4, r_w=4)]
+    eng1, engd, params = _sharded_pair(specs, 1)
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(1), (8, 144)))
+    y1, yd = np.asarray(eng1(params, x)), np.asarray(engd(params, x))
+    np.testing.assert_array_equal(yd, y1)
+    np.testing.assert_array_equal(yd, np.asarray(engd.reference(params, x)))
+
+
+def test_mesh_of_one_degenerate_noise():
+    specs = [LayerSpec(m=8, k=144, n=80, r_in=4, r_w=4)]
+    eng1, engd, params = _sharded_pair(specs, 1, noise=NoiseConfig())
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(1), (8, 144)))
+    key = jax.random.PRNGKey(11)
+    np.testing.assert_array_equal(np.asarray(engd(params, x, key)),
+                                  np.asarray(eng1(params, x, key)))
+
+
+def test_sharding_wants_more_devices_than_visible():
+    """Dispatch (not planning) raises when the mesh cannot be built."""
+    eng = CIMInferenceEngine(
+        [LayerSpec(m=4, k=72, n=16, r_in=4, r_w=2)],
+        EngineConfig(sharding=ShardingConfig(devices=N_DEV + 1)))
+    params = eng.init_params(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 72))
+    with pytest.raises(ValueError, match="devices"):
+        eng(params, x)
+
+
+# ---- multi-device bit-exactness -------------------------------------------
+
+@pytest.mark.parametrize("devices", MESHES)
+@pytest.mark.parametrize("r_w", R_WS)
+@pytest.mark.parametrize("r_in", R_INS)
+def test_lenet_grid_sharded_bitexact(r_in, r_w, devices):
+    """Acceptance: the whole LeNet plan, sharded, matches the single-device
+    engine bit for bit across the full precision grid (NO_NOISE)."""
+    _need(devices)
+    from repro.core.cim_layers import CIMConfig
+    specs, acts, pools = lenet_engine_specs(
+        2, h=12, w=12, cim=CIMConfig(r_in=r_in, r_w=r_w))
+    eng1, engd, params = _sharded_pair(specs, devices, activations=acts,
+                                       pools=pools, seed=r_in * 10 + r_w)
+    x = jax.random.uniform(jax.random.PRNGKey(2), (2, 12, 12, 1))
+    np.testing.assert_array_equal(np.asarray(engd(params, x)),
+                                  np.asarray(eng1(params, x)))
+
+
+@pytest.mark.parametrize("devices", MESHES)
+def test_lenet_sharded_noise_fixed_key(devices):
+    """Acceptance: sharded noisy inference is bit-exact with the
+    single-device path under a fixed key (and with the serial reference),
+    and deterministic."""
+    _need(devices)
+    from repro.core.cim_layers import CIMConfig
+    specs, acts, pools = lenet_engine_specs(
+        2, h=12, w=12, cim=CIMConfig(r_in=4, r_w=2))
+    eng1, engd, params = _sharded_pair(specs, devices, noise=NoiseConfig(),
+                                       activations=acts, pools=pools)
+    x = jax.random.uniform(jax.random.PRNGKey(2), (2, 12, 12, 1))
+    key = jax.random.PRNGKey(5)
+    yd = np.asarray(engd(params, x, key))
+    np.testing.assert_array_equal(yd, np.asarray(eng1(params, x, key)))
+    np.testing.assert_array_equal(
+        yd, np.asarray(engd.reference(params, x, key)))
+    np.testing.assert_array_equal(yd, np.asarray(engd(params, x, key)))
+    assert np.any(yd != np.asarray(engd(params, x, jax.random.PRNGKey(6))))
+
+
+@pytest.mark.parametrize("devices", MESHES)
+@pytest.mark.parametrize("n", (320, 130))
+def test_uneven_col_tile_device_split(n, devices):
+    """Col-tile counts that do not divide the device count (5 tiles at
+    n=320, 3 at n=130 — the latter also pads columns inside its uniform
+    tiles) stay bit-exact, clean and noisy."""
+    _need(devices)
+    specs = [LayerSpec(m=8, k=144, n=n, r_in=4, r_w=4)]
+    eng1, engd, params = _sharded_pair(specs, devices)
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(1), (8, 144)))
+    np.testing.assert_array_equal(np.asarray(engd(params, x)),
+                                  np.asarray(eng1(params, x)))
+    n1, nd, paramsn = _sharded_pair(specs, devices, noise=NoiseConfig(),
+                                    seed=3)
+    key = jax.random.PRNGKey(9)
+    np.testing.assert_array_equal(np.asarray(nd(paramsn, x, key)),
+                                  np.asarray(n1(paramsn, x, key)))
+
+
+@pytest.mark.parametrize("devices", MESHES)
+def test_uneven_rows_kind(devices):
+    """The "rows" kind with M not divisible by the device count (row
+    padding) stays bit-exact, clean and noisy, incl. multi-row-tile K."""
+    _need(devices)
+    specs = [LayerSpec(m=5, k=2304, n=16, r_in=4, r_w=2)]   # 2 row tiles
+    eng1, engd, params = _sharded_pair(specs, devices)
+    assert engd.plan.layers[0].shard.kind == "rows"
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(1), (5, 2304)))
+    np.testing.assert_array_equal(np.asarray(engd(params, x)),
+                                  np.asarray(eng1(params, x)))
+    n1, nd, paramsn = _sharded_pair(specs, devices, noise=NoiseConfig(),
+                                    seed=4)
+    key = jax.random.PRNGKey(13)
+    np.testing.assert_array_equal(np.asarray(nd(paramsn, x, key)),
+                                  np.asarray(n1(paramsn, x, key)))
+
+
+def test_stream_chunking_bit_invariant_under_noise():
+    """The per-(row tile, col tile) thermal fields span all GEMM rows, so
+    the stream_rows chunking — the mechanism row sharding reuses — never
+    changes a bit even in noise mode (stronger than the PR 3 contract,
+    which only promised distribution invariance)."""
+    specs = [LayerSpec(m=16, k=72, n=16, r_in=4, r_w=2)]
+    key = jax.random.PRNGKey(2)
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(1), (16, 72)))
+    outs = []
+    for stream_rows in (0, 4, 7):
+        eng = CIMInferenceEngine(
+            specs, EngineConfig(noise=NoiseConfig(), stream_rows=stream_rows))
+        params = eng.init_params(jax.random.PRNGKey(0))
+        outs.append(np.asarray(eng(params, x, key)))
+    np.testing.assert_array_equal(outs[0], outs[1])
+    np.testing.assert_array_equal(outs[0], outs[2])
+
+
+@pytest.mark.parametrize("devices", MESHES)
+def test_sharded_streaming_composition(devices):
+    """stream_rows chunking composes with both shard kinds bit-exactly."""
+    _need(devices)
+    specs = [LayerSpec(m=12, k=144, n=320, r_in=4, r_w=4),  # col kind
+             LayerSpec(m=12, k=320, n=16, r_in=4, r_w=4)]   # rows kind
+    eng1, engd, params = _sharded_pair(specs, devices, stream_rows=5,
+                                       noise=NoiseConfig())
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(1), (12, 144)))
+    key = jax.random.PRNGKey(21)
+    np.testing.assert_array_equal(np.asarray(engd(params, x, key)),
+                                  np.asarray(eng1(params, x, key)))
+
+
+@pytest.mark.parametrize("devices", MESHES)
+def test_cim_layers_engine_mode_sharded(devices):
+    """CIMConfig.sharding threads through cim_linear_apply's engine mode."""
+    _need(devices)
+    from repro.core import cim_layers as cl
+    from repro.runtime import ShardingConfig as SC
+    cfg = cl.CIMConfig(mode="engine", r_in=4, r_w=4)
+    p = cl.init_cim_linear(jax.random.PRNGKey(0), 144, 320, cfg=cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 144))
+    y1 = np.asarray(cl.cim_linear_apply(p, x, cfg))
+    yd = np.asarray(cl.cim_linear_apply(
+        p, x, cfg.replace(sharding=SC(devices=devices))))
+    np.testing.assert_array_equal(yd, y1)
