@@ -215,8 +215,90 @@ def bench_scaling_sweep(devices=(1, 2, 4, 8), iters=3):
     return t_serial, rows
 
 
-def main():
+def bench_serving(batch=4, d=256, layers=3, steps=24, out_json=None):
+    """Plan-once/serve-many vs the legacy per-call path (ISSUE 5).
+
+    A decode-shaped workload (a `layers`-deep stack of d x d CIM linears at
+    batch `batch` — one LM decode step per call) served two ways:
+
+      * legacy: re-plan the network and re-enter run_network every call —
+        what serve.py paid per token before the compiled-program runtime
+        (the jit cache still hits on the equal plan, so this isolates the
+        per-call planning + weight-quantization-in-graph overhead);
+      * program: one compiled CIMProgram, weights pre-bound
+        (`prog.bind(params)`), every call a bucket-cache hit.
+
+    Both paths must agree bit-exactly.  Returns a row dict (per-call
+    latency, tokens/s, speedup) and, when `out_json` is set, writes it as
+    BENCH_serving.json for the serving-smoke CI job."""
+    import json
+    import warnings
+
+    from repro.core.mapping import LayerSpec
+    from repro.runtime import compile_program
+    from repro.runtime import engine as rt
+
+    specs = [LayerSpec(m=batch, k=d, n=d, r_in=4, r_w=2)
+             for _ in range(layers)]
+    acts = ["relu"] * (layers - 1) + ["none"]
+    prog = compile_program(specs, activations=acts)
+    params = prog.init_params(jax.random.PRNGKey(0))
+    bound = prog.bind(params)
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(1), (batch, d)))
+
+    def legacy_call():
+        plan = rt.plan_network(specs, rt.EngineConfig(), acts)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            return rt.run_network(plan, params, x)
+
+    y_prog = bound.serve(x)
+    y_prog.block_until_ready()                  # warm the program path
+    y_leg = legacy_call()
+    y_leg.block_until_ready()                   # warm the legacy jit cache
+    match = bool(jnp.all(y_prog == y_leg))
+
+    t0 = time.time()
+    for _ in range(steps):
+        legacy_call().block_until_ready()
+    t_leg = (time.time() - t0) / steps
+
+    t0 = time.time()
+    for _ in range(steps):
+        bound.serve(x).block_until_ready()
+    t_prog = (time.time() - t0) / steps
+
+    row = {
+        "batch": batch, "d_model": d, "layers": layers, "steps": steps,
+        "legacy_us_per_call": t_leg * 1e6,
+        "program_us_per_call": t_prog * 1e6,
+        "legacy_tokens_per_s": batch / t_leg,
+        "program_tokens_per_s": batch / t_prog,
+        "speedup": t_leg / t_prog,
+        "match": match,
+        "program_stats": prog.stats(),
+    }
+    if out_json:
+        with open(out_json, "w") as fh:
+            json.dump(row, fh, indent=2)
+    return row
+
+
+def _serving_row(out_json="BENCH_serving.json"):
+    """Run bench_serving, print its CSV row, return the oracle match."""
+    row = bench_serving(out_json=out_json)
+    print(f"serving_program,{row['program_us_per_call']:.0f},"
+          f"legacy{row['legacy_us_per_call']:.0f}us_"
+          f"speedup{row['speedup']:.2f}_match{row['match']}")
+    return row["match"]
+
+
+def main(serving_only=False):
     ok = True
+    if serving_only:
+        if not _serving_row():
+            raise SystemExit("program vs legacy serving mismatch")
+        return
     for (m, k, n) in ((128, 1152, 64), (256, 1152, 256), (512, 512, 128)):
         us, match = bench(m, k, n)
         ok &= match
@@ -243,9 +325,11 @@ def main():
         print(f"shard_engine_d{d},{t_strong:.0f},"
               f"strong_x{t_serial / t_strong:.2f}_weak{t_weak:.0f}us_"
               f"eff{eff:.2f}_match{match}")
+    ok &= _serving_row()
     if not ok:
         raise SystemExit("oracle/determinism mismatch in sweep (see log)")
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+    main(serving_only="serving" in sys.argv[1:])

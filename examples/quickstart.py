@@ -41,19 +41,20 @@ print(f"voltage-domain sim vs fakequant        : "
 # precision-specialized Pallas kernel variants, at each r_in operating
 # point.  Accuracy degrades gracefully as precision (and energy) drops.
 from repro.core.mapping import LayerSpec
-from repro.runtime import CIMInferenceEngine
+from repro.runtime import compile_program
 
 print("\nprecision-scalable engine (2-layer network, r_w = min(r_in, 4)):")
 for r_in in (8, 4, 2, 1):
     specs = [LayerSpec(m=256, k=144, n=64, r_in=r_in, r_w=min(r_in, 4)),
              LayerSpec(m=256, k=64, n=32, r_in=r_in, r_w=min(r_in, 4))]
-    engine = CIMInferenceEngine(specs)
-    eparams = engine.init_params(jax.random.PRNGKey(2))
-    y_eng = engine(eparams, x)                         # Pallas kernel path
-    y_ref = engine.reference(eparams, x)               # digital oracle
+    prog = compile_program(specs)          # plan once (global program cache)
+    eparams = prog.init_params(jax.random.PRNGKey(2))
+    bound = prog.bind(eparams)             # weights pre-quantized & packed
+    y_eng = bound.serve(x)                             # Pallas kernel path
+    y_ref = bound.reference(x)                         # digital oracle
     y_full = jax.nn.relu(x @ eparams[0]["w"]) @ eparams[1]["w"]
     rel_fp = float(jnp.linalg.norm(y_eng - y_full) / jnp.linalg.norm(y_full))
-    ee = engine.perf_report()["total"]["tops_per_w"]
+    ee = prog.perf_report()["total"]["tops_per_w"]
     print(f"  r_in={r_in}: bit-exact with reference: "
           f"{bool(jnp.all(y_eng == y_ref))}, rel err vs fp: {rel_fp:6.4f}, "
           f"modeled {ee:6.1f} TOPS/W")
@@ -64,8 +65,8 @@ for r_in in (8, 4, 2, 1):
 # the conv -> dense flatten planned as layer epilogues.  Engine logits track
 # the fakequant training path within quantization tolerance.
 from repro.data.pseudo_mnist import make_dataset
-from repro.models.cnn import (init_lenet, lenet_engine, lenet_forward,
-                              lenet_params_list)
+from repro.models.cnn import (init_lenet, lenet_forward, lenet_params_list,
+                              lenet_program)
 
 _, _, xte, _ = make_dataset(n_train=1, n_test=32)
 imgs = jnp.asarray(xte)[..., None]                       # (32, 28, 28, 1)
@@ -73,12 +74,12 @@ lcfg = CIMConfig(mode="fakequant", r_in=4, r_w=2)        # the paper's 4b LeNet
 lparams = init_lenet(jax.random.PRNGKey(3), cim=lcfg)
 logits_fq = lenet_forward(lparams, imgs, lcfg)
 logits_eng = lenet_forward(lparams, imgs, lcfg.replace(mode="engine"))
-eng = lenet_engine(imgs.shape[0], cim=lcfg)
-bitexact = bool(jnp.all(
-    logits_eng == eng.reference(lenet_params_list(lparams), imgs)))
+lprog = lenet_program(imgs.shape[0], cim=lcfg)           # the cached program
+lbound = lprog.bind(lenet_params_list(lparams))
+bitexact = bool(jnp.all(logits_eng == lbound.reference(imgs)))
 rel_fq = float(jnp.max(jnp.abs(logits_eng - logits_fq))
                / (jnp.max(jnp.abs(logits_fq)) + 1e-9))
-rep = eng.perf_report()["total"]
+rep = lprog.perf_report()["total"]
 print(f"\nLeNet conv front-end (pseudo-MNIST, 4b): bit-exact with digital "
       f"conv reference: {bitexact}, rel err vs fakequant: {rel_fq:.2e}, "
       f"modeled {rep['tops_per_w']:.1f} TOPS/W over "

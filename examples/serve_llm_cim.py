@@ -40,13 +40,18 @@ def main():
     params = tf.init_params(base, key)
     prompt = jax.random.randint(key, (args.batch, 16), 0, base.vocab_size)
 
-    for mode in ("bypass", "fakequant"):
+    # "engine" decodes through the compiled-program runtime: the first step
+    # builds the persistent program set (runtime/program.py), every later
+    # step is a pure cache hit — zero re-planning / re-tracing
+    for mode in ("bypass", "fakequant", "engine"):
         cfg = base.replace(cim=CIMConfig(mode=mode, max_gamma=2.0**16))
         t0 = time.time()
         gen = generate(cfg, params, prompt, args.gen_len)
         dt = time.time() - t0
         print(f"{mode:10s}: {args.gen_len * args.batch / dt:7.1f} tok/s   "
               f"sample={gen[0, :10].tolist()}")
+    from repro.runtime import program_cache_stats
+    print(f"engine program cache: {program_cache_stats()}")
 
 
 if __name__ == "__main__":

@@ -232,27 +232,38 @@ def _fakequant_forward(params: Dict, x: jnp.ndarray, cfg: CIMConfig,
     return y.astype(compute_dtype)
 
 
+def _engine_config(cfg: CIMConfig):
+    """The runtime EngineConfig mirroring a layer-level CIMConfig (the
+    one mapping every engine-mode entry point shares, so equal layer
+    configs hit one program-cache entry)."""
+    from repro.runtime import engine as rt
+    return rt.EngineConfig(macro=cfg.macro, adaptive_swing=cfg.adaptive_swing,
+                           gamma_bits=cfg.gamma_bits, max_gamma=cfg.max_gamma,
+                           noise=cfg.noise, sharding=cfg.sharding)
+
+
 def _engine_forward(params: Dict, x: jnp.ndarray, cfg: CIMConfig,
                     key: Optional[jax.Array] = None) -> jnp.ndarray:
     """Route the layer through the precision-scalable inference runtime.
 
-    Inference only (no STE gradients); the runtime plans the layer into
-    the macro's row/col tile schedule and dispatches the precision-
-    specialized Pallas kernel variant.  cfg.noise propagates into the
-    engine's noise-injected mode (requires `key`)."""
+    Inference only (no STE gradients); the layer fetches its compiled
+    program from the module-level cache of runtime/program.py (keyed on
+    the batch-bucketed LayerSpec + EngineConfig — planning happens once
+    per distinct (shape, CIMConfig), never per call) and dispatches the
+    precision-specialized Pallas kernel variant through the program's
+    bucket executable.  cfg.noise propagates into the engine's
+    noise-injected mode (requires `key`)."""
     # imported lazily: runtime.engine depends on this module for init
-    from repro.runtime import engine as rt
+    from repro.runtime.program import DEFAULT_BUCKETS, compile_program
 
     k_dim, n = params["w"].shape
     lead = x.shape[:-1]
     x2 = x.reshape((-1, k_dim))
-    spec = mapping.LayerSpec(m=x2.shape[0], k=k_dim, n=n, r_in=cfg.r_in,
+    bucket = DEFAULT_BUCKETS.bucket_for(x2.shape[0])
+    spec = mapping.LayerSpec(m=bucket, k=k_dim, n=n, r_in=cfg.r_in,
                              r_w=cfg.r_w, r_out=cfg.r_out)
-    ecfg = rt.EngineConfig(macro=cfg.macro, adaptive_swing=cfg.adaptive_swing,
-                           gamma_bits=cfg.gamma_bits, max_gamma=cfg.max_gamma,
-                           noise=cfg.noise, sharding=cfg.sharding)
-    plan = rt.plan_network([spec], ecfg)
-    y = rt.run_network(plan, [params], x2, key)
+    prog = compile_program([spec], _engine_config(cfg))
+    y = prog.serve([params], x2, key)
     return y.reshape(lead + (n,)).astype(x.dtype)
 
 
@@ -345,12 +356,20 @@ def cim_conv2d_apply(params: Dict, x: jnp.ndarray, cfg: CIMConfig,
 def _engine_conv_forward(params: Dict, x: jnp.ndarray, cfg: CIMConfig,
                          spec: mapping.LayerSpec,
                          key: Optional[jax.Array] = None) -> jnp.ndarray:
-    """Route a conv layer through the runtime's native conv front-end
-    (cfg.noise propagates into the engine's noise-injected mode)."""
-    from repro.runtime import engine as rt
+    """Route a conv layer through the runtime's native conv front-end via
+    the program cache: the conv spec is rebuilt at the batch bucket, the
+    compiled program is a cache hit after the first call for a given
+    (geometry, CIMConfig), and dispatch pads/slices the batch through the
+    bucket executable (cfg.noise propagates into the engine's
+    noise-injected mode)."""
+    from repro.runtime.program import DEFAULT_BUCKETS, compile_program
 
-    ecfg = rt.EngineConfig(macro=cfg.macro, adaptive_swing=cfg.adaptive_swing,
-                           gamma_bits=cfg.gamma_bits, max_gamma=cfg.max_gamma,
-                           noise=cfg.noise, sharding=cfg.sharding)
-    plan = rt.plan_network([spec], ecfg)
-    return rt.run_network(plan, [params], x, key).astype(x.dtype)
+    g = spec.conv
+    bucket = DEFAULT_BUCKETS.bucket_for(x.shape[0])
+    if bucket != g.batch:
+        spec = mapping.conv_layer_spec(
+            batch=bucket, h=g.h, w=g.w, c_in=g.c_in, c_out=g.c_out,
+            kh=g.kh, kw=g.kw, stride=g.stride, padding=g.padding,
+            r_in=spec.r_in, r_w=spec.r_w, r_out=spec.r_out)
+    prog = compile_program([spec], _engine_config(cfg))
+    return prog.serve([params], x, key).astype(x.dtype)

@@ -3,11 +3,17 @@
   PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --smoke \
       --prompt-len 32 --gen-len 16 --batch 4
 
-`--cim-mode engine` routes every CIM linear through the precision-scalable
-inference runtime's batched dispatch (runtime/engine.py); with
-`--engine-devices D > 1` each layer's macro schedule additionally shards
-across a D-device mesh (ShardingConfig) — on CPU-only hosts emulate the
-bank of macros with XLA_FLAGS=--xla_force_host_platform_device_count=D.
+`--cim-mode engine` routes every CIM linear through the plan-once/serve-many
+compiled-program runtime (runtime/program.py): the first prefill + decode
+step builds one persistent program set in the module-level program cache
+(one program per distinct layer geometry x batch bucket), and every later
+decode step is a pure cache hit — zero re-planning, zero re-tracing.  The
+launcher counts plans/traces across the decode loop and reports them;
+`--assert-no-recompile` turns any post-warmup growth into a failure (the
+serving-smoke CI job runs exactly that).  With `--engine-devices D > 1`
+each layer's macro schedule additionally shards across a D-device mesh
+(ShardingConfig) — on CPU-only hosts emulate the bank of macros with
+XLA_FLAGS=--xla_force_host_platform_device_count=D.
 """
 from __future__ import annotations
 
@@ -37,6 +43,10 @@ def main():
                          "many devices (0 = no sharding; engine mode only)")
     ap.add_argument("--engine-axis", default="macro",
                     help="mesh axis name for the sharded engine dispatch")
+    ap.add_argument("--assert-no-recompile", action="store_true",
+                    help="fail if any decode step after the first re-plans "
+                         "or re-traces the engine (the plan-once contract "
+                         "of the compiled-program runtime)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -73,14 +83,43 @@ def main():
 
     serve_step = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
     out = [tok]
+
+    # warmup decode step: compiles the serve_step graph (and, in engine
+    # mode, fills the persistent program set the remaining steps reuse)
+    from repro.runtime import engine as rt_engine
+    t_warm = 0.0
+    if args.gen_len > 0:
+        t0 = time.time()
+        tok, cache = serve_step(params, cache, tok)
+        tok.block_until_ready()
+        out.append(tok)
+        t_warm = time.time() - t0
+    plans0, traces0 = rt_engine.PLAN_COUNT["n"], rt_engine.TRACE_COUNT["n"]
+
+    steps = max(args.gen_len - 1, 0)
     t0 = time.time()
-    for _ in range(args.gen_len):
+    for _ in range(steps):
         tok, cache = serve_step(params, cache, tok)
         out.append(tok)
     gen = jnp.concatenate(out, axis=1)
+    gen.block_until_ready()
     dt = time.time() - t0
-    print(f"decode {args.gen_len} steps: {dt:.2f}s "
-          f"({args.gen_len * args.batch / dt:.1f} tok/s)")
+    d_plans = rt_engine.PLAN_COUNT["n"] - plans0
+    d_traces = rt_engine.TRACE_COUNT["n"] - traces0
+    if steps:
+        print(f"decode {steps} steps: {dt:.2f}s "
+              f"({steps * args.batch / dt:.1f} tok/s, "
+              f"{dt / steps * 1e3:.1f} ms/step; warmup {t_warm:.2f}s)")
+    print(f"decode recompiles after warmup: plans={d_plans} "
+          f"traces={d_traces}")
+    if args.cim_mode == "engine":
+        from repro.runtime import program_cache_stats
+        print(f"engine program cache: {program_cache_stats()}")
+    if args.assert_no_recompile and (d_plans or d_traces):
+        raise SystemExit(
+            f"FAIL: decode loop re-entered the planner/compiler after "
+            f"warmup (plans +{d_plans}, traces +{d_traces}) — the "
+            f"plan-once/serve-many contract is broken")
     print("sample:", gen[0].tolist())
 
 

@@ -74,19 +74,35 @@ def lenet_engine_specs(batch: int, h: int = 28, w: int = 28, in_ch: int = 1,
     return specs, ["relu", "relu", "relu", "none"], [2, 2, 1, 1]
 
 
-def lenet_engine(batch: int, h: int = 28, w: int = 28, in_ch: int = 1,
-                 n_classes: int = 10, cim: Optional[CIMConfig] = None):
-    """One CIMInferenceEngine executing the whole LeNet (conv1 -> pool ->
-    conv2 -> pool -> fc1 -> fc2) through the Pallas kernel variants."""
-    from repro.runtime import CIMInferenceEngine, EngineConfig
+def lenet_program(batch: int, h: int = 28, w: int = 28, in_ch: int = 1,
+                  n_classes: int = 10, cim: Optional[CIMConfig] = None):
+    """The whole LeNet (conv1 -> pool -> conv2 -> pool -> fc1 -> fc2) as
+    one compiled CIMProgram from the module-level program cache — planned
+    once per distinct (geometry, CIMConfig), then served many times
+    (`prog.bind(lenet_params_list(params)).serve(images)`)."""
+    from repro.core.cim_layers import _engine_config
+    from repro.runtime.program import compile_program
 
     cim = cim if cim is not None else CIMConfig()
     specs, acts, pools = lenet_engine_specs(batch, h, w, in_ch, n_classes,
                                             cim)
-    ecfg = EngineConfig(macro=cim.macro, adaptive_swing=cim.adaptive_swing,
-                        gamma_bits=cim.gamma_bits, max_gamma=cim.max_gamma,
-                        noise=cim.noise, sharding=cim.sharding)
-    return CIMInferenceEngine(specs, ecfg, activations=acts, pools=pools)
+    return compile_program(specs, _engine_config(cim), activations=acts,
+                           pools=pools)
+
+
+def lenet_engine(batch: int, h: int = 28, w: int = 28, in_ch: int = 1,
+                 n_classes: int = 10, cim: Optional[CIMConfig] = None):
+    """One CIMInferenceEngine executing the whole LeNet (conv1 -> pool ->
+    conv2 -> pool -> fc1 -> fc2) through the Pallas kernel variants (the
+    engine wraps the same cached program `lenet_program` returns)."""
+    from repro.core.cim_layers import _engine_config
+    from repro.runtime import CIMInferenceEngine
+
+    cim = cim if cim is not None else CIMConfig()
+    specs, acts, pools = lenet_engine_specs(batch, h, w, in_ch, n_classes,
+                                            cim)
+    return CIMInferenceEngine(specs, _engine_config(cim), activations=acts,
+                              pools=pools)
 
 
 def lenet_params_list(params: Dict) -> List[Dict]:
@@ -99,14 +115,19 @@ def lenet_forward(params: Dict, x: jnp.ndarray, cim: CIMConfig,
     """x (B, 28, 28, C) -> logits.
 
     mode="engine" runs the whole network — conv1/conv2/fc1/fc2 plus the
-    pooling and flatten epilogues — through one CIMInferenceEngine plan
-    (the jit cache is keyed on the plan, so repeated calls at one batch
-    shape reuse the compiled schedule).  With cim.noise enabled the engine
-    runs in its noise-injected mode and `key` seeds the noise model."""
+    pooling and flatten epilogues — through one compiled program from the
+    module-level cache (`lenet_program`): planning happens once per
+    distinct (geometry, CIMConfig) and the batch dispatches through the
+    program's bucket ladder, so repeated calls — at any batch size inside
+    a bucket — reuse the compiled schedule.  With cim.noise enabled the
+    engine runs in its noise-injected mode and `key` seeds the noise
+    model."""
     if cim.mode == "engine":
+        from repro.runtime.program import DEFAULT_BUCKETS
         b, h, w, c = x.shape
-        eng = lenet_engine(b, h, w, c, params["fc2"]["w"].shape[1], cim)
-        return eng(lenet_params_list(params), x, key=key)
+        prog = lenet_program(DEFAULT_BUCKETS.bucket_for(b), h, w, c,
+                             params["fc2"]["w"].shape[1], cim)
+        return prog.serve(lenet_params_list(params), x, key)
 
     def nk():
         nonlocal key

@@ -128,7 +128,7 @@ class EnergyModel:
 
 
 def schedule_report(plan, *, clock_ns: float = 10.0, pipelined: bool = True,
-                    gamma: float = 1.0) -> Dict[str, object]:
+                    gamma: float = 1.0, program=None) -> Dict[str, object]:
     """Cycle/energy estimates for a runtime engine schedule.
 
     `plan` is a runtime.engine.NetworkPlan (duck-typed: only
@@ -140,6 +140,13 @@ def schedule_report(plan, *, clock_ns: float = 10.0, pipelined: bool = True,
     carry the operating point they were taken at) — the model behind the
     paper's Fig. 22 precision-scaling curves, applied to an executable
     schedule instead of a lone macro.
+
+    `program` (optional, duck-typed on `.stats()`/`.buckets`) is the
+    compiled runtime.program.CIMProgram executing the plan: when given,
+    the report echoes its compile/cache observability —
+    report["program"] = {plans_built, executables_compiled, bucket
+    hit/miss counters, the bucket ladder config} — so a perf number always
+    carries the amortization state it was measured under.
 
     Sharded plans (plan.cfg.sharding set) additionally report the device
     partition: per-layer `rep["shard"]` carries the kind ("col" tiles vs
@@ -213,6 +220,12 @@ def schedule_report(plan, *, clock_ns: float = 10.0, pipelined: bool = True,
         "noise": noise_echo,
         "total": total,
     }
+    if program is not None:
+        prog_echo: Dict[str, object] = dict(program.stats())
+        buckets = getattr(program, "buckets", None)
+        if buckets is not None:
+            prog_echo["buckets"] = dataclasses.asdict(buckets)
+        report["program"] = prog_echo
     if sharding is not None:
         # schedule-level parallel efficiency: total single-device work over
         # devices x the summed per-device critical paths.  NB units:

@@ -1,7 +1,12 @@
 """Runtime subsystems: the precision-scalable CIM inference engine (single-
-and multi-macro sharded dispatch) plus the elastic-mesh and fault-tolerance
-helpers used by the training launchers."""
+and multi-macro sharded dispatch), the plan-once/serve-many compiled-program
+layer on top of it, plus the elastic-mesh and fault-tolerance helpers used
+by the training launchers."""
 from repro.runtime.engine import (CIMInferenceEngine, EngineConfig,  # noqa
                                   LayerPlan, NetworkPlan, ShardingConfig,
                                   im2col_patches, plan_layer, plan_network,
                                   run_network, run_network_reference)
+from repro.runtime.program import (BatchBuckets, BoundProgram,  # noqa
+                                   CIMProgram, clear_program_cache,
+                                   compile_program, program_cache_stats,
+                                   program_for_plan)

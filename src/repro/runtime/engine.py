@@ -13,6 +13,16 @@ chip's digital partial-sum recombination between row tiles.
     y = engine(params, x)                        # jit-compiled schedule
     y_ref = engine.reference(params, x)          # pure-jnp digital oracle
 
+Plan-once/serve-many: the deployment API lives in runtime/program.py —
+`compile_program(specs, cfg)` returns an immutable `CIMProgram` (a
+NetworkPlan plus an executable cache keyed on batch bucket, noise mode and
+device count), `program.bind(params)` pre-quantizes the weights into a
+`BoundProgram`, and `.serve`/`.serve_batch` dispatch ragged request batches
+through a power-of-two bucket ladder with zero re-planning and zero
+re-tracing after warmup.  `CIMInferenceEngine` (below) is a thin
+compatibility wrapper over that cache, and this module's `run_network` is
+the legacy per-call entry (DeprecationWarning, still bit-exact).
+
 Convolution front-end: a `LayerSpec` built by `mapping.conv_layer_spec`
 carries its NHWC `ConvGeometry`; the engine then consumes image
 activations directly — the K = kh*kw*C_in row groups of the paper's
@@ -111,6 +121,37 @@ Params = List[Dict[str, jnp.ndarray]]
 # incremented once per jit trace of the schedule (a trace == a compile);
 # tests assert that a noise operating-point sweep does not grow it
 TRACE_COUNT = {"n": 0}
+
+# incremented once per plan_network() that actually plans (a compiled
+# program is planned exactly once; repeated dispatches through the
+# runtime.program cache must be cache hits) — the planning-side mirror of
+# TRACE_COUNT, asserted by tests/test_program.py
+PLAN_COUNT = {"n": 0}
+
+# thermal kT/C draws are generated per fixed-size global GEMM-row block
+# (keys fold the block index), then sliced to the live extent: the values a
+# given (layer, row tile, col tile, GEMM row) sees are invariant to the
+# total row extent, so batch-bucket padding, stream_rows chunking and
+# device sharding all reuse identical draws (jax's threefry bits are NOT
+# prefix-stable across draw shapes, so a single full-extent draw would
+# change every value whenever padding changed the extent)
+NOISE_ROW_BLOCK = 128
+
+_DEPRECATION = {"warned": False}
+
+
+def _warn_legacy_entry(name: str) -> None:
+    """One non-spammy DeprecationWarning per process for the per-call API."""
+    if _DEPRECATION["warned"]:
+        return
+    _DEPRECATION["warned"] = True
+    import warnings
+    warnings.warn(
+        f"{name} re-enters the engine per call; compile once with "
+        "repro.runtime.program.compile_program(...) (or "
+        "CIMInferenceEngine.compile()) and serve through the returned "
+        "CIMProgram/BoundProgram for the plan-once/serve-many path",
+        DeprecationWarning, stacklevel=3)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -331,6 +372,7 @@ def plan_network(specs: Sequence[mapping.LayerSpec],
     layers = tuple(plan_layer(s, cfg, act, pool)
                    for s, act, pool in zip(specs, activations, pools))
     _check_chain(layers)
+    PLAN_COUNT["n"] += 1
     return NetworkPlan(layers=layers, cfg=cfg)
 
 
@@ -351,19 +393,6 @@ def im2col_patches(x: jnp.ndarray, g: mapping.ConvGeometry) -> jnp.ndarray:
     return jnp.swapaxes(patches, -1, -2).reshape(b, oh, ow, kf)
 
 
-def _quantize_inputs(lp: LayerPlan, params: Dict[str, jnp.ndarray],
-                     x2: jnp.ndarray, cfg: EngineConfig):
-    """Shared prologue of the kernel and reference paths: dynamic activation
-    quantization, weight quantization, ABN gamma."""
-    from repro.core.quantization import quantize_act, quantize_weight
-    aq = quantize_act(x2, lp.spec.r_in)
-    wq = quantize_weight(params["w"], lp.spec.r_w, axis=0)
-    gamma = abn_lib.abn_gamma(
-        abn_lib.ABNParams(params["abn_log_gamma"], params["abn_beta"]),
-        gamma_bits=cfg.gamma_bits, max_gamma=cfg.max_gamma)
-    return aq, wq, gamma
-
-
 def _pad_dim(x: jnp.ndarray, axis: int, size: int,
              value: float = 0.0) -> jnp.ndarray:
     """Pad `axis` of `x` up to `size` with a constant (no-op if already)."""
@@ -373,6 +402,64 @@ def _pad_dim(x: jnp.ndarray, axis: int, size: int,
     cfg = [(0, 0)] * x.ndim
     cfg[axis] = (0, pad)
     return jnp.pad(x, cfg, constant_values=value)
+
+
+def bind_layer(lp: LayerPlan, params: Dict[str, jnp.ndarray],
+               cfg: EngineConfig) -> Dict[str, jnp.ndarray]:
+    """Precompute one layer's weight-side operands (the `bind` stage).
+
+    Everything here depends only on the parameters and the plan — not on the
+    activations — so a compiled program computes it once
+    (`CIMProgram.bind(params)`) and removes weight quantization + ABN gamma
+    evaluation from the per-call path; the legacy per-call entry points run
+    the same function inside their jitted graph.
+
+    Args:
+      lp: the planned layer.
+      params: {"w" (K, N), "abn_log_gamma" (N,), "abn_beta" (N,)}.
+      cfg: shared execution config (gamma quantization settings).
+    Returns:
+      dict of arrays, column-padded to the plan's uniform col-tile extent:
+      "wqq" (K, n_pad) odd-integer weight codes, "w_scale" (N,) dequant
+      scale, "gamma_p"/"beta_p" (n_pad,) padded ABN gain/offset (gamma pads
+      with 1.0 — it divides in the dequant).
+    """
+    from repro.core.quantization import quantize_weight
+    wq = quantize_weight(params["w"], lp.spec.r_w, axis=0)
+    gamma = abn_lib.abn_gamma(
+        abn_lib.ABNParams(params["abn_log_gamma"], params["abn_beta"]),
+        gamma_bits=cfg.gamma_bits, max_gamma=cfg.max_gamma)
+    n_pad = lp.n_pad
+    return {
+        "wqq": _pad_dim(wq.q, 1, n_pad),
+        "w_scale": wq.scale.reshape(-1),
+        "gamma_p": _pad_dim(gamma, 0, n_pad, value=1.0),
+        "beta_p": _pad_dim(params["abn_beta"], 0, n_pad),
+    }
+
+
+def bind_network(plan: NetworkPlan, params: Params) -> Tuple[Dict, ...]:
+    """bind_layer over a whole plan: one weight-side operand dict per layer
+    (the payload of a BoundProgram).  Validates the per-layer param count."""
+    if len(params) != len(plan.layers):
+        raise ValueError(f"{len(params)} param dicts for "
+                         f"{len(plan.layers)} planned layers")
+    return tuple(bind_layer(lp, p, plan.cfg)
+                 for lp, p in zip(plan.layers, params))
+
+
+def _mask_pad_rows(x: jnp.ndarray, m_valid: jnp.ndarray) -> jnp.ndarray:
+    """Overwrite batch rows at index >= m_valid with a copy of row 0.
+
+    Batch-bucketed dispatch pads the leading batch axis up to a bucket
+    size; this runs before every layer so the padded rows are always
+    duplicates of a live row when the dynamic activation quantization
+    computes its global min/max (duplicates never move a min/max), keeping
+    the valid rows bit-exact with an unpadded run — even in noise mode,
+    where the padded rows decorrelate from their source within a layer."""
+    idx = jax.lax.broadcasted_iota(
+        jnp.int32, (x.shape[0],) + (1,) * (x.ndim - 1), 0)
+    return jnp.where(idx < m_valid, x, x[:1])
 
 
 @dataclasses.dataclass
@@ -407,12 +494,11 @@ def _layer_noise(lp: LayerPlan, cfg: EngineConfig, noise: NoiseConfig,
     once, device/chunk slices reuse them)."""
     macro, spec = cfg.macro, lp.spec
     units = lp.mp.units_per_tile if cfg.adaptive_swing else macro.n_units
-    # memory note: the thermal field is O(row_tiles * n_pad * m) floats —
-    # the same order as the layer's aq.q/dp_hat buffers the engine already
-    # materializes (a small constant factor, not a new asymptotic class),
-    # but it is NOT bounded by stream_rows.  If a workload ever needs
-    # chunk-bounded noise memory, draw per fixed-size global row block
-    # instead (keys folding the block index keep the invariance contract).
+    # memory note: the thermal field is O(row_tiles * n_pad * m) floats
+    # (m rounded up to NOISE_ROW_BLOCK) — the same order as the layer's
+    # aq.q/dp_hat buffers the engine already materializes (a small constant
+    # factor, not a new asymptotic class), but it is NOT bounded by
+    # stream_rows.
     # static per-physical-column SA offsets after 7b calibration, shared
     # across col tiles (the macro is reused sequentially)
     res_v = nm.sample_column_residues(jax.random.fold_in(key, 0), spec.n,
@@ -427,17 +513,27 @@ def _layer_noise(lp: LayerPlan, cfg: EngineConfig, noise: NoiseConfig,
     settle = nm.settle_fraction(units, macro.t_dp_ns, noise)
     ci = nm.charge_injection_gain(spec.r_in, noise, macro)
     sigma_dp = nm.thermal_sigma_dp(noise, spec.r_out, lp.g0)
-    # one independent draw per (row tile, col tile) spanning all GEMM rows;
-    # keys fold the *global* tile indices, so any partition of rows or
-    # tiles across chunks/devices sees identical values
+    # one independent field per (row tile, col tile) spanning all GEMM rows,
+    # generated in fixed NOISE_ROW_BLOCK-row blocks whose keys fold the
+    # *global* (row tile, col tile, row block) indices: any partition of
+    # rows or tiles across chunks/devices sees identical values, and a
+    # batch-bucketed run (rows padded past the live extent) only *extends*
+    # the field — the live-row prefix never changes
     tkey = jax.random.fold_in(key, 1)
     tsz = lp.tile_n
+    n_blocks = -(-max(m, 1) // NOISE_ROW_BLOCK)
+
+    def tile_field(ki: int, ni: int) -> jnp.ndarray:
+        kt = jax.random.fold_in(jax.random.fold_in(tkey, ki), ni)
+        blocks = [jax.random.normal(jax.random.fold_in(kt, b),
+                                    (NOISE_ROW_BLOCK, tsz))
+                  for b in range(n_blocks)]
+        field = blocks[0] if n_blocks == 1 else jnp.concatenate(blocks)
+        return field[:m]
+
     thermal = jnp.stack([
-        jnp.stack([
-            sigma_dp * jax.random.normal(
-                jax.random.fold_in(jax.random.fold_in(tkey, ki), ni),
-                (m, tsz))
-            for ni in range(len(lp.n_slices))])
+        jnp.stack([sigma_dp * tile_field(ki, ni)
+                   for ni in range(len(lp.n_slices))])
         for ki in range(len(lp.k_slices))])
     return _LayerNoise(
         offset_codes=offset_codes, droop_codes=droop_codes,
@@ -590,21 +686,22 @@ def _sharded_schedule(lp: LayerPlan, cfg: EngineConfig, q_rows: jnp.ndarray,
     return out[:m]                       # drop row padding
 
 
-def _layer_tiles(lp: LayerPlan, params: Dict[str, jnp.ndarray],
+def _layer_tiles(lp: LayerPlan, bind: Dict[str, jnp.ndarray],
                  x2: jnp.ndarray, cfg: EngineConfig, *, matmul,
                  key: Optional[jax.Array] = None,
                  noise: Optional[NoiseConfig] = None,
                  sharded: bool = False) -> jnp.ndarray:
     """Run one layer's tile schedule over (M, K) GEMM rows.
 
-    Quantization and the noise context (offsets, per-tile thermal fields)
-    are built globally, then the schedule executes serially in stream
-    chunks or sharded across the mesh — numerically identical paths."""
-    aq, wq, gamma = _quantize_inputs(lp, params, x2, cfg)
-    n, n_pad = lp.spec.n, lp.n_pad
-    wqq = _pad_dim(wq.q, 1, n_pad)
-    gamma_p = _pad_dim(gamma, 0, n_pad, value=1.0)
-    beta_p = _pad_dim(params["abn_beta"], 0, n_pad)
+    `bind` carries the precomputed weight-side operands (bind_layer);
+    activation quantization and the noise context (offsets, per-tile
+    thermal fields) are built globally per call, then the schedule executes
+    serially in stream chunks or sharded across the mesh — numerically
+    identical paths."""
+    from repro.core.quantization import quantize_act
+    aq = quantize_act(x2, lp.spec.r_in)
+    n = lp.spec.n
+    wqq, gamma_p, beta_p = bind["wqq"], bind["gamma_p"], bind["beta_p"]
     m = x2.shape[0]
     nctx = (_layer_noise(lp, cfg, noise, gamma_p, key, m)
             if noise is not None else None)
@@ -615,7 +712,7 @@ def _layer_tiles(lp: LayerPlan, params: Dict[str, jnp.ndarray],
     else:
         dp_hat = _schedule_rows(lp, cfg, aq.q, zp, wqq, gamma_p, beta_p,
                                 matmul=matmul, nctx=nctx)
-    y = dp_hat[:, :n] * aq.scale * wq.scale.reshape(-1)
+    y = dp_hat[:, :n] * aq.scale * bind["w_scale"]
     if lp.activation == "relu":
         y = jax.nn.relu(y)
     elif lp.activation != "none":
@@ -623,7 +720,7 @@ def _layer_tiles(lp: LayerPlan, params: Dict[str, jnp.ndarray],
     return y
 
 
-def _run_layer(lp: LayerPlan, params: Dict[str, jnp.ndarray], x: jnp.ndarray,
+def _run_layer(lp: LayerPlan, bind: Dict[str, jnp.ndarray], x: jnp.ndarray,
                cfg: EngineConfig, *, matmul,
                key: Optional[jax.Array] = None,
                noise: Optional[NoiseConfig] = None,
@@ -643,7 +740,7 @@ def _run_layer(lp: LayerPlan, params: Dict[str, jnp.ndarray], x: jnp.ndarray,
         if x2.shape[-1] != lp.spec.k:
             raise ValueError(f"dense layer expects {lp.spec.k} features, "
                              f"got {x2.shape[-1]} from {x.shape}")
-    y = _layer_tiles(lp, params, x2, cfg, matmul=matmul, key=key,
+    y = _layer_tiles(lp, bind, x2, cfg, matmul=matmul, key=key,
                      noise=noise, sharded=sharded)
     if g is not None:
         y = y.reshape(b, g.out_h, g.out_w, g.c_out)
@@ -689,12 +786,11 @@ def _reference_matmul(lp: LayerPlan, cfg: EngineConfig):
     return matmul
 
 
-def _forward(plan: NetworkPlan, params: Params, x: jnp.ndarray,
-             reference: bool, key: Optional[jax.Array] = None,
-             noise: Optional[NoiseConfig] = None) -> jnp.ndarray:
-    if len(params) != len(plan.layers):
-        raise ValueError(f"{len(params)} param dicts for "
-                         f"{len(plan.layers)} planned layers")
+def _forward(plan: NetworkPlan, binds: Sequence[Dict[str, jnp.ndarray]],
+             x: jnp.ndarray, reference: bool,
+             key: Optional[jax.Array] = None,
+             noise: Optional[NoiseConfig] = None,
+             m_valid: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     if plan.cfg.noise.enabled and key is None:
         raise ValueError(
             "noise-injected engine run requires a PRNG key: pass key= to "
@@ -717,20 +813,37 @@ def _forward(plan: NetworkPlan, params: Params, x: jnp.ndarray,
         xc = x.reshape((-1, x.shape[-1])).astype(jnp.float32)
     noisy = noise is not None
     sharded = (not reference) and plan.cfg.sharding is not None
-    for i, (lp, p) in enumerate(zip(plan.layers, params)):
+    for i, (lp, bind) in enumerate(zip(plan.layers, binds)):
+        if m_valid is not None:       # batch-bucketed run: re-pin pad rows
+            xc = _mask_pad_rows(xc, m_valid)
         mk = _reference_matmul if reference else _kernel_matmul
         lkey = jax.random.fold_in(key, i) if noisy else None
-        xc = _run_layer(lp, p, xc, plan.cfg, matmul=mk(lp, plan.cfg),
+        xc = _run_layer(lp, bind, xc, plan.cfg, matmul=mk(lp, plan.cfg),
                         key=lkey, noise=noise, sharded=sharded)
     return xc.reshape(lead + xc.shape[1:])
 
 
-@functools.partial(jax.jit, static_argnames=("plan", "reference"))
-def _run_network_jit(plan: NetworkPlan, params: Params, x: jnp.ndarray,
-                     key, noise, reference: bool) -> jnp.ndarray:
+@functools.partial(jax.jit, static_argnames=("plan", "bound", "reference"))
+def _exec_jit(plan: NetworkPlan, payload, x: jnp.ndarray, m_valid,
+              key, noise, bound: bool, reference: bool) -> jnp.ndarray:
+    """The one jitted executable behind every engine entry point.
+
+    `payload` is the per-layer parameter list (bound=False: weight binding
+    runs inside this graph, the legacy per-call behaviour) or a tuple of
+    bind_layer products (bound=True: weight quantization left the per-call
+    path at CIMProgram.bind time).  `m_valid` (traced) marks the live batch
+    extent of a bucket-padded run, or None for exact-shape dispatch."""
     TRACE_COUNT["n"] += 1            # trace-time side effect: 1 per compile
-    return _forward(plan, params, x, reference=reference, key=key,
-                    noise=noise)
+    if bound:
+        binds = list(payload)
+    else:
+        if len(payload) != len(plan.layers):
+            raise ValueError(f"{len(payload)} param dicts for "
+                             f"{len(plan.layers)} planned layers")
+        binds = [bind_layer(lp, p, plan.cfg)
+                 for lp, p in zip(plan.layers, payload)]
+    return _forward(plan, binds, x, reference=reference, key=key,
+                    noise=noise, m_valid=m_valid)
 
 
 def _dispatch_noise(plan: NetworkPlan,
@@ -752,10 +865,34 @@ def _dispatch_noise(plan: NetworkPlan,
     return noise if noise.enabled else None
 
 
+def init_network_params(plan: NetworkPlan, key: jax.Array) -> Params:
+    """Distribution-aware per-layer parameters for a planned network
+    (core/cim_layers init, one {"w", "abn_log_gamma", "abn_beta"} dict per
+    layer in plan order)."""
+    from repro.core.cim_layers import CIMConfig, init_cim_linear
+    cfg = plan.cfg
+    params = []
+    for lp in plan.layers:
+        key, sub = jax.random.split(key)
+        lcfg = CIMConfig(
+            r_in=lp.spec.r_in, r_w=lp.spec.r_w, r_out=lp.spec.r_out,
+            adaptive_swing=cfg.adaptive_swing,
+            gamma_bits=cfg.gamma_bits, max_gamma=cfg.max_gamma,
+            macro=cfg.macro)
+        params.append(init_cim_linear(sub, lp.spec.k, lp.spec.n, cfg=lcfg))
+    return params
+
+
 def run_network(plan: NetworkPlan, params: Params, x: jnp.ndarray,
                 key: Optional[jax.Array] = None,
                 noise: Optional[NoiseConfig] = None) -> jnp.ndarray:
     """Execute the planned schedule through the Pallas kernel variants.
+
+    .. deprecated:: this is the per-call entry point; it keeps working
+       unchanged (backed by the program cache of runtime/program.py, so
+       repeated calls at one plan reuse the compiled executable) but new
+       code should compile once via `compile_program` and serve through
+       the returned CIMProgram/BoundProgram.
 
     Args:
       plan: the (jit-static) NetworkPlan; with plan.cfg.sharding set the
@@ -772,8 +909,9 @@ def run_network(plan: NetworkPlan, params: Params, x: jnp.ndarray,
       (..., N_last) activations — or (..., out_h, out_w, C_out) if the
       last layer is a conv.
     """
-    return _run_network_jit(plan, params, x, key,
-                            _dispatch_noise(plan, noise), False)
+    _warn_legacy_entry("run_network")
+    from repro.runtime.program import program_for_plan
+    return program_for_plan(plan).run(params, x, key, noise)
 
 
 def run_network_reference(plan: NetworkPlan, params: Params, x: jnp.ndarray,
@@ -783,47 +921,59 @@ def run_network_reference(plan: NetworkPlan, params: Params, x: jnp.ndarray,
     the kernel path — including under noise, where both share the same
     post-matmul ADC epilogue and pre-drawn per-tile thermal fields, and
     including sharded plans, which the oracle executes serially)."""
-    return _run_network_jit(plan, params, x, key,
-                            _dispatch_noise(plan, noise), True)
+    from repro.runtime.program import program_for_plan
+    return program_for_plan(plan).run(params, x, key, noise,
+                                      reference=True)
 
 
 class CIMInferenceEngine:
-    """Plans a LayerSpec network once; every call dispatches the cached
-    jit-compiled schedule (single-device or sharded per cfg.sharding)."""
+    """Thin compatibility wrapper over a compiled `CIMProgram`.
+
+    Construction routes through the global program cache of
+    runtime/program.py, so two engines over equal (specs, cfg) share one
+    plan and one executable cache; every call dispatches the cached
+    jit-compiled schedule (single-device or sharded per cfg.sharding).
+    New code should hold the program directly: `engine.compile()` (or
+    `compile_program(specs, cfg)`) returns it."""
 
     def __init__(self, specs: Sequence[mapping.LayerSpec],
                  cfg: EngineConfig = EngineConfig(),
                  activations: Optional[Sequence[str]] = None,
                  pools: Optional[Sequence[int]] = None):
+        from repro.runtime.program import compile_program
         self.cfg = cfg
-        self.plan = plan_network(specs, cfg, activations, pools)
+        self.program = compile_program(specs, cfg, activations=activations,
+                                       pools=pools)
+
+    @property
+    def plan(self) -> NetworkPlan:
+        """The backing program's (jit-static) NetworkPlan."""
+        return self.program.plan
+
+    def compile(self):
+        """The backing CIMProgram — the plan-once/serve-many artifact
+        (bind weights with .bind(params), serve ragged batches with
+        .serve/.serve_batch)."""
+        return self.program
 
     def init_params(self, key: jax.Array) -> Params:
         """Distribution-aware per-layer parameters (core/cim_layers init)."""
-        from repro.core.cim_layers import CIMConfig, init_cim_linear
-        params = []
-        for lp in self.plan.layers:
-            key, sub = jax.random.split(key)
-            lcfg = CIMConfig(
-                r_in=lp.spec.r_in, r_w=lp.spec.r_w, r_out=lp.spec.r_out,
-                adaptive_swing=self.cfg.adaptive_swing,
-                gamma_bits=self.cfg.gamma_bits, max_gamma=self.cfg.max_gamma,
-                macro=self.cfg.macro)
-            params.append(init_cim_linear(sub, lp.spec.k, lp.spec.n,
-                                          cfg=lcfg))
-        return params
+        return init_network_params(self.plan, key)
 
     def __call__(self, params: Params, x: jnp.ndarray,
                  key: Optional[jax.Array] = None,
                  noise: Optional[NoiseConfig] = None) -> jnp.ndarray:
-        return run_network(self.plan, params, x, key, noise)
+        """Exact-shape dispatch of the compiled schedule (legacy per-call
+        API; prefer engine.compile() + program.bind(params).serve(x))."""
+        _warn_legacy_entry("CIMInferenceEngine.__call__")
+        return self.program.run(params, x, key, noise)
 
     def reference(self, params: Params, x: jnp.ndarray,
                   key: Optional[jax.Array] = None,
                   noise: Optional[NoiseConfig] = None) -> jnp.ndarray:
         """The pure-jnp digital oracle of the same plan (bit-exact with
         __call__ at every precision, clean or under a common key)."""
-        return run_network_reference(self.plan, params, x, key, noise)
+        return self.program.run(params, x, key, noise, reference=True)
 
     def monte_carlo(self, params: Params, x: jnp.ndarray, key: jax.Array,
                     n_trials: int,
@@ -841,11 +991,13 @@ class CIMInferenceEngine:
         if n_trials < 1:
             raise ValueError(f"n_trials must be >= 1, got {n_trials}")
         keys = jax.random.split(key, n_trials)
-        return jnp.stack([run_network(self.plan, params, x, k, noise)
+        return jnp.stack([self.program.run(params, x, k, noise)
                           for k in keys])
 
     def perf_report(self, **kw):
         """Per-layer + aggregate cycle/energy estimates (perfmodel);
-        sharded plans add per-device macro_evals and parallel efficiency."""
+        sharded plans add per-device macro_evals and parallel efficiency,
+        and the report echoes the backing program's compile/bucket stats
+        under "program"."""
         from repro.perfmodel.macro_perf import schedule_report
-        return schedule_report(self.plan, **kw)
+        return schedule_report(self.plan, program=self.program, **kw)

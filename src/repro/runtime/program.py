@@ -1,0 +1,448 @@
+"""Compiled CIM programs: plan once, serve many (the deployment API).
+
+The IMAGINE macro's whole economics are amortization — weights stay
+resident in the 1152x256 array while input-serial activations stream
+through — so the runtime should pay planning and XLA tracing once per
+*program*, not once per call.  This module is that artifact layer:
+
+    prog   = compile_program(specs, EngineConfig(...))   # plan + cache once
+    params = prog.init_params(jax.random.PRNGKey(0))
+    bound  = prog.bind(params)          # weights pre-quantized & packed
+    y      = bound.serve(x)             # ragged batch -> bucketed dispatch
+    ys     = bound.serve_batch([x1, x2, x3])   # multi-request serving
+    prog.stats()                        # plans/compiles/bucket hit-miss
+
+Three amortization levers, each observable through `CIMProgram.stats()`:
+
+* **Plan cache** — `compile_program` keys a module-level cache on
+  (specs, cfg, activations, pools, buckets): equal programs share one
+  `NetworkPlan` (planned exactly once — engine.PLAN_COUNT counts) and one
+  executable cache.  `core/cim_layers` engine mode and the serving launcher
+  enter the engine exclusively through this cache.
+* **Batch bucketing** — `serve` pads the leading batch axis up to a
+  power-of-two ladder rung (`BatchBuckets`), so arbitrary request sizes hit
+  a bounded set of jit executables instead of one compile per batch size.
+  Padding rows are copies of row 0 and are re-pinned before every layer
+  (engine._mask_pad_rows), which keeps the dynamic activation-quantization
+  statistics — and therefore every live-row bit — identical to an unpadded
+  run, clean *and* under a fixed noise key (thermal draws are generated in
+  fixed global row blocks, invariant to the padded extent).
+* **Weight binding** — `bind(params)` runs engine.bind_network once
+  (weight quantization to the odd-integer grid, ABN gamma evaluation,
+  col-tile padding), removing the weight-side work from the per-call graph;
+  a `BoundProgram` serves without ever touching the fp32 masters again.
+
+Sharded plans (EngineConfig.sharding) serve through the same API — the
+bucket executables dispatch the multi-macro shard_map schedule, and the
+bucket-padding contract composes with both shard kinds bit-exactly.
+
+Units/shapes follow runtime/engine.py; everything here is orchestration —
+no numerics of its own.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mapping
+from repro.core.noise_model import NoiseConfig
+from repro.runtime import engine as rt
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchBuckets:
+    """Power-of-two ladder of batch bucket sizes.
+
+    A request of leading batch extent m dispatches at the smallest rung
+    `min_bucket * 2^i >= m`; with `max_bucket` set the ladder is capped
+    there and larger requests pad to the next *multiple* of max_bucket
+    (bounded compile count either way, padding waste < 2x).
+
+    Attributes:
+      min_bucket: smallest rung (>= 1).
+      max_bucket: ladder cap; 0 means uncapped (pure power-of-two ladder).
+    """
+    min_bucket: int = 1
+    max_bucket: int = 0
+
+    def __post_init__(self):
+        if self.min_bucket < 1:
+            raise ValueError(f"min_bucket must be >= 1, got "
+                             f"{self.min_bucket}")
+        if self.max_bucket and self.max_bucket < self.min_bucket:
+            raise ValueError(
+                f"max_bucket {self.max_bucket} < min_bucket "
+                f"{self.min_bucket}")
+
+    def bucket_for(self, m: int) -> int:
+        """The padded batch extent a request of `m` rows dispatches at."""
+        if m < 1:
+            raise ValueError(f"batch extent must be >= 1, got {m}")
+        cap = self.max_bucket
+        if cap and m > cap:
+            return cap * -(-m // cap)        # beyond the ladder: cap grid
+        b = self.min_bucket
+        while b < m:
+            b *= 2
+        return min(b, cap) if cap else b
+
+    def ladder(self, max_m: int) -> Tuple[int, ...]:
+        """Every distinct bucket requests of size 1..max_m can land on
+        (the compile-count bound batch bucketing guarantees)."""
+        return tuple(sorted({self.bucket_for(m)
+                             for m in range(1, max_m + 1)}))
+
+
+DEFAULT_BUCKETS = BatchBuckets()
+
+_STAT_KEYS = ("plans_built", "executables_compiled", "bucket_hits",
+              "bucket_misses", "run_calls", "serve_calls")
+
+
+@functools.partial(jax.jit, static_argnames=("plan",))
+def _bind_jit(plan: rt.NetworkPlan, params: rt.Params):
+    return list(rt.bind_network(plan, list(params)))
+
+
+class CIMProgram:
+    """An immutable, hashable compiled CIM inference artifact.
+
+    Owns one `NetworkPlan` (planned exactly once) plus a cache of jitted
+    executables keyed on (dispatch kind, batch bucket, noise on/off, key
+    presence, device count, bound, reference) — the fields that change the
+    traced graph.  Two dispatch styles:
+
+    * `run(params, x, ...)` — exact-shape dispatch, the legacy
+      run_network semantics (one executable per distinct batch extent);
+    * `serve(params, x, ...)` / `bind(params).serve(x, ...)` — batch-
+      bucketed dispatch: x pads up the `BatchBuckets` ladder, runs, and
+      slices back, bit-exact with an exact-shape run of the same inputs.
+
+    Programs are hashable on (plan, buckets) — the executable/stat caches
+    are bookkeeping, not identity.
+    """
+
+    __slots__ = ("_plan", "_buckets", "_executables", "_stats")
+
+    def __init__(self, plan: rt.NetworkPlan,
+                 buckets: BatchBuckets = DEFAULT_BUCKETS):
+        object.__setattr__(self, "_plan", plan)
+        object.__setattr__(self, "_buckets", buckets)
+        object.__setattr__(self, "_executables", {})
+        object.__setattr__(self, "_stats",
+                           {k: 0 for k in _STAT_KEYS} | {"plans_built": 1})
+
+    def __setattr__(self, name, value):
+        raise AttributeError("CIMProgram is immutable")
+
+    def __hash__(self):
+        return hash((self._plan, self._buckets))
+
+    def __eq__(self, other):
+        return (type(other) is CIMProgram and self._plan == other._plan
+                and self._buckets == other._buckets)
+
+    def __repr__(self):
+        lay = len(self._plan.layers)
+        return (f"CIMProgram({lay} layers, buckets={self._buckets}, "
+                f"executables={len(self._executables)})")
+
+    @property
+    def plan(self) -> rt.NetworkPlan:
+        """The jit-static NetworkPlan this program executes."""
+        return self._plan
+
+    @property
+    def buckets(self) -> BatchBuckets:
+        """The batch-bucket ladder `serve` pads requests onto."""
+        return self._buckets
+
+    @property
+    def cfg(self) -> rt.EngineConfig:
+        """The plan's shared EngineConfig."""
+        return self._plan.cfg
+
+    def init_params(self, key: jax.Array) -> rt.Params:
+        """Distribution-aware per-layer parameters (core/cim_layers init)."""
+        return rt.init_network_params(self._plan, key)
+
+    def bind(self, params: rt.Params) -> "BoundProgram":
+        """Pre-quantize/pack the weights: the per-call path never touches
+        the fp32 masters again.  Returns a BoundProgram closed over the
+        engine.bind_network products (odd-integer weight codes, dequant
+        scales, padded ABN gain/offset)."""
+        return BoundProgram(self, tuple(_bind_jit(self._plan, list(params))))
+
+    # -- dispatch ----------------------------------------------------------
+
+    def _devices(self) -> int:
+        sh = self._plan.cfg.sharding
+        return sh.resolve_devices() if sh is not None else 1
+
+    def _canon(self, x: jnp.ndarray) -> Tuple[jnp.ndarray, Tuple[int, ...]]:
+        """Collapse leading dims to one canonical batch axis (so equal
+        batch extents share one executable regardless of lead shape)."""
+        x = jnp.asarray(x)
+        g = self._plan.layers[0].spec.conv
+        if g is not None:
+            if x.ndim < 4 or x.shape[-3:] != g.spatial_in:
+                raise ValueError(
+                    f"input shape {x.shape} != first conv layer's "
+                    f"(..., {g.h}, {g.w}, {g.c_in})")
+            return x.reshape((-1,) + x.shape[-3:]), x.shape[:-3]
+        k0 = self._plan.layers[0].spec.k
+        if x.ndim < 1 or x.shape[-1] != k0:
+            raise ValueError(
+                f"input width {x.shape[-1] if x.ndim else 0} != first "
+                f"layer's k={k0}")
+        return x.reshape((-1, k0)), x.shape[:-1]
+
+    def _note_executable(self, key: tuple, bucketed: bool) -> None:
+        st = self._stats
+        st["serve_calls" if bucketed else "run_calls"] += 1
+        if key in self._executables:
+            if bucketed:
+                st["bucket_hits"] += 1
+            return
+        self._executables[key] = True
+        st["executables_compiled"] += 1
+        if bucketed:
+            st["bucket_misses"] += 1
+
+    def run(self, params: rt.Params, x: jnp.ndarray,
+            key: Optional[jax.Array] = None,
+            noise: Optional[NoiseConfig] = None, *,
+            reference: bool = False) -> jnp.ndarray:
+        """Exact-shape dispatch (run_network semantics, no bucketing): one
+        cached executable per distinct batch extent.  `reference=True`
+        runs the pure-jnp digital oracle of the same schedule."""
+        nz = rt._dispatch_noise(self._plan, noise)
+        xc, lead = self._canon(x)
+        # the key tuple mirrors the jit trace signature: dispatch kind and
+        # key presence both change the traced graph, so they discriminate
+        self._note_executable(
+            ("exact", xc.shape[0], nz is not None, key is not None,
+             self._devices(), False, bool(reference)), bucketed=False)
+        y = rt._exec_jit(self._plan, list(params), xc, None, key, nz,
+                         False, bool(reference))
+        return y.reshape(lead + y.shape[1:])
+
+    def serve(self, params: rt.Params, x: jnp.ndarray,
+              key: Optional[jax.Array] = None,
+              noise: Optional[NoiseConfig] = None, *,
+              reference: bool = False) -> jnp.ndarray:
+        """Batch-bucketed dispatch with per-call params (weight binding
+        stays in the jitted graph — use bind(params).serve(...) to hoist
+        it).  Bit-exact with `run` on the same inputs."""
+        return self._serve_padded(list(params), False, x, key, noise,
+                                  bool(reference))
+
+    def _serve_padded(self, payload, bound: bool, x: jnp.ndarray,
+                      key, noise, reference: bool) -> jnp.ndarray:
+        nz = rt._dispatch_noise(self._plan, noise)
+        xc, lead = self._canon(x)
+        m = xc.shape[0]
+        if m < 1:
+            raise ValueError("cannot serve an empty batch")
+        bucket = self._buckets.bucket_for(m)
+        if bucket > m:
+            pad = jnp.broadcast_to(xc[:1], (bucket - m,) + xc.shape[1:])
+            xc = jnp.concatenate([xc, pad], axis=0)
+        self._note_executable(
+            ("bucket", bucket, nz is not None, key is not None,
+             self._devices(), bound, reference), bucketed=True)
+        y = rt._exec_jit(self._plan, payload, xc,
+                         jnp.asarray(m, jnp.int32), key, nz, bound,
+                         reference)
+        return y[:m].reshape(lead + y.shape[1:])
+
+    # -- observability -----------------------------------------------------
+
+    def stats(self) -> Dict[str, int]:
+        """Compile/cache counters of this program: plans_built (always 1 —
+        the plan is built at compile_program time), executables_compiled
+        (distinct trace signatures dispatched: kind, bucket, noise, key
+        presence, devices, bound, reference), bucket_hits/bucket_misses
+        (serve-path ladder lookups), run_calls/serve_calls."""
+        return dict(self._stats)
+
+    def perf_report(self, **kw):
+        """perfmodel.schedule_report of the plan, with this program's
+        compile/bucket stats echoed under report["program"]."""
+        from repro.perfmodel.macro_perf import schedule_report
+        return schedule_report(self._plan, program=self, **kw)
+
+
+class BoundProgram:
+    """A CIMProgram closed over pre-quantized weights (the serve-side
+    artifact: no fp32 weight masters, no per-call weight quantization).
+
+    `serve(x)` dispatches one request through the batch-bucket ladder;
+    `serve_batch([x1, ...])` concatenates requests, serves the fused batch
+    once, and splits the results back per request.  Note multi-request
+    fusion shares the dynamic activation-quantization statistics across the
+    fused batch (exactly like running the concatenated batch through the
+    engine) — it is bit-exact with `serve(concat(requests))`, not with
+    per-request serve calls."""
+
+    __slots__ = ("program", "_binds")
+
+    def __init__(self, program: CIMProgram, binds: Tuple[Dict, ...]):
+        object.__setattr__(self, "program", program)
+        object.__setattr__(self, "_binds", binds)
+
+    def __setattr__(self, name, value):
+        raise AttributeError("BoundProgram is immutable")
+
+    @property
+    def plan(self) -> rt.NetworkPlan:
+        """The backing program's NetworkPlan."""
+        return self.program.plan
+
+    def serve(self, x: jnp.ndarray, key: Optional[jax.Array] = None,
+              noise: Optional[NoiseConfig] = None, *,
+              reference: bool = False) -> jnp.ndarray:
+        """Bucketed dispatch of one request through the bound weights
+        (bit-exact with the unbucketed engine on the same inputs, clean
+        and under a fixed noise key)."""
+        return self.program._serve_padded(list(self._binds), True, x, key,
+                                          noise, bool(reference))
+
+    __call__ = serve
+
+    def reference(self, x: jnp.ndarray, key: Optional[jax.Array] = None,
+                  noise: Optional[NoiseConfig] = None) -> jnp.ndarray:
+        """The pure-jnp digital oracle of serve (bit-exact with it)."""
+        return self.serve(x, key, noise, reference=True)
+
+    def serve_batch(self, requests: Sequence[jnp.ndarray],
+                    key: Optional[jax.Array] = None,
+                    noise: Optional[NoiseConfig] = None
+                    ) -> List[jnp.ndarray]:
+        """Multi-request serving: concatenate, bucket-pad, dispatch once
+        (through the sharded engine when the plan is sharded), split.
+
+        Args:
+          requests: per-request activation arrays, each batch-major with
+            the plan's feature shape — (b_i, K0) dense or
+            (b_i, H, W, C_in) conv.
+          key: PRNG key for noise-enabled plans (one key for the fused
+            batch; per-request noise follows each request's row offset).
+          noise: optional operating-point override (traced — no recompile).
+        Returns:
+          One result array per request, in order, each with its own
+          leading b_i.
+        """
+        if not requests:
+            return []
+        xs = [jnp.asarray(r) for r in requests]
+        feat = xs[0].shape[1:]
+        for i, r in enumerate(xs):
+            if r.ndim != len(feat) + 1 or r.shape[1:] != feat:
+                raise ValueError(
+                    f"request {i} shape {r.shape} is not batch-major with "
+                    f"feature shape {feat}")
+        sizes = [r.shape[0] for r in xs]
+        y = self.serve(jnp.concatenate(xs, axis=0), key, noise)
+        out, s = [], 0
+        for b in sizes:
+            out.append(y[s:s + b])
+            s += b
+        return out
+
+    def stats(self) -> Dict[str, int]:
+        """The backing program's compile/bucket counters."""
+        return self.program.stats()
+
+
+# ---------------------------------------------------------------------------
+# the global program cache
+# ---------------------------------------------------------------------------
+
+_PROGRAM_CACHE: Dict[tuple, CIMProgram] = {}
+_PLAN_PROGRAMS: Dict[tuple, CIMProgram] = {}
+_CACHE_STATS = {"programs_built": 0, "lookups": 0, "hits": 0}
+
+
+def _canonical_epilogues(n_layers: int,
+                         activations: Optional[Sequence[str]],
+                         pools: Optional[Sequence[int]]
+                         ) -> Tuple[Tuple[str, ...], Tuple[int, ...]]:
+    """plan_network's defaulting, applied eagerly so cache keys are
+    canonical (None and the equivalent explicit lists hit one entry)."""
+    acts = (("relu",) * (n_layers - 1) + ("none",)
+            if activations is None else tuple(activations))
+    pls = (1,) * n_layers if pools is None else tuple(pools)
+    return acts, pls
+
+
+def compile_program(specs: Sequence[mapping.LayerSpec],
+                    cfg: rt.EngineConfig = rt.EngineConfig(), *,
+                    activations: Optional[Sequence[str]] = None,
+                    pools: Optional[Sequence[int]] = None,
+                    buckets: BatchBuckets = DEFAULT_BUCKETS) -> CIMProgram:
+    """Compile (or fetch from the global cache) the program for a network.
+
+    The cache key is (specs, cfg, activations, pools, buckets) — all
+    hashable plan inputs — so every caller of an equal network shares one
+    NetworkPlan (planned once; engine.PLAN_COUNT counts) and one
+    executable cache.  This is the single entry point the model-facing
+    layers (cim_layers engine mode, models/cnn, launch/serve) go through.
+
+    Args:
+      specs: the network's (conv-tagged) LayerSpecs, in order.
+      cfg: shared EngineConfig (noise, sharding, macro, block sizes).
+      activations/pools: per-layer epilogues (plan_network defaults).
+      buckets: the serve-path batch-bucket ladder.
+    Returns:
+      The cached (or freshly planned) CIMProgram.
+    """
+    specs = tuple(specs)
+    acts, pls = _canonical_epilogues(len(specs), activations, pools)
+    key = (specs, cfg, acts, pls, buckets)
+    _CACHE_STATS["lookups"] += 1
+    prog = _PROGRAM_CACHE.get(key)
+    if prog is not None:
+        _CACHE_STATS["hits"] += 1
+        return prog
+    plan = rt.plan_network(specs, cfg, acts, pls)
+    prog = _PLAN_PROGRAMS.get((plan, buckets))
+    if prog is None:
+        prog = CIMProgram(plan, buckets)
+        _PLAN_PROGRAMS[(plan, buckets)] = prog
+        _CACHE_STATS["programs_built"] += 1
+    _PROGRAM_CACHE[key] = prog
+    return prog
+
+
+def program_for_plan(plan: rt.NetworkPlan,
+                     buckets: BatchBuckets = DEFAULT_BUCKETS) -> CIMProgram:
+    """The cached program behind an already-built NetworkPlan (what the
+    legacy run_network/run_network_reference entry points dispatch
+    through); creates and caches one on first sight of the plan."""
+    key = (plan, buckets)
+    prog = _PLAN_PROGRAMS.get(key)
+    if prog is None:
+        prog = CIMProgram(plan, buckets)
+        _PLAN_PROGRAMS[key] = prog
+        _CACHE_STATS["programs_built"] += 1
+    return prog
+
+
+def program_cache_stats() -> Dict[str, int]:
+    """Global program-cache counters: programs (live cached programs),
+    programs_built, lookups, hits (compile_program key hits)."""
+    return dict(_CACHE_STATS, programs=len(_PLAN_PROGRAMS))
+
+
+def clear_program_cache() -> None:
+    """Drop every cached program and reset the cache counters (tests /
+    long-lived processes re-keying on fresh configs)."""
+    _PROGRAM_CACHE.clear()
+    _PLAN_PROGRAMS.clear()
+    for k in list(_CACHE_STATS):
+        _CACHE_STATS[k] = 0

@@ -135,7 +135,9 @@ def test_perf_report_schedule():
              LayerSpec(m=32, k=64, n=32, r_in=8, r_w=4)]
     eng = CIMInferenceEngine(specs)
     rep = eng.perf_report()
-    assert set(rep) == {"layers", "per_precision", "noise", "total"}
+    assert set(rep) == {"layers", "per_precision", "noise", "total",
+                        "program"}
+    assert rep["program"]["plans_built"] == 1
     assert rep["noise"] == {"enabled": False}
     assert len(rep["layers"]) == 2
     assert rep["total"]["tops_per_w"] > 0

@@ -1,0 +1,398 @@
+"""Compiled CIM programs: plan-once/serve-many acceptance suite (ISSUE 5).
+
+The acceptance bar: a compiled `CIMProgram` serves repeated calls with
+zero re-planning (engine.PLAN_COUNT) and zero re-tracing (engine.
+TRACE_COUNT) after warmup; batch-bucketed dispatch is bit-exact with the
+unbucketed engine across ragged batch sizes under NO_NOISE and under a
+fixed noise key, on 1 device and (when available) an 8-device mesh; the
+compile count is bounded by the bucket ladder; and the legacy entry points
+(`run_network`, `CIMInferenceEngine.__call__`) keep working — backed by
+the program cache — behind a single non-spammy DeprecationWarning.
+
+Multi-device cases need fake CPU devices:
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m pytest tests/test_program.py
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cim_layers as cl
+from repro.core.mapping import LayerSpec, conv_layer_spec
+from repro.core.noise_model import NoiseConfig
+from repro.runtime import (BatchBuckets, CIMInferenceEngine, CIMProgram,
+                           EngineConfig, ShardingConfig, compile_program,
+                           program_cache_stats, program_for_plan,
+                           run_network)
+from repro.runtime import engine as rt
+from repro.runtime.program import DEFAULT_BUCKETS
+
+N_DEV = len(jax.devices())
+RAGGED = (1, 3, 7, 17)
+
+
+def _need(devices: int) -> None:
+    if N_DEV < devices:
+        pytest.skip(f"needs {devices} devices, jax reports {N_DEV} (set "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+def _dense_specs(m=8, k=72, n=16, r_in=4, r_w=2, layers=2):
+    specs = [LayerSpec(m=m, k=k, n=n, r_in=r_in, r_w=r_w)]
+    for _ in range(layers - 1):
+        specs.append(LayerSpec(m=m, k=n, n=n, r_in=r_in, r_w=r_w))
+    return specs
+
+
+def _case(specs, seed=0, cfg=EngineConfig()):
+    prog = compile_program(specs, cfg)
+    params = prog.init_params(jax.random.PRNGKey(seed))
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(seed + 1),
+                                      (32, specs[0].k)))
+    return prog, params, x
+
+
+# ---- bucket ladder ---------------------------------------------------------
+
+def test_bucket_ladder_shape():
+    b = BatchBuckets()
+    assert [b.bucket_for(m) for m in (1, 2, 3, 7, 8, 17)] == \
+        [1, 2, 4, 8, 8, 32]
+    assert b.ladder(17) == (1, 2, 4, 8, 16, 32)
+    capped = BatchBuckets(min_bucket=4, max_bucket=16)
+    assert capped.bucket_for(1) == 4
+    assert capped.bucket_for(9) == 16
+    assert capped.bucket_for(17) == 32          # cap grid: multiples of 16
+    assert capped.bucket_for(33) == 48
+    with pytest.raises(ValueError, match=">= 1"):
+        BatchBuckets(min_bucket=0)
+    with pytest.raises(ValueError, match="max_bucket"):
+        BatchBuckets(min_bucket=8, max_bucket=4)
+    with pytest.raises(ValueError, match=">= 1"):
+        b.bucket_for(0)
+
+
+# ---- program cache + planning counter --------------------------------------
+
+def test_compile_program_is_cached_and_plans_once():
+    specs = _dense_specs(k=40, n=24)
+    n0 = rt.PLAN_COUNT["n"]
+    p1 = compile_program(specs, EngineConfig())
+    n1 = rt.PLAN_COUNT["n"]
+    p2 = compile_program(specs, EngineConfig())
+    p3 = compile_program(specs, EngineConfig(),
+                         activations=["relu", "none"], pools=[1, 1])
+    assert p1 is p2 and p1 is p3                # canonical epilogue key
+    assert rt.PLAN_COUNT["n"] == n1             # no re-plan on cache hits
+    assert n1 >= n0 + 0                         # (first call may have hit)
+    stats = program_cache_stats()
+    assert stats["programs"] >= 1 and stats["lookups"] >= 3
+
+
+def test_program_hashable_and_engine_shares_it():
+    specs = _dense_specs(k=48, n=16)
+    prog = compile_program(specs)
+    assert hash(prog) == hash(compile_program(specs))
+    eng = CIMInferenceEngine(specs)
+    assert eng.compile() is prog                # engine wraps the cache
+    assert eng.plan is prog.plan
+    assert isinstance(prog, CIMProgram)
+    with pytest.raises(AttributeError, match="immutable"):
+        prog.plan = None
+
+
+def test_program_for_plan_backs_run_network():
+    specs = _dense_specs(k=56, n=16)
+    prog = compile_program(specs)
+    assert program_for_plan(prog.plan) is prog
+    params = prog.init_params(jax.random.PRNGKey(0))
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(1), (4, 56)))
+    calls0 = prog.stats()["run_calls"]
+    y = run_network(prog.plan, params, x)
+    assert prog.stats()["run_calls"] == calls0 + 1
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.asarray(prog.run(params, x)))
+
+
+def test_cim_layers_engine_mode_plans_once():
+    """Satellite: the per-call re-plan in _engine_forward is gone — after
+    the first call at a (shape, CIMConfig), plans AND traces stay flat."""
+    cfg = cl.CIMConfig(mode="engine", r_in=4, r_w=2)
+    p = cl.init_cim_linear(jax.random.PRNGKey(0), 88, 24, cfg=cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 88))
+    y0 = np.asarray(cl.cim_linear_apply(p, x, cfg))       # warmup
+    plans0, traces0 = rt.PLAN_COUNT["n"], rt.TRACE_COUNT["n"]
+    for _ in range(3):
+        y = np.asarray(cl.cim_linear_apply(p, x, cfg))
+    assert rt.PLAN_COUNT["n"] == plans0, "engine mode re-planned per call"
+    assert rt.TRACE_COUNT["n"] == traces0, "engine mode re-traced per call"
+    np.testing.assert_array_equal(y, y0)
+    # a ragged batch inside the same bucket also stays flat
+    np.asarray(cl.cim_linear_apply(p, x[:5], cfg))        # bucket-8 warmup?
+    plans1, traces1 = rt.PLAN_COUNT["n"], rt.TRACE_COUNT["n"]
+    np.asarray(cl.cim_linear_apply(p, x[:7], cfg))        # same bucket 8
+    assert rt.PLAN_COUNT["n"] == plans1
+    assert rt.TRACE_COUNT["n"] == traces1
+
+
+def test_cim_layers_engine_conv_plans_once():
+    cfg = cl.CIMConfig(mode="engine", r_in=4, r_w=2)
+    p = cl.init_cim_linear(jax.random.PRNGKey(0), 3 * 3 * 4, 8, cfg=cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (4, 10, 10, 4))
+    y0 = np.asarray(cl.cim_conv2d_apply(p, x, cfg))       # warmup
+    plans0, traces0 = rt.PLAN_COUNT["n"], rt.TRACE_COUNT["n"]
+    for _ in range(3):
+        y = np.asarray(cl.cim_conv2d_apply(p, x, cfg))
+    assert rt.PLAN_COUNT["n"] == plans0
+    assert rt.TRACE_COUNT["n"] == traces0
+    np.testing.assert_array_equal(y, y0)
+
+
+def test_lenet_forward_engine_plans_once():
+    from repro.models import cnn
+    cfg = cl.CIMConfig(mode="engine", r_in=4, r_w=2)
+    params = cnn.init_lenet(jax.random.PRNGKey(0), cim=cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (2, 28, 28, 1))
+    y0 = np.asarray(cnn.lenet_forward(params, x, cfg))    # warmup
+    plans0, traces0 = rt.PLAN_COUNT["n"], rt.TRACE_COUNT["n"]
+    y = np.asarray(cnn.lenet_forward(params, x, cfg))
+    assert rt.PLAN_COUNT["n"] == plans0
+    assert rt.TRACE_COUNT["n"] == traces0
+    np.testing.assert_array_equal(y, y0)
+
+
+# ---- zero re-tracing after warmup ------------------------------------------
+
+def test_bound_program_zero_retrace_after_warmup():
+    """Acceptance: repeated serves — including different ragged sizes that
+    share a bucket — reuse one executable."""
+    prog, params, x = _case(_dense_specs(k=64, n=16), seed=3)
+    bound = prog.bind(params)
+    bound.serve(x[:8])                                    # warm bucket 8
+    plans0, traces0 = rt.PLAN_COUNT["n"], rt.TRACE_COUNT["n"]
+    for m in (5, 6, 7, 8):
+        bound.serve(x[:m])
+    assert rt.PLAN_COUNT["n"] == plans0
+    assert rt.TRACE_COUNT["n"] == traces0
+    st = prog.stats()
+    assert st["bucket_hits"] >= 4
+
+
+def test_compile_count_bounded_by_ladder():
+    """Satellite: every batch size 1..17 lands on a ladder rung; the
+    executable count (and the trace count) is bounded by the rung count,
+    not the batch-size count."""
+    specs = _dense_specs(k=96, n=16, r_in=2, r_w=1)       # unique -> fresh
+    prog, params, x = _case(specs, seed=5)
+    bound = prog.bind(params)
+    traces0 = rt.TRACE_COUNT["n"]
+    for m in range(1, 18):
+        y = bound.serve(x[:m])
+        assert y.shape == (m, 16)
+    ladder = prog.buckets.ladder(17)
+    st = prog.stats()
+    assert st["executables_compiled"] <= len(ladder)
+    assert rt.TRACE_COUNT["n"] - traces0 <= len(ladder)
+    assert st["bucket_misses"] <= len(ladder)
+    assert st["bucket_hits"] == 17 - st["bucket_misses"]
+
+
+# ---- bucketed serving bit-exactness ----------------------------------------
+
+@pytest.mark.parametrize("m", RAGGED)
+def test_bucketed_serve_bitexact_dense(m):
+    """Acceptance: ragged batches through the bucket ladder are bit-exact
+    with the unbucketed engine (exact-shape run), bound and unbound."""
+    prog, params, x = _case(_dense_specs(k=72, n=20), seed=m)
+    want = np.asarray(prog.run(params, x[:m]))
+    np.testing.assert_array_equal(
+        np.asarray(prog.serve(params, x[:m])), want)
+    np.testing.assert_array_equal(
+        np.asarray(prog.bind(params).serve(x[:m])), want)
+
+
+@pytest.mark.parametrize("m", RAGGED)
+def test_bucketed_serve_bitexact_noise_fixed_key(m):
+    """Acceptance: same contract under a fixed noise key — the fixed-size
+    row-block thermal draws make the padded extent invisible to live
+    rows."""
+    prog, params, x = _case(_dense_specs(k=144, n=16),
+                            seed=m, cfg=EngineConfig(noise=NoiseConfig()))
+    key = jax.random.PRNGKey(40 + m)
+    want = np.asarray(prog.run(params, x[:m], key))
+    bound = prog.bind(params)
+    np.testing.assert_array_equal(np.asarray(bound.serve(x[:m], key)), want)
+    # the oracle agrees too (kernel/reference lockstep survives bucketing)
+    np.testing.assert_array_equal(
+        np.asarray(bound.reference(x[:m], key)), want)
+
+
+@pytest.mark.parametrize("m", (1, 3))
+def test_bucketed_serve_bitexact_conv_lenet(m):
+    """Conv front-end: a bucket-padded LeNet batch (padding whole images)
+    is bit-exact with the exact-shape engine, clean and noisy."""
+    from repro.models.cnn import lenet_engine_specs, lenet_program
+    cim = cl.CIMConfig(mode="engine", r_in=4, r_w=2)
+    specs, acts, pools = lenet_engine_specs(4, h=12, w=12, cim=cim)
+    prog = compile_program(specs, EngineConfig(), activations=acts,
+                           pools=pools)
+    params = prog.init_params(jax.random.PRNGKey(0))
+    x = jax.random.uniform(jax.random.PRNGKey(1), (4, 12, 12, 1))
+    want = np.asarray(prog.run(params, x[:m]))
+    np.testing.assert_array_equal(
+        np.asarray(prog.bind(params).serve(x[:m])), want)
+    # noisy LeNet, fixed key
+    nprog = compile_program(specs, EngineConfig(noise=NoiseConfig()),
+                            activations=acts, pools=pools)
+    key = jax.random.PRNGKey(9)
+    want_n = np.asarray(nprog.run(params, x[:m], key))
+    np.testing.assert_array_equal(
+        np.asarray(nprog.bind(params).serve(x[:m], key)), want_n)
+    assert lenet_program(4, 12, 12, 1, 10, cim) is prog
+
+
+@pytest.mark.parametrize("devices", (1, 8))
+def test_bucketed_serve_bitexact_sharded(devices):
+    """Acceptance: bucketing composes with the multi-macro dispatch — a
+    sharded program's bucketed serve matches the unsharded, unbucketed
+    engine bit for bit on 1- and 8-device meshes, clean and noisy."""
+    _need(devices)
+    specs = [LayerSpec(m=8, k=144, n=320, r_in=4, r_w=4),   # col kind
+             LayerSpec(m=8, k=320, n=16, r_in=4, r_w=4)]    # rows kind
+    base = compile_program(specs, EngineConfig())
+    cfg = EngineConfig(sharding=ShardingConfig(devices=devices))
+    prog = compile_program(specs, cfg)
+    params = base.init_params(jax.random.PRNGKey(0))
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(1), (17, 144)))
+    for m in (3, 17):
+        want = np.asarray(base.run(params, x[:m]))
+        np.testing.assert_array_equal(
+            np.asarray(prog.bind(params).serve(x[:m])), want)
+    ncfg = EngineConfig(noise=NoiseConfig())
+    nbase = compile_program(specs, ncfg)
+    nprog = compile_program(
+        specs, ncfg.replace(sharding=ShardingConfig(devices=devices)))
+    key = jax.random.PRNGKey(23)
+    want = np.asarray(nbase.run(params, x[:7], key))
+    np.testing.assert_array_equal(
+        np.asarray(nprog.bind(params).serve(x[:7], key)), want)
+
+
+def test_serve_batch_concat_pad_split():
+    """Satellite: serve_batch fuses requests, serves once, splits — equal
+    to serving the concatenated batch (shared activation swing), with one
+    executable for the fused bucket."""
+    prog, params, x = _case(_dense_specs(k=80, n=16), seed=2)
+    bound = prog.bind(params)
+    reqs = [x[:1], x[1:4], x[4:9]]                        # 1 + 3 + 5 = 9
+    outs = bound.serve_batch(reqs)
+    assert [o.shape[0] for o in outs] == [1, 3, 5]
+    fused = np.asarray(bound.serve(x[:9]))
+    np.testing.assert_array_equal(np.concatenate(
+        [np.asarray(o) for o in outs]), fused)
+    assert bound.serve_batch([]) == []
+    with pytest.raises(ValueError, match="batch-major"):
+        bound.serve_batch([x[:2], x[0]])                  # missing batch dim
+
+
+def test_bind_leaves_weights_behind():
+    """BoundProgram serves without the fp32 masters: binding is the only
+    consumer of params, and the bind products carry the odd-integer code
+    grid."""
+    prog, params, x = _case(_dense_specs(k=40, n=12, layers=1), seed=7)
+    bound = prog.bind(params)
+    want = np.asarray(prog.run(params, x[:4]))
+    del params
+    got = np.asarray(bound.serve(x[:4]))
+    np.testing.assert_array_equal(got, want)
+    wqq = np.asarray(bound._binds[0]["wqq"])
+    assert np.all(np.abs(wqq % 2) == 1)                   # odd-integer grid
+
+
+def test_noise_override_through_serve_shares_compile():
+    """Operating-point overrides stay traced operands through the program
+    path: sweeping noise= through a bound serve does not retrace."""
+    prog, params, x = _case(_dense_specs(k=144, n=16, layers=1), seed=9,
+                            cfg=EngineConfig(noise=NoiseConfig()))
+    bound = prog.bind(params)
+    key = jax.random.PRNGKey(3)
+    base = np.asarray(bound.serve(x[:8], key))            # warm
+    t0 = rt.TRACE_COUNT["n"]
+    outs = [np.asarray(bound.serve(
+        x[:8], key, NoiseConfig(thermal_rms_lsb8=0.52 * s,
+                                sa_sigma_v=0.02 * s)))
+        for s in (0.25, 1.0, 3.0)]
+    assert rt.TRACE_COUNT["n"] == t0, "noise-point sweep recompiled"
+    np.testing.assert_array_equal(outs[1], base)
+    assert np.any(outs[0] != outs[2])
+
+
+# ---- observability ---------------------------------------------------------
+
+def test_stats_and_perf_report_echo():
+    specs = _dense_specs(k=104, n=16)                     # unique shape
+    prog, params, x = _case(specs, seed=11)
+    assert prog.stats()["plans_built"] == 1
+    prog.bind(params).serve(x[:3])
+    st = prog.stats()
+    assert st["serve_calls"] == 1 and st["bucket_misses"] == 1
+    rep = prog.perf_report()
+    assert rep["program"]["executables_compiled"] >= 1
+    assert rep["program"]["buckets"] == {"min_bucket": 1, "max_bucket": 0}
+    rep2 = CIMInferenceEngine(specs).perf_report()
+    assert rep2["program"] == rep["program"]              # shared program
+
+
+# ---- deprecation hygiene ---------------------------------------------------
+
+def test_legacy_entry_points_warn_once():
+    """Satellite: run_network / CIMInferenceEngine.__call__ keep working,
+    with a single DeprecationWarning per process pointing at
+    compile_program."""
+    prog, params, x = _case(_dense_specs(k=32, n=8, layers=1), seed=13)
+    eng = CIMInferenceEngine(_dense_specs(k=32, n=8, layers=1))
+    rt._DEPRECATION["warned"] = False
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        y1 = eng(params, x[:4])
+        y2 = run_network(prog.plan, params, x[:4])
+        eng(params, x[:4])
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)
+           and "compile_program" in str(w.message)]
+    assert len(dep) == 1, [str(w.message) for w in rec]
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    # reference / monte_carlo / program paths never warn
+    rt._DEPRECATION["warned"] = False
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        eng.reference(params, x[:4])
+        prog.bind(params).serve(x[:4])
+    assert not [w for w in rec
+                if issubclass(w.category, DeprecationWarning)]
+    rt._DEPRECATION["warned"] = True                      # keep suite quiet
+
+
+def test_serve_rejects_empty_batch_and_bad_width():
+    prog, params, x = _case(_dense_specs(k=32, n=8, layers=1), seed=17)
+    with pytest.raises(ValueError, match="empty batch"):
+        prog.bind(params).serve(x[:0])
+    with pytest.raises(ValueError, match="input width"):
+        prog.bind(params).serve(jnp.ones((4, 31)))
+
+
+def test_conv_program_batch_bucket_via_cim_conv2d():
+    """cim_conv2d_apply at a ragged batch rebuilds the conv spec at the
+    bucket and stays bit-exact with the direct (exact-batch) program."""
+    cfg = cl.CIMConfig(mode="engine", r_in=4, r_w=2)
+    p = cl.init_cim_linear(jax.random.PRNGKey(0), 3 * 3 * 4, 8, cfg=cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (3, 10, 10, 4))
+    spec = conv_layer_spec(batch=3, h=10, w=10, c_in=4, c_out=8,
+                           kh=3, kw=3, stride=1, padding=1, r_in=4, r_w=2)
+    exact = compile_program([spec], cl._engine_config(cfg))
+    want = np.asarray(exact.run([p], x))
+    got = np.asarray(cl.cim_conv2d_apply(p, x, cfg))
+    np.testing.assert_array_equal(got, want)
+    assert DEFAULT_BUCKETS.bucket_for(3) == 4             # really padded
