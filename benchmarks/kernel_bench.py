@@ -21,6 +21,7 @@ if __name__ == "__main__":      # must precede the first jax import
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import digital_ref as dr
 from repro.core.hw import DEFAULT_MACRO
@@ -284,13 +285,79 @@ def bench_serving(batch=4, d=256, layers=3, steps=24, out_json=None):
     return row
 
 
+def bench_inflight_sweep(rates=(0.25, 1.0, 4.0), capacity=8, n_req=16,
+                         seed=0):
+    """Arrival-rate sweep of the in-flight batching scheduler (ISSUE 6).
+
+    Poisson arrivals (requests per scheduler step, one stream per rate) x
+    a short/medium/long generation-length mix, driven through
+    InflightScheduler over a toy CIMDecodeLM.  Per rate: p50/p99 end-to-
+    end latency and time-to-first-token (steps), decode tokens/s, mean
+    fused occupancy, and an isolation spot-check — a sample of requests
+    re-decoded solo (decode_sequential) must match the fused streams bit
+    for bit."""
+    from repro.runtime.scheduler import (CIMDecodeLM, InflightScheduler,
+                                         Request, decode_sequential)
+
+    model = CIMDecodeLM.toy(jax.random.PRNGKey(5), d=96, depth=2,
+                            vocab=61, r_in=4, r_w=2)
+    gen_mix = ((2, 0.5), (6, 0.3), (12, 0.2))     # short/medium/long
+    rows = []
+    for rate in rates:
+        rng = np.random.default_rng(seed)
+        t, arrivals = 0.0, []
+        for uid in range(n_req):
+            t += rng.exponential(1.0 / rate)
+            gen = int(rng.choice([g for g, _ in gen_mix],
+                                 p=[p for _, p in gen_mix]))
+            prompt = tuple(int(v) for v in
+                           rng.integers(0, 61, size=int(rng.integers(1, 5))))
+            arrivals.append((int(t), Request(uid=uid, prompt=prompt,
+                                             max_new_tokens=gen)))
+        sched = InflightScheduler(model, capacity=capacity)
+        fused = sched.run(arrivals)
+        m = sched.metrics()
+        sample = [r for _, r in arrivals[:: max(1, n_req // 3)]]
+        match = all(fused[r.uid] == decode_sequential(model, r)
+                    for r in sample)
+        rows.append({
+            "arrival_rate": rate, "requests": n_req, "capacity": capacity,
+            "latency_steps_p50": m["latency_steps_p50"],
+            "latency_steps_p99": m["latency_steps_p99"],
+            "ttft_steps_p50": m["ttft_steps_p50"],
+            "ttft_steps_p99": m["ttft_steps_p99"],
+            "tokens_per_s": m["tokens_per_s"],
+            "tokens_per_decode_step": m["tokens_per_decode_step"],
+            "extents_seen": m["extents_seen"],
+            "isolation_match": match,
+        })
+    return rows
+
+
 def _serving_row(out_json="BENCH_serving.json"):
-    """Run bench_serving, print its CSV row, return the oracle match."""
-    row = bench_serving(out_json=out_json)
+    """Run bench_serving plus the in-flight arrival-rate sweep, merge both
+    into one BENCH_serving.json, print the CSV rows, and return whether
+    every bit-exactness check (program-vs-legacy and fused-vs-solo
+    isolation) held."""
+    import json
+
+    row = bench_serving(out_json=None)
     print(f"serving_program,{row['program_us_per_call']:.0f},"
           f"legacy{row['legacy_us_per_call']:.0f}us_"
           f"speedup{row['speedup']:.2f}_match{row['match']}")
-    return row["match"]
+    sweep = bench_inflight_sweep()
+    for r in sweep:
+        print(f"serving_inflight_rate{r['arrival_rate']:g},"
+              f"{r['tokens_per_s']:.0f},"
+              f"p50_{r['latency_steps_p50']:.0f}_"
+              f"p99_{r['latency_steps_p99']:.0f}steps_"
+              f"occ{r['tokens_per_decode_step']:.2f}_"
+              f"match{r['isolation_match']}")
+    row["inflight_sweep"] = sweep
+    if out_json:
+        with open(out_json, "w") as fh:
+            json.dump(row, fh, indent=2)
+    return row["match"] and all(r["isolation_match"] for r in sweep)
 
 
 def main(serving_only=False):

@@ -29,6 +29,7 @@ MARKDOWN_FILES = ("README.md", "docs/ARCHITECTURE.md")
 API_MODULES = (
     "repro.runtime.engine",
     "repro.runtime.program",
+    "repro.runtime.scheduler",
     "repro.core.mapping",
     "repro.core.noise_model",
     "repro.kernels.cim_mbiw.ops",

@@ -63,6 +63,14 @@ class CIMConfig:
     sharding: Optional[object] = None   # runtime.engine.ShardingConfig —
                                         # multi-macro dispatch in mode
                                         # "engine" (ignored by other modes)
+    isolate_rows: bool = False          # mode "engine" only: each leading
+                                        # batch row is its own activation-
+                                        # quantization segment, so fused
+                                        # rows are bit-identical to solo
+                                        # rows (serving-side isolation;
+                                        # noise draws stay positional —
+                                        # use runtime/scheduler.py for
+                                        # full per-request noise identity)
 
     def replace(self, **kw) -> "CIMConfig":
         return dataclasses.replace(self, **kw)
@@ -263,7 +271,13 @@ def _engine_forward(params: Dict, x: jnp.ndarray, cfg: CIMConfig,
     spec = mapping.LayerSpec(m=bucket, k=k_dim, n=n, r_in=cfg.r_in,
                              r_w=cfg.r_w, r_out=cfg.r_out)
     prog = compile_program([spec], _engine_config(cfg))
-    y = prog.serve([params], x2, key)
+    segments = None
+    if cfg.isolate_rows and lead:
+        # one segment per leading batch row: (B, S, K) -> B segments of
+        # S rows each, so fused rows quantize exactly as served alone
+        segments = jnp.repeat(jnp.arange(lead[0], dtype=jnp.int32),
+                              x2.shape[0] // lead[0])
+    y = prog.serve([params], x2, key, segments=segments)
     return y.reshape(lead + (n,)).astype(x.dtype)
 
 
@@ -372,4 +386,9 @@ def _engine_conv_forward(params: Dict, x: jnp.ndarray, cfg: CIMConfig,
             kh=g.kh, kw=g.kw, stride=g.stride, padding=g.padding,
             r_in=spec.r_in, r_w=spec.r_w, r_out=spec.r_out)
     prog = compile_program([spec], _engine_config(cfg))
-    return prog.serve([params], x, key).astype(x.dtype)
+    segments = None
+    if cfg.isolate_rows:
+        # one segment per batch image (the engine repeats ids over the
+        # conv's out_h*out_w GEMM rows itself)
+        segments = jnp.arange(x.shape[0], dtype=jnp.int32)
+    return prog.serve([params], x, key, segments=segments).astype(x.dtype)

@@ -37,6 +37,8 @@ class ActQuant(NamedTuple):
 def quantize_act(x: jnp.ndarray, r_in: int, *,
                  scale: Optional[jnp.ndarray] = None,
                  zero: Optional[jnp.ndarray] = None,
+                 segment_ids: Optional[jnp.ndarray] = None,
+                 num_segments: Optional[int] = None,
                  eps: float = 1e-8) -> ActQuant:
     """Unsigned asymmetric activation quantization (the datapath's
     signed-to-unsigned conversion + adaptive input swing).
@@ -44,8 +46,36 @@ def quantize_act(x: jnp.ndarray, r_in: int, *,
     If scale/zero are None they are computed from the current tensor
     (dynamic 'swing adaptation'); both are stop-gradiented, the STE flows
     through the rounding only.
+
+    `segment_ids` (optional, shape (x.shape[0],) int) switches the dynamic
+    min/max reduction from tensor-global to *per-segment* over the leading
+    axis: rows sharing a segment id share one swing, rows in different
+    segments never see each other's statistics.  This is the serving-side
+    isolation primitive — a fused multi-request batch quantizes each
+    request exactly as if it were served alone, because min/max are exact
+    reductions (a row's segment stats equal its solo-run stats bit for
+    bit).  scale/zero then broadcast per row, shape (x.shape[0], 1, ...).
+    The default (segment_ids=None) path is unchanged.
     """
     levels = 2.0 ** r_in - 1.0
+    if segment_ids is not None and (zero is None or scale is None):
+        if num_segments is None:
+            num_segments = x.shape[0]
+        red = tuple(range(1, x.ndim))
+        row_max = jnp.max(x, axis=red) if red else x
+        row_min = jnp.min(x, axis=red) if red else x
+        seg_max = jax.ops.segment_max(row_max, segment_ids,
+                                      num_segments=num_segments)
+        seg_min = jax.ops.segment_min(row_min, segment_ids,
+                                      num_segments=num_segments)
+        bshape = (x.shape[0],) + (1,) * (x.ndim - 1)
+        if zero is None:
+            zero = jax.lax.stop_gradient(
+                seg_min[segment_ids].reshape(bshape))
+        if scale is None:
+            rng = jax.lax.stop_gradient(
+                seg_max[segment_ids].reshape(bshape) - zero)
+            scale = jnp.maximum(rng, eps) / levels
     if zero is None:
         zero = jax.lax.stop_gradient(jnp.min(x))
     if scale is None:

@@ -76,7 +76,7 @@ def _cim_mbiw_kernel(x_ref, w_ref, gamma_ref, beta_ref, o_ref, acc_ref, *,
             return
         dp = acc_ref[...].astype(jnp.float32)
         gamma = gamma_ref[...].astype(jnp.float32)      # (1, bn)
-        beta = beta_ref[...].astype(jnp.float32)        # (1, bn)
+        beta = beta_ref[...].astype(jnp.float32)        # (1, bn) or (bm, bn)
         mid = 2.0 ** (r_out - 1)
         code = jnp.floor(mid + gamma * g0 * dp + beta)
         o_ref[...] = jnp.clip(code, 0.0, 2.0 ** r_out - 1.0
@@ -96,7 +96,11 @@ def cim_mbiw_matmul_planes(x_planes: jnp.ndarray, w_q: jnp.ndarray,
     x_planes : (M, P*K) int8 — P nibble planes laid out plane-major along
                the last axis; plane p carries bits [p*plane_shift, ...).
     w_q      : (K, N) int8 odd weights (+/-(2^r_w - 1))
-    gamma, beta : (1, N) float32 ABN parameters (beta in ADC codes)
+    gamma    : (1, N) float32 ABN gain
+    beta     : (1, N) float32 ABN offset in ADC codes — or (M, N) for a
+               *per-GEMM-row* offset (segment-wise activation quantization
+               folds a per-row zero-point into beta; the epilogue
+               broadcasts either shape identically per element)
     returns  : (M, N) int32 ADC codes in [0, 2^r_out - 1], or the raw int32
                dp accumulator when `fuse_adc=False` (the noise-injected
                engine applies its own ADC epilogue after the kernel)
@@ -106,9 +110,13 @@ def cim_mbiw_matmul_planes(x_planes: jnp.ndarray, w_q: jnp.ndarray,
     assert pk % k_dim == 0, (pk, k_dim)
     n_planes = pk // k_dim
     assert m % bm == 0 and n % bn == 0 and k_dim % bk == 0, (m, n, k_dim)
+    assert beta.shape in ((1, n), (m, n)), (beta.shape, m, n)
     n_k_inner = k_dim // bk
     n_k_total = n_planes * n_k_inner
 
+    beta_spec = (pl.BlockSpec((bm, bn), lambda i, j, k: (i, j))
+                 if beta.shape[0] == m and m != 1 else
+                 pl.BlockSpec((1, bn), lambda i, j, k: (0, j)))
     kernel = functools.partial(
         _cim_mbiw_kernel, n_k_total=n_k_total, n_k_inner=n_k_inner,
         plane_shift=plane_shift, g0=g0, r_out=r_out, fuse_adc=fuse_adc)
@@ -119,7 +127,7 @@ def cim_mbiw_matmul_planes(x_planes: jnp.ndarray, w_q: jnp.ndarray,
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
             pl.BlockSpec((bk, bn), lambda i, j, k: (k % n_k_inner, j)),
             pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
-            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+            beta_spec,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),

@@ -172,7 +172,9 @@ def cim_matmul(x_q: jnp.ndarray, w_q: jnp.ndarray, gamma: jnp.ndarray,
                interpret: bool = True, fuse_adc: bool = True) -> jnp.ndarray:
     """One macro row-tile (K <= n_rows recommended): int inputs -> ADC codes.
 
-    x_q: (M, K) unsigned ints < 2^r_in; w_q: (K, N) odd ints; gamma/beta (N,).
+    x_q: (M, K) unsigned ints < 2^r_in; w_q: (K, N) odd ints; gamma (N,);
+    beta (N,) — or (M, N) for a per-GEMM-row offset (segment-wise
+    activation quantization folds per-row zero-points into beta).
     Returns (M, N) int32 codes (raw int32 dp when `fuse_adc=False`).
     """
     m, k_dim = x_q.shape
@@ -192,7 +194,11 @@ def cim_matmul(x_q: jnp.ndarray, w_q: jnp.ndarray, gamma: jnp.ndarray,
     x_planes = _pad_to(x_planes, (bm, 1))
     w_q = _pad_to(w_q.astype(jnp.int8), (1, bn))
     gamma2 = _pad_to(gamma.reshape(1, -1).astype(jnp.float32), (1, bn))
-    beta2 = _pad_to(beta.reshape(1, -1).astype(jnp.float32), (1, bn))
+    if beta.ndim == 2 and beta.shape[0] == m and m != 1:
+        # per-row offset: pad rows in lockstep with x (pad rows discarded)
+        beta2 = _pad_to(beta.astype(jnp.float32), (bm, bn))
+    else:
+        beta2 = _pad_to(beta.reshape(1, -1).astype(jnp.float32), (1, bn))
 
     codes = cim_mbiw_matmul_planes(
         x_planes, w_q, gamma2, beta2, plane_shift=shift, g0=g0,

@@ -29,9 +29,13 @@ from repro.kernels.cim_mbiw.kernel import plane_layout
 
 def _adc_epilogue(dp: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
                   g0: float, r_out: int) -> jnp.ndarray:
+    # beta may be (N,) per channel or (M, N) per GEMM row (segment-wise
+    # quantization folds per-row zero-points into the ADC offset); either
+    # broadcasts identically per element against the (M, N) dp
+    beta_b = beta if beta.ndim >= 2 else beta[None, :]
     mid = 2.0 ** (r_out - 1)
     code = jnp.floor(mid + gamma[None, :] * g0 * dp.astype(jnp.float32)
-                     + beta[None, :])
+                     + beta_b)
     return jnp.clip(code, 0.0, 2.0 ** r_out - 1.0).astype(jnp.int32)
 
 

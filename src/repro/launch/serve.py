@@ -14,6 +14,14 @@ serving-smoke CI job runs exactly that).  With `--engine-devices D > 1`
 each layer's macro schedule additionally shards across a D-device mesh
 (ShardingConfig) — on CPU-only hosts emulate the bank of macros with
 XLA_FLAGS=--xla_force_host_platform_device_count=D.
+
+`--inflight` switches the decode loop to continuous (in-flight) batching
+over a slot-mapped KV cache (models/transformer.init_slot_cache): requests
+admit (solo prefill, one scatter) and retire (cursor reset, gather-free)
+between fused decode steps, `--batch` is the slot capacity, and in engine
+mode every slot is its own activation-quantization segment
+(CIMConfig.isolate_rows) so batchmates cannot perturb each other's
+numerics.  Attention-cache families (dense/moe) only.
 """
 from __future__ import annotations
 
@@ -22,6 +30,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.core.cim_layers import CIMConfig
@@ -47,6 +56,12 @@ def main():
                     help="fail if any decode step after the first re-plans "
                          "or re-traces the engine (the plan-once contract "
                          "of the compiled-program runtime)")
+    ap.add_argument("--inflight", action="store_true",
+                    help="continuous in-flight batching over a slot-mapped "
+                         "KV cache: --batch slots, requests admit/retire "
+                         "between fused decode steps (dense/moe only)")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="total requests for --inflight (default 2x slots)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -59,9 +74,12 @@ def main():
                                   axis=args.engine_axis)
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     cfg = cfg.replace(cim=CIMConfig(mode=args.cim_mode, max_gamma=2.0**16,
-                                    sharding=sharding))
+                                    sharding=sharding,
+                                    isolate_rows=args.inflight))
     key = jax.random.PRNGKey(args.seed)
     params = tf.init_params(cfg, key)
+    if args.inflight:
+        return _run_inflight(ap, args, cfg, params)
     max_len = args.prompt_len + args.gen_len + 8
     cache = tf.init_cache(cfg, args.batch, max_len=max_len)
 
@@ -121,6 +139,106 @@ def main():
             f"warmup (plans +{d_plans}, traces +{d_traces}) — the "
             f"plan-once/serve-many contract is broken")
     print("sample:", gen[0].tolist())
+
+
+def _run_inflight(ap, args, cfg, params):
+    """Continuous-batching decode loop: solo prefill into a slot-mapped
+    cache, fused single-token decode over all slots, retire on budget —
+    reporting per-request latency percentiles, throughput, and the
+    post-warmup recompile counters (`--assert-no-recompile` gates them)."""
+    if cfg.family not in ("dense", "moe"):
+        ap.error(f"--inflight supports dense/moe families, not "
+                 f"{cfg.family!r}")
+    from repro.runtime import engine as rt_engine
+    from repro.runtime.scheduler import SlotMap
+
+    slots = args.batch
+    max_len = args.prompt_len + args.gen_len + 8
+    cache = tf.init_slot_cache(cfg, slots, max_len)
+    rng = np.random.default_rng(args.seed)
+    n_req = args.requests or 2 * slots
+    # fixed-length prompts keep the prefill executable set at one trace;
+    # generation budgets and arrivals are ragged (the in-flight dynamics)
+    reqs = [{"uid": u,
+             "prompt": rng.integers(0, cfg.vocab_size,
+                                    size=args.prompt_len),
+             "gen": int(rng.integers(1, args.gen_len + 1)),
+             "arrival": int(rng.integers(0, args.gen_len))}
+            for u in range(n_req)]
+    reqs.sort(key=lambda r: r["arrival"])
+
+    def prefill(prompt):
+        c1 = tf.init_cache(cfg, 1, max_len=max_len)
+        logits, c1, _ = tf.forward(cfg, params, prompt[None], cache=c1)
+        return c1, jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+
+    @jax.jit
+    def step(params, cache, tok):
+        # explicit (B, 1) positions: every slot decodes at its own offset
+        pos = cache["pos"][:, None]
+        logits, cache, _ = tf.forward(cfg, params, tok[:, None],
+                                      positions=pos, cache=cache)
+        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), cache
+
+    smap = SlotMap(slots)
+    live, done, queue = {}, [], list(reqs)
+    cur = jnp.zeros((slots,), jnp.int32)
+    clock, decode_steps, snap, t_decode = 0, 0, None, 0.0
+    t_start = time.time()
+    while queue or live:
+        while queue and smap.n_free and queue[0]["arrival"] <= clock:
+            r = queue.pop(0)
+            s = smap.alloc()
+            c1, tok = prefill(jnp.asarray(r["prompt"], jnp.int32))
+            cache = tf.write_slot_cache(cache, s, c1)
+            cur = cur.at[s].set(tok[0])
+            r.update(slot=s, admitted=clock, tokens=[int(tok[0])])
+            if len(r["tokens"]) >= r["gen"]:
+                smap.free(s)
+                cache = tf.free_slot_cache(cache, s)
+                r["finished"] = clock
+                done.append(r)
+            else:
+                live[s] = r
+        if live:
+            t0 = time.time()
+            nxt, cache = step(params, cache, cur)
+            nxt = jax.device_get(nxt)
+            t_decode += time.time() - t0
+            decode_steps += 1
+            if snap is None:        # post-warmup recompile baseline
+                snap = (rt_engine.PLAN_COUNT["n"],
+                        rt_engine.TRACE_COUNT["n"])
+            for s in sorted(live):
+                r = live[s]
+                r["tokens"].append(int(nxt[s]))
+                cur = cur.at[s].set(int(nxt[s]))
+                if len(r["tokens"]) >= r["gen"]:
+                    smap.free(s)
+                    cache = tf.free_slot_cache(cache, s)
+                    r["finished"] = clock
+                    del live[s]
+                    done.append(r)
+        clock += 1
+
+    lat = np.asarray([r["finished"] - r["arrival"] for r in done], float)
+    toks = sum(len(r["tokens"]) for r in done)
+    wall = time.time() - t_start
+    print(f"inflight: {len(done)} requests, {toks} tokens, "
+          f"{decode_steps} fused steps over {slots} slots in {wall:.2f}s")
+    print(f"latency steps p50/p99: {np.percentile(lat, 50):.1f}/"
+          f"{np.percentile(lat, 99):.1f}; "
+          f"decode {toks / t_decode:.1f} tok/s" if t_decode else "")
+    d_plans = rt_engine.PLAN_COUNT["n"] - (snap or (0, 0))[0]
+    d_traces = rt_engine.TRACE_COUNT["n"] - (snap or (0, 0))[1]
+    if snap is not None:
+        print(f"decode recompiles after warmup: plans={d_plans} "
+              f"traces={d_traces}")
+        if args.assert_no_recompile and (d_plans or d_traces):
+            raise SystemExit(
+                f"FAIL: in-flight loop re-entered the planner/compiler "
+                f"after warmup (plans +{d_plans}, traces +{d_traces})")
+    print("sample:", done[0]["tokens"])
 
 
 if __name__ == "__main__":

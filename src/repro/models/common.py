@@ -9,6 +9,7 @@ for every architecture.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -91,15 +92,30 @@ def attention_scores_mask(q_pos: jnp.ndarray, k_pos: jnp.ndarray, *,
 
 
 def plain_attention(q, k, v, *, q_pos, k_pos, causal, window=0):
-    """Reference attention; q (B,Sq,H,D), k/v (B,Sk,G,D)."""
+    """Reference attention; q (B,Sq,H,D), k/v (B,Sk,G,D).
+
+    q_pos/k_pos are (Sq,)/(Sk,) shared across the batch, or (B,Sq)/(B,Sk)
+    for per-row positions (slot-mapped in-flight decode, where every batch
+    row sits at its own sequence offset) — the keep-mask is then built per
+    batch row."""
     b, sq, h, d = q.shape
     g = k.shape[2]
     rep = h // g
     qf = q.astype(jnp.float32) / (d ** 0.5)
     qf = qf.reshape(b, sq, g, rep, d)
     scores = jnp.einsum("bqgrd,bkgd->bgrqk", qf, k.astype(jnp.float32))
-    keep = attention_scores_mask(q_pos, k_pos, causal=causal, window=window)
-    scores = jnp.where(keep[None, None, None], scores, -1e30)
+    if q_pos.ndim == 2 or k_pos.ndim == 2:
+        qp = q_pos if q_pos.ndim == 2 else jnp.broadcast_to(
+            q_pos[None], (b, sq))
+        kp = k_pos if k_pos.ndim == 2 else jnp.broadcast_to(
+            k_pos[None], (b, k.shape[1]))
+        keep = jax.vmap(functools.partial(
+            attention_scores_mask, causal=causal, window=window))(qp, kp)
+        scores = jnp.where(keep[:, None, None], scores, -1e30)
+    else:
+        keep = attention_scores_mask(q_pos, k_pos, causal=causal,
+                                     window=window)
+        scores = jnp.where(keep[None, None, None], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bgrqk,bkgd->bqgrd", probs, v.astype(jnp.float32))
     return out.reshape(b, sq, h, d).astype(q.dtype)
@@ -247,7 +263,34 @@ def attention_block(params: Dict, x: jnp.ndarray, cfg: AttnConfig,
             v = _repeat_kv_to(v, kv_repeat_to)
         if use_pallas:
             pass  # shard_map in_specs drive k/v layout (replicated on TP)
-        if cache is not None and x_kv is None:
+        if cache is not None and x_kv is None and cache["idx"].ndim == 1:
+            # slot-mapped decode (in-flight batching): `idx` is a (B,)
+            # per-slot write cursor, every batch row rides its own ring
+            # position.  Scatter-write one token per row; the mask
+            # positions become per-row (B, L) and plain_attention builds
+            # the keep-mask per batch row.
+            if s != 1:
+                raise ValueError(
+                    f"slot-mapped KV decode is single-token (s=1), got "
+                    f"s={s}; prefill per request and scatter into the "
+                    "slot with write_slot_kv")
+            length = cache["k"].shape[1]
+            idx = cache["idx"]
+            write = jax.lax.rem(idx, length)
+            rows = jnp.arange(b)
+            k = cache["k"].at[rows, write].set(
+                k[:, 0].astype(cache["k"].dtype))
+            v = cache["v"].at[rows, write].set(
+                v[:, 0].astype(cache["v"].dtype))
+            k = shard(k, BATCH, TP, None, None)
+            v = shard(v, BATCH, TP, None, None)
+            new_cache = {"k": k, "v": v, "idx": idx + s}
+            # position held by ring slot j after the write, per batch row
+            j = jnp.arange(length)[None, :]
+            last = (idx + s - 1)[:, None]
+            src_pos = last - jnp.mod(last - j, length)
+            src_pos = jnp.where(src_pos >= 0, src_pos, -10**9)
+        elif cache is not None and x_kv is None:
             # decode: ring-buffer append at idx % L (s == 1 for decode;
             # multi-token prefill-into-cache requires idx + s <= L)
             length = cache["k"].shape[1]
@@ -274,7 +317,11 @@ def attention_block(params: Dict, x: jnp.ndarray, cfg: AttnConfig,
             v = shard(v, BATCH, None, TP, None)
         k_pos = src_pos
 
-    q_pos = positions if positions.ndim == 1 else positions[0]
+    # per-slot decode keeps 2D (B, S) q positions so the per-row masks of
+    # plain_attention line up; otherwise 2D positions collapse to row 0
+    # (shared across the batch, the pre-slot contract)
+    per_row = getattr(k_pos, "ndim", 1) == 2
+    q_pos = positions if (positions.ndim == 1 or per_row) else positions[0]
     if use_pallas:
         # fused VMEM flash kernel (fwd + bwd); positions are contiguous
         # 0..S-1 in the no-cache path, masks generated in-kernel
@@ -297,9 +344,52 @@ def attention_block(params: Dict, x: jnp.ndarray, cfg: AttnConfig,
 
 def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
                   dtype=jnp.bfloat16) -> Dict:
+    """Ring-buffer decode cache with one shared write cursor (all batch
+    rows advance in lockstep — the classic static-batch serving shape)."""
     return {"k": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
             "v": jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
             "idx": jnp.array(0, jnp.int32)}
+
+
+def init_slot_kv_cache(slots: int, max_len: int, n_kv: int, head_dim: int,
+                       dtype=jnp.bfloat16) -> Dict:
+    """Slot-mapped decode cache for in-flight (continuous) batching.
+
+    Same K/V layout as init_kv_cache but `idx` is a (slots,) *per-slot*
+    write cursor: every slot rides its own ring position, so requests at
+    different sequence offsets decode fused in one batch.  attention_block
+    detects the vector cursor and switches to per-row scatter writes and
+    per-row masks.  Admit a request with write_slot_kv (scatter its
+    prefilled batch-1 cache into a slot), retire with free_slot_kv
+    (cursor reset only — the stale K/V rows are never moved or gathered)."""
+    return {"k": jnp.zeros((slots, max_len, n_kv, head_dim), dtype),
+            "v": jnp.zeros((slots, max_len, n_kv, head_dim), dtype),
+            "idx": jnp.zeros((slots,), jnp.int32)}
+
+
+def write_slot_kv(cache: Dict, slot, prefill: Dict) -> Dict:
+    """Admit one request: scatter its prefilled batch-1 KV cache (an
+    init_kv_cache the request was prefilled into) into `slot` of a
+    slot-mapped cache and set the slot's cursor to the prefill length.
+    Leaves every other slot untouched — admission never perturbs the
+    requests already in flight."""
+    return {"k": cache["k"].at[slot].set(
+                prefill["k"][0].astype(cache["k"].dtype)),
+            "v": cache["v"].at[slot].set(
+                prefill["v"][0].astype(cache["v"].dtype)),
+            "idx": cache["idx"].at[slot].set(
+                jnp.asarray(prefill["idx"], jnp.int32))}
+
+
+def free_slot_kv(cache: Dict, slot) -> Dict:
+    """Retire one request: reset the slot's write cursor to 0.
+
+    Gather-free — the slot's stale K/V rows stay in place (a zero cursor
+    masks every ring position out of the attention scores, and the next
+    admit overwrites them), so retirement moves no cache data and cannot
+    perturb the surviving requests."""
+    return {"k": cache["k"], "v": cache["v"],
+            "idx": cache["idx"].at[slot].set(0)}
 
 
 # ---------------------------------------------------------------------------

@@ -468,3 +468,44 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
         dec = {"kv": kv(cfg.n_layers, cfg.max_target_len), "xkv": xkv}
         return {"pos": pos, "layers": dec}
     raise ValueError(cfg.family)
+
+
+def init_slot_cache(cfg: ModelConfig, slots: int, max_len: int,
+                    dtype=jnp.bfloat16) -> Dict:
+    """Slot-mapped decode cache for in-flight (continuous) batching:
+    {"pos": (slots,) per-slot position, "layers": stacked per-layer
+    cm.init_slot_kv_cache} — every slot rides its own ring cursor, so
+    requests at different sequence offsets decode fused in one batch.
+    Attention-cache families only (dense/moe/vlm)."""
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(
+            f"slot-mapped decode supports attention-cache families "
+            f"(dense/moe/vlm), not {cfg.family!r}")
+    hd = cfg.resolved_head_dim
+    length = _kv_cache_len(cfg, max_len, cfg.sliding_window)
+    kvs = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape),
+        cm.init_slot_kv_cache(slots, length, cfg.n_kv_heads, hd, dtype))
+    return {"pos": jnp.zeros((slots,), jnp.int32), "layers": {"kv": kvs}}
+
+
+def write_slot_cache(cache: Dict, slot: int, prefill: Dict) -> Dict:
+    """Admit a prefilled request into slot `slot` of a slot-mapped cache:
+    scatter the batch-1 `prefill` cache's K/V rings, per-layer cursors and
+    position into the slot (gather-free; every other slot untouched)."""
+    pkv, kv = prefill["layers"]["kv"], cache["layers"]["kv"]
+    new = {"k": kv["k"].at[:, slot].set(pkv["k"][:, 0].astype(kv["k"].dtype)),
+           "v": kv["v"].at[:, slot].set(pkv["v"][:, 0].astype(kv["v"].dtype)),
+           "idx": kv["idx"].at[:, slot].set(pkv["idx"])}
+    return {"pos": cache["pos"].at[slot].set(prefill["pos"]),
+            "layers": {"kv": new}}
+
+
+def free_slot_cache(cache: Dict, slot: int) -> Dict:
+    """Retire the request in slot `slot`: reset its cursors/position only
+    (its K/V rows stay in place until the next admission overwrites them —
+    per-row masks keep dead rows invisible to everyone else)."""
+    kv = cache["layers"]["kv"]
+    return {"pos": cache["pos"].at[slot].set(0),
+            "layers": {"kv": {**kv,
+                              "idx": kv["idx"].at[:, slot].set(0)}}}

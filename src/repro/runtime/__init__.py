@@ -1,7 +1,8 @@
 """Runtime subsystems: the precision-scalable CIM inference engine (single-
 and multi-macro sharded dispatch), the plan-once/serve-many compiled-program
-layer on top of it, plus the elastic-mesh and fault-tolerance helpers used
-by the training launchers."""
+layer on top of it, the continuous in-flight batching scheduler over that
+layer, plus the elastic-mesh and fault-tolerance helpers used by the
+training launchers."""
 from repro.runtime.engine import (CIMInferenceEngine, EngineConfig,  # noqa
                                   LayerPlan, NetworkPlan, ShardingConfig,
                                   im2col_patches, plan_layer, plan_network,
@@ -9,4 +10,7 @@ from repro.runtime.engine import (CIMInferenceEngine, EngineConfig,  # noqa
 from repro.runtime.program import (BatchBuckets, BoundProgram,  # noqa
                                    CIMProgram, clear_program_cache,
                                    compile_program, program_cache_stats,
-                                   program_for_plan)
+                                   program_for_plan, request_noise_ids)
+from repro.runtime.scheduler import (CIMDecodeLM, InflightScheduler,  # noqa
+                                     Request, RequestRecord, SlotMap,
+                                     decode_sequential)

@@ -485,13 +485,23 @@ class _LayerNoise:
 
 
 def _layer_noise(lp: LayerPlan, cfg: EngineConfig, noise: NoiseConfig,
-                 gamma_p: jnp.ndarray, key: jax.Array, m: int) -> _LayerNoise:
+                 gamma_p: jnp.ndarray, key: jax.Array, m: int,
+                 row_ids: Optional[jnp.ndarray] = None,
+                 row_sub: Optional[jnp.ndarray] = None) -> _LayerNoise:
     """Noise terms of one layer in code/dp units, injected exactly where the
     fakequant (thermal, SA residue) and sim (settling, charge injection,
     leakage) paths put them.  `noise` carries *traced* scalars; only its
     enabled/calibrated flags are static.  `gamma_p` is the column-padded
     ABN gain; `m` the layer's full GEMM-row extent (thermal draws cover it
-    once, device/chunk slices reuse them)."""
+    once, device/chunk slices reuse them).
+
+    `row_ids`/`row_sub` (optional, (m,) int32) switch the thermal draws
+    from *positional* global-row-block keys to *identity* keys: each GEMM
+    row's draw folds its caller-assigned id (and an intra-sample counter
+    for the conv im2col expansion) instead of its position in the batch.
+    An in-flight scheduler derives ids from (request uid, token step), so
+    a request's draws are invariant to its slot, its batchmates, and the
+    dispatch extent — the noise-mode half of per-request isolation."""
     macro, spec = cfg.macro, lp.spec
     units = lp.mp.units_per_tile if cfg.adaptive_swing else macro.n_units
     # memory note: the thermal field is O(row_tiles * n_pad * m) floats
@@ -525,6 +535,17 @@ def _layer_noise(lp: LayerPlan, cfg: EngineConfig, noise: NoiseConfig,
 
     def tile_field(ki: int, ni: int) -> jnp.ndarray:
         kt = jax.random.fold_in(jax.random.fold_in(tkey, ki), ni)
+        if row_ids is not None:
+            # identity-keyed draws: fold each row's caller id + intra-
+            # sample counter, so the value a row sees depends only on
+            # what it *is*, never on where it sits in the batch
+            sub = (row_sub if row_sub is not None
+                   else jnp.zeros_like(row_ids))
+
+            def draw(rid, sb):
+                rk = jax.random.fold_in(jax.random.fold_in(kt, rid), sb)
+                return jax.random.normal(rk, (tsz,))
+            return jax.vmap(draw)(row_ids, sub)
         blocks = [jax.random.normal(jax.random.fold_in(kt, b),
                                     (NOISE_ROW_BLOCK, tsz))
                   for b in range(n_blocks)]
@@ -605,16 +626,18 @@ def _schedule_rows(lp: LayerPlan, cfg: EngineConfig, q_rows: jnp.ndarray,
                    beta: jnp.ndarray, *, matmul,
                    nctx: Optional[_LayerNoise]) -> jnp.ndarray:
     """Stream `q_rows` through the tile schedule in cfg.stream_rows chunks
-    (the im2col streaming stage).  Quantization stays global and the noise
-    context pre-draws per-tile thermal fields over all rows, so chunking is
-    bit-invariant — with or without noise."""
+    (the im2col streaming stage).  Quantization stays global (or
+    per-segment — `zp` is then per-row and chunks alongside the rows) and
+    the noise context pre-draws per-tile thermal fields over all rows, so
+    chunking is bit-invariant — with or without noise."""
     m = q_rows.shape[0]
     chunk = cfg.stream_rows if cfg.stream_rows > 0 else max(m, 1)
     parts = []
     for s in range(0, max(m, 1), chunk):
         sl = slice(s, min(s + chunk, m))
         parts.append(_tile_schedule(
-            lp, q_rows[sl], zp, wqq, gamma, beta, matmul=matmul,
+            lp, q_rows[sl], zp if zp.ndim == 0 else zp[sl], wqq, gamma,
+            beta, matmul=matmul,
             nctx=nctx.rows(sl) if nctx is not None else None))
     return parts[0] if len(parts) == 1 else jnp.concatenate(parts, 0)
 
@@ -671,11 +694,15 @@ def _sharded_schedule(lp: LayerPlan, cfg: EngineConfig, q_rows: jnp.ndarray,
                         out_specs=P(None, ax), check_vma=False)(*args)
         return out                       # (m, n_tot); caller slices cols
 
-    # kind == "rows": data-parallel over the GEMM-row dimension
+    # kind == "rows": data-parallel over the GEMM-row dimension; a per-row
+    # zero-point (segment quantization) shards with its rows, a global
+    # scalar replicates
     m_tot = shard.devices * -(-max(m, 1) // shard.devices)
     q_pad = _pad_dim(q_rows, 0, m_tot)
-    args = [q_pad, zp, wqq, gamma, beta]
-    specs = [P(ax, None), P(), P(), P(), P()]
+    zp_arg = zp if zp.ndim == 0 else _pad_dim(zp, 0, m_tot)
+    zp_spec = P() if zp.ndim == 0 else P(ax, None)
+    args = [q_pad, zp_arg, wqq, gamma, beta]
+    specs = [P(ax, None), zp_spec, P(), P(), P()]
     if noisy:
         args += [nctx.offset_codes, nctx.droop_codes, nctx.gain_mult,
                  _pad_dim(nctx.thermal, 2, m_tot)]
@@ -690,20 +717,35 @@ def _layer_tiles(lp: LayerPlan, bind: Dict[str, jnp.ndarray],
                  x2: jnp.ndarray, cfg: EngineConfig, *, matmul,
                  key: Optional[jax.Array] = None,
                  noise: Optional[NoiseConfig] = None,
-                 sharded: bool = False) -> jnp.ndarray:
+                 sharded: bool = False,
+                 seg_rows: Optional[jnp.ndarray] = None,
+                 nid_rows: Optional[jnp.ndarray] = None,
+                 sub_rows: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Run one layer's tile schedule over (M, K) GEMM rows.
 
     `bind` carries the precomputed weight-side operands (bind_layer);
     activation quantization and the noise context (offsets, per-tile
     thermal fields) are built globally per call, then the schedule executes
     serially in stream chunks or sharded across the mesh — numerically
-    identical paths."""
+    identical paths.
+
+    `seg_rows` (optional, (M,) int32) switches the activation quantization
+    to per-segment statistics (quantize_act segment path): the zero-point
+    becomes per-row and folds into a per-row beta_eff inside the ADC
+    floor, so rows of different segments never share swing state.
+    `nid_rows`/`sub_rows` key the noise model's thermal draws by row
+    identity instead of position (see _layer_noise)."""
     from repro.core.quantization import quantize_act
-    aq = quantize_act(x2, lp.spec.r_in)
+    if seg_rows is None:
+        aq = quantize_act(x2, lp.spec.r_in)
+    else:
+        aq = quantize_act(x2, lp.spec.r_in, segment_ids=seg_rows,
+                          num_segments=x2.shape[0])
     n = lp.spec.n
     wqq, gamma_p, beta_p = bind["wqq"], bind["gamma_p"], bind["beta_p"]
     m = x2.shape[0]
-    nctx = (_layer_noise(lp, cfg, noise, gamma_p, key, m)
+    nctx = (_layer_noise(lp, cfg, noise, gamma_p, key, m,
+                         row_ids=nid_rows, row_sub=sub_rows)
             if noise is not None else None)
     zp = jnp.asarray(aq.zero / aq.scale, jnp.float32)
     if sharded and lp.shard is not None:
@@ -724,9 +766,16 @@ def _run_layer(lp: LayerPlan, bind: Dict[str, jnp.ndarray], x: jnp.ndarray,
                cfg: EngineConfig, *, matmul,
                key: Optional[jax.Array] = None,
                noise: Optional[NoiseConfig] = None,
-               sharded: bool = False) -> jnp.ndarray:
+               sharded: bool = False,
+               seg: Optional[jnp.ndarray] = None,
+               nids: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """One planned layer end-to-end: im2col (conv), tile schedule,
-    activation, pooling, and the reshape back to the next layer's view."""
+    activation, pooling, and the reshape back to the next layer's view.
+
+    `seg`/`nids` are per *batch sample* (B,) segment and noise-identity
+    ids; a conv layer's im2col expansion repeats them across the sample's
+    out_h*out_w GEMM rows (plus an intra-sample counter for the noise
+    draws), a dense layer uses them as-is."""
     g = lp.spec.conv
     if g is not None:
         if x.ndim != 4 or x.shape[1:] != g.spatial_in:
@@ -734,14 +783,21 @@ def _run_layer(lp: LayerPlan, bind: Dict[str, jnp.ndarray], x: jnp.ndarray,
                 f"conv layer expects (B, {g.h}, {g.w}, {g.c_in}) "
                 f"activations, got {x.shape}")
         b = x.shape[0]
-        x2 = im2col_patches(x, g).reshape(b * g.out_h * g.out_w, lp.spec.k)
+        rep = g.out_h * g.out_w
+        x2 = im2col_patches(x, g).reshape(b * rep, lp.spec.k)
+        seg_rows = None if seg is None else jnp.repeat(seg, rep)
+        nid_rows = None if nids is None else jnp.repeat(nids, rep)
+        sub_rows = (None if nids is None else
+                    jnp.tile(jnp.arange(rep, dtype=jnp.int32), b))
     else:
         x2 = x.reshape(x.shape[0], -1)        # conv -> dense flatten (NHWC)
         if x2.shape[-1] != lp.spec.k:
             raise ValueError(f"dense layer expects {lp.spec.k} features, "
                              f"got {x2.shape[-1]} from {x.shape}")
+        seg_rows, nid_rows, sub_rows = seg, nids, None
     y = _layer_tiles(lp, bind, x2, cfg, matmul=matmul, key=key,
-                     noise=noise, sharded=sharded)
+                     noise=noise, sharded=sharded, seg_rows=seg_rows,
+                     nid_rows=nid_rows, sub_rows=sub_rows)
     if g is not None:
         y = y.reshape(b, g.out_h, g.out_w, g.c_out)
     if lp.pool > 1:
@@ -790,7 +846,9 @@ def _forward(plan: NetworkPlan, binds: Sequence[Dict[str, jnp.ndarray]],
              x: jnp.ndarray, reference: bool,
              key: Optional[jax.Array] = None,
              noise: Optional[NoiseConfig] = None,
-             m_valid: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+             m_valid: Optional[jnp.ndarray] = None,
+             seg: Optional[jnp.ndarray] = None,
+             nids: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     if plan.cfg.noise.enabled and key is None:
         raise ValueError(
             "noise-injected engine run requires a PRNG key: pass key= to "
@@ -813,26 +871,37 @@ def _forward(plan: NetworkPlan, binds: Sequence[Dict[str, jnp.ndarray]],
         xc = x.reshape((-1, x.shape[-1])).astype(jnp.float32)
     noisy = noise is not None
     sharded = (not reference) and plan.cfg.sharding is not None
+    if seg is not None and seg.shape[0] != xc.shape[0]:
+        raise ValueError(f"segments extent {seg.shape[0]} != canonical "
+                         f"batch extent {xc.shape[0]}")
+    if nids is not None and nids.shape[0] != xc.shape[0]:
+        raise ValueError(f"noise_ids extent {nids.shape[0]} != canonical "
+                         f"batch extent {xc.shape[0]}")
     for i, (lp, bind) in enumerate(zip(plan.layers, binds)):
         if m_valid is not None:       # batch-bucketed run: re-pin pad rows
             xc = _mask_pad_rows(xc, m_valid)
         mk = _reference_matmul if reference else _kernel_matmul
         lkey = jax.random.fold_in(key, i) if noisy else None
         xc = _run_layer(lp, bind, xc, plan.cfg, matmul=mk(lp, plan.cfg),
-                        key=lkey, noise=noise, sharded=sharded)
+                        key=lkey, noise=noise, sharded=sharded, seg=seg,
+                        nids=nids)
     return xc.reshape(lead + xc.shape[1:])
 
 
 @functools.partial(jax.jit, static_argnames=("plan", "bound", "reference"))
 def _exec_jit(plan: NetworkPlan, payload, x: jnp.ndarray, m_valid,
-              key, noise, bound: bool, reference: bool) -> jnp.ndarray:
+              key, noise, seg, nids, bound: bool,
+              reference: bool) -> jnp.ndarray:
     """The one jitted executable behind every engine entry point.
 
     `payload` is the per-layer parameter list (bound=False: weight binding
     runs inside this graph, the legacy per-call behaviour) or a tuple of
     bind_layer products (bound=True: weight quantization left the per-call
     path at CIMProgram.bind time).  `m_valid` (traced) marks the live batch
-    extent of a bucket-padded run, or None for exact-shape dispatch."""
+    extent of a bucket-padded run, or None for exact-shape dispatch.
+    `seg`/`nids` (traced, (B,) int32 or None) are the per-sample segment
+    ids of segment-wise activation quantization and the per-sample noise
+    identity ids of identity-keyed thermal draws."""
     TRACE_COUNT["n"] += 1            # trace-time side effect: 1 per compile
     if bound:
         binds = list(payload)
@@ -843,7 +912,7 @@ def _exec_jit(plan: NetworkPlan, payload, x: jnp.ndarray, m_valid,
         binds = [bind_layer(lp, p, plan.cfg)
                  for lp, p in zip(plan.layers, payload)]
     return _forward(plan, binds, x, reference=reference, key=key,
-                    noise=noise, m_valid=m_valid)
+                    noise=noise, m_valid=m_valid, seg=seg, nids=nids)
 
 
 def _dispatch_noise(plan: NetworkPlan,
@@ -885,7 +954,8 @@ def init_network_params(plan: NetworkPlan, key: jax.Array) -> Params:
 
 def run_network(plan: NetworkPlan, params: Params, x: jnp.ndarray,
                 key: Optional[jax.Array] = None,
-                noise: Optional[NoiseConfig] = None) -> jnp.ndarray:
+                noise: Optional[NoiseConfig] = None, *,
+                segments: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Execute the planned schedule through the Pallas kernel variants.
 
     .. deprecated:: this is the per-call entry point; it keeps working
@@ -905,13 +975,18 @@ def run_network(plan: NetworkPlan, params: Params, x: jnp.ndarray,
       noise: optional NoiseConfig whose *numeric* terms override the
         planned operating point at dispatch time — traced scalars, so a
         sweep across operating points shares one compile.
+      segments: optional (B,) int32 per-sample segment ids — activation
+        quantization reduces per segment instead of batch-globally, so
+        samples in different segments never share dynamic swing state
+        (the serving-side per-request isolation primitive).
     Returns:
       (..., N_last) activations — or (..., out_h, out_w, C_out) if the
       last layer is a conv.
     """
     _warn_legacy_entry("run_network")
     from repro.runtime.program import program_for_plan
-    return program_for_plan(plan).run(params, x, key, noise)
+    return program_for_plan(plan).run(params, x, key, noise,
+                                      segments=segments)
 
 
 def run_network_reference(plan: NetworkPlan, params: Params, x: jnp.ndarray,

@@ -102,6 +102,22 @@ DEFAULT_BUCKETS = BatchBuckets()
 _STAT_KEYS = ("plans_built", "executables_compiled", "bucket_hits",
               "bucket_misses", "run_calls", "serve_calls")
 
+# stride separating per-request noise-id ranges (request_noise_ids):
+# 2^20 rows per request before ids collide — collisions would only
+# correlate two rows' thermal draws, never break per-request determinism
+NOISE_ID_STRIDE = 1 << 20
+
+
+def request_noise_ids(request_index: int, rows: int) -> jnp.ndarray:
+    """Canonical per-row noise-identity ids of one request.
+
+    `(request_index, row)` maps to `request_index * NOISE_ID_STRIDE + row`
+    (int32).  Both the fused serve_batch(isolate=True) path and a solo
+    per-request serve must key thermal draws on the *same* ids for noise
+    runs to be bit-identical — use this helper on both sides."""
+    return (jnp.arange(rows, dtype=jnp.int32)
+            + jnp.int32(request_index * NOISE_ID_STRIDE))
+
 
 @functools.partial(jax.jit, static_argnames=("plan",))
 def _bind_jit(plan: rt.NetworkPlan, params: rt.Params):
@@ -201,6 +217,17 @@ class CIMProgram:
                 f"layer's k={k0}")
         return x.reshape((-1, k0)), x.shape[:-1]
 
+    def _canon_rows(self, v, m: int, name: str):
+        """Canonicalize an optional per-sample id vector (segments /
+        noise_ids) against the collapsed batch extent `m`."""
+        if v is None:
+            return None
+        v = jnp.asarray(v, jnp.int32).reshape(-1)
+        if v.shape[0] != m:
+            raise ValueError(
+                f"{name} has {v.shape[0]} entries for batch extent {m}")
+        return v
+
     def _note_executable(self, key: tuple, bucketed: bool) -> None:
         st = self._stats
         st["serve_calls" if bucketed else "run_calls"] += 1
@@ -216,48 +243,71 @@ class CIMProgram:
     def run(self, params: rt.Params, x: jnp.ndarray,
             key: Optional[jax.Array] = None,
             noise: Optional[NoiseConfig] = None, *,
+            segments: Optional[jnp.ndarray] = None,
+            noise_ids: Optional[jnp.ndarray] = None,
             reference: bool = False) -> jnp.ndarray:
         """Exact-shape dispatch (run_network semantics, no bucketing): one
         cached executable per distinct batch extent.  `reference=True`
-        runs the pure-jnp digital oracle of the same schedule."""
+        runs the pure-jnp digital oracle of the same schedule.
+        `segments`/`noise_ids` are optional per-sample ids: segment-wise
+        activation quantization and identity-keyed noise draws (the
+        per-request isolation primitives — see BoundProgram.serve)."""
         nz = rt._dispatch_noise(self._plan, noise)
         xc, lead = self._canon(x)
+        seg = self._canon_rows(segments, xc.shape[0], "segments")
+        nid = self._canon_rows(noise_ids, xc.shape[0], "noise_ids")
         # the key tuple mirrors the jit trace signature: dispatch kind and
         # key presence both change the traced graph, so they discriminate
         self._note_executable(
             ("exact", xc.shape[0], nz is not None, key is not None,
-             self._devices(), False, bool(reference)), bucketed=False)
+             self._devices(), False, bool(reference),
+             seg is not None, nid is not None), bucketed=False)
         y = rt._exec_jit(self._plan, list(params), xc, None, key, nz,
-                         False, bool(reference))
+                         seg, nid, False, bool(reference))
         return y.reshape(lead + y.shape[1:])
 
     def serve(self, params: rt.Params, x: jnp.ndarray,
               key: Optional[jax.Array] = None,
               noise: Optional[NoiseConfig] = None, *,
+              segments: Optional[jnp.ndarray] = None,
+              noise_ids: Optional[jnp.ndarray] = None,
               reference: bool = False) -> jnp.ndarray:
         """Batch-bucketed dispatch with per-call params (weight binding
         stays in the jitted graph — use bind(params).serve(...) to hoist
         it).  Bit-exact with `run` on the same inputs."""
         return self._serve_padded(list(params), False, x, key, noise,
-                                  bool(reference))
+                                  bool(reference), segments, noise_ids)
 
     def _serve_padded(self, payload, bound: bool, x: jnp.ndarray,
-                      key, noise, reference: bool) -> jnp.ndarray:
+                      key, noise, reference: bool,
+                      segments=None, noise_ids=None) -> jnp.ndarray:
         nz = rt._dispatch_noise(self._plan, noise)
         xc, lead = self._canon(x)
         m = xc.shape[0]
         if m < 1:
             raise ValueError("cannot serve an empty batch")
+        seg = self._canon_rows(segments, m, "segments")
+        nid = self._canon_rows(noise_ids, m, "noise_ids")
         bucket = self._buckets.bucket_for(m)
         if bucket > m:
             pad = jnp.broadcast_to(xc[:1], (bucket - m,) + xc.shape[1:])
             xc = jnp.concatenate([xc, pad], axis=0)
+            # pad ids mirror the pad rows (copies of row 0): the pad rows
+            # stay duplicates inside row 0's segment, so no segment's
+            # min/max can move and live rows stay bit-exact
+            if seg is not None:
+                seg = jnp.concatenate(
+                    [seg, jnp.broadcast_to(seg[:1], (bucket - m,))])
+            if nid is not None:
+                nid = jnp.concatenate(
+                    [nid, jnp.broadcast_to(nid[:1], (bucket - m,))])
         self._note_executable(
             ("bucket", bucket, nz is not None, key is not None,
-             self._devices(), bound, reference), bucketed=True)
+             self._devices(), bound, reference,
+             seg is not None, nid is not None), bucketed=True)
         y = rt._exec_jit(self._plan, payload, xc,
-                         jnp.asarray(m, jnp.int32), key, nz, bound,
-                         reference)
+                         jnp.asarray(m, jnp.int32), key, nz, seg, nid,
+                         bound, reference)
         return y[:m].reshape(lead + y.shape[1:])
 
     # -- observability -----------------------------------------------------
@@ -283,11 +333,15 @@ class BoundProgram:
 
     `serve(x)` dispatches one request through the batch-bucket ladder;
     `serve_batch([x1, ...])` concatenates requests, serves the fused batch
-    once, and splits the results back per request.  Note multi-request
-    fusion shares the dynamic activation-quantization statistics across the
-    fused batch (exactly like running the concatenated batch through the
-    engine) — it is bit-exact with `serve(concat(requests))`, not with
-    per-request serve calls."""
+    once, and splits the results back per request.  By default the fusion
+    shares the dynamic activation-quantization statistics across the fused
+    batch (exactly like running the concatenated batch through the
+    engine) — bit-exact with `serve(concat(requests))`, not with
+    per-request serve calls.  `serve_batch(..., isolate=True)` instead
+    tags each request as its own quantization segment (segment-wise
+    `quantize_act`), making every request bit-identical to serving it
+    alone — the contract in-flight batched decode
+    (runtime/scheduler.py) is built on."""
 
     __slots__ = ("program", "_binds")
 
@@ -305,24 +359,38 @@ class BoundProgram:
 
     def serve(self, x: jnp.ndarray, key: Optional[jax.Array] = None,
               noise: Optional[NoiseConfig] = None, *,
+              segments: Optional[jnp.ndarray] = None,
+              noise_ids: Optional[jnp.ndarray] = None,
               reference: bool = False) -> jnp.ndarray:
         """Bucketed dispatch of one request through the bound weights
         (bit-exact with the unbucketed engine on the same inputs, clean
-        and under a fixed noise key)."""
+        and under a fixed noise key).
+
+        `segments` ((B,) int32, optional) switches activation quantization
+        to per-segment statistics: samples with different ids never share
+        dynamic swing state, so a fused batch is bit-exact with serving
+        each segment alone.  `noise_ids` ((B,) int32, optional) keys the
+        noise model's thermal draws by sample identity instead of batch
+        position (see request_noise_ids) — together they make noisy fused
+        serving bit-exact with solo serving under one key."""
         return self.program._serve_padded(list(self._binds), True, x, key,
-                                          noise, bool(reference))
+                                          noise, bool(reference),
+                                          segments, noise_ids)
 
     __call__ = serve
 
     def reference(self, x: jnp.ndarray, key: Optional[jax.Array] = None,
-                  noise: Optional[NoiseConfig] = None) -> jnp.ndarray:
+                  noise: Optional[NoiseConfig] = None, *,
+                  segments: Optional[jnp.ndarray] = None,
+                  noise_ids: Optional[jnp.ndarray] = None) -> jnp.ndarray:
         """The pure-jnp digital oracle of serve (bit-exact with it)."""
-        return self.serve(x, key, noise, reference=True)
+        return self.serve(x, key, noise, segments=segments,
+                          noise_ids=noise_ids, reference=True)
 
     def serve_batch(self, requests: Sequence[jnp.ndarray],
                     key: Optional[jax.Array] = None,
-                    noise: Optional[NoiseConfig] = None
-                    ) -> List[jnp.ndarray]:
+                    noise: Optional[NoiseConfig] = None, *,
+                    isolate: bool = False) -> List[jnp.ndarray]:
         """Multi-request serving: concatenate, bucket-pad, dispatch once
         (through the sharded engine when the plan is sharded), split.
 
@@ -331,8 +399,19 @@ class BoundProgram:
             the plan's feature shape — (b_i, K0) dense or
             (b_i, H, W, C_in) conv.
           key: PRNG key for noise-enabled plans (one key for the fused
-            batch; per-request noise follows each request's row offset).
+            batch; per-request noise follows each request's row offset —
+            or its request_noise_ids identity under `isolate`).
           noise: optional operating-point override (traced — no recompile).
+          isolate: per-request numerical isolation.  False (default)
+            keeps the legacy fusion semantics — the dynamic activation-
+            quantization statistics are shared across the fused batch, so
+            the results are bit-exact with `serve(concat(requests))` but
+            NOT with per-request serves.  True tags each request as its
+            own quantization segment (and, under noise, keys thermal
+            draws on request_noise_ids(i, b_i)), making every request's
+            rows bit-identical to a solo
+            `serve(x_i, key, segments=zeros(b_i),
+            noise_ids=request_noise_ids(i, b_i))` call.
         Returns:
           One result array per request, in order, each with its own
           leading b_i.
@@ -347,7 +426,17 @@ class BoundProgram:
                     f"request {i} shape {r.shape} is not batch-major with "
                     f"feature shape {feat}")
         sizes = [r.shape[0] for r in xs]
-        y = self.serve(jnp.concatenate(xs, axis=0), key, noise)
+        segments = noise_ids = None
+        if isolate:
+            segments = jnp.concatenate(
+                [jnp.full((b,), i, jnp.int32)
+                 for i, b in enumerate(sizes)])
+            if key is not None:
+                noise_ids = jnp.concatenate(
+                    [request_noise_ids(i, b)
+                     for i, b in enumerate(sizes)])
+        y = self.serve(jnp.concatenate(xs, axis=0), key, noise,
+                       segments=segments, noise_ids=noise_ids)
         out, s = [], 0
         for b in sizes:
             out.append(y[s:s + b])

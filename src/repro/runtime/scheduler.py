@@ -1,0 +1,398 @@
+"""Continuous in-flight batching for the compiled CIM serving runtime.
+
+Static batching serves a fleet the way a bus serves commuters: everyone
+waits for the batch to fill, and everyone rides until the *longest* request
+finishes.  In-flight (continuous) batching admits and retires requests
+*between decode steps* instead — the per-token economics the ROADMAP's
+"millions of users" north star requires.  This module is that layer, built
+on three invariants the PR 5/PR 6 runtime provides:
+
+* **Bounded executables** — fused decode dispatches at the `BatchBuckets`
+  ladder rung covering the highest live slot, so any admit/retire schedule
+  touches the same small executable set (zero recompiles after warmup;
+  engine.TRACE_COUNT/PLAN_COUNT observable).
+* **Per-request numerical isolation** — every slot is its own activation-
+  quantization segment (`quantize_act` segment path) and, under noise, its
+  thermal draws are keyed on (request uid, call index) rather than batch
+  position.  A request's token stream is therefore *bit-identical* to
+  serving it alone (`decode_sequential`), whatever its batchmates,
+  arrival order, slot, or the device count.
+* **Gather-free slot lifecycle** — admission prefms a solo prefill and
+  writes one state row; retirement just frees the slot id.  No state is
+  ever compacted, shifted, or gathered, so neither event can perturb the
+  requests already in flight.
+
+The model here (`CIMDecodeLM`) is a deliberately small greedy decode-only
+LM over a BoundProgram (embed -> d-to-d CIM network -> tied logits): rich
+enough to exercise every runtime path the property tests and the serving
+benchmark need, small enough that fuzzing hundreds of schedules stays
+cheap.  The transformer serving path reuses the same slot discipline via
+models/common.init_slot_kv_cache (see launch/serve.py --inflight).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mapping
+from repro.runtime import engine as rt
+from repro.runtime.program import (DEFAULT_BUCKETS, NOISE_ID_STRIDE,
+                                   BatchBuckets, BoundProgram,
+                                   compile_program)
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One decode request: a prompt plus a generation budget.
+
+    `uid` must be unique among in-flight requests — it seeds the request's
+    noise identity (noise_id(uid, call)), so two live requests sharing a
+    uid would also share thermal draws."""
+    uid: int
+    prompt: Tuple[int, ...]
+    max_new_tokens: int
+
+    def __post_init__(self):
+        if len(self.prompt) < 1:
+            raise ValueError("request needs a non-empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError("request needs max_new_tokens >= 1")
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """Bookkeeping of one request's life in the scheduler (all step
+    indices are scheduler-clock values; -1 means 'not yet')."""
+    request: Request
+    arrival_step: int
+    slot: int = -1
+    calls: int = 0                    # model calls made (prefill + decode)
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    admitted_step: int = -1
+    first_token_step: int = -1
+    finished_step: int = -1
+
+    @property
+    def done(self) -> bool:
+        """Whether the generation budget has been spent."""
+        return len(self.tokens) >= self.request.max_new_tokens
+
+
+class SlotMap:
+    """Lowest-free-slot allocator for the in-flight batch.
+
+    The dispatch extent is `extent()` — highest live slot + 1 — so keeping
+    allocations low keeps the fused batch at the smallest bucket rung.
+    Freeing a slot is O(1) bookkeeping and moves no data (gather-free
+    retirement)."""
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._free = list(range(capacity))    # kept sorted ascending
+        self._live: set = set()
+
+    def alloc(self) -> int:
+        """Claim and return the lowest free slot (raises when full)."""
+        if not self._free:
+            raise RuntimeError("no free slot")
+        s = self._free.pop(0)
+        self._live.add(s)
+        return s
+
+    def free(self, slot: int) -> None:
+        """Release a live slot back to the pool (no data movement)."""
+        self._live.remove(slot)
+        self._free.append(slot)
+        self._free.sort()
+
+    def live(self) -> Tuple[int, ...]:
+        """The live slot ids, ascending."""
+        return tuple(sorted(self._live))
+
+    def extent(self) -> int:
+        """Highest live slot + 1 (the fused dispatch extent), 0 if idle."""
+        return max(self._live) + 1 if self._live else 0
+
+    @property
+    def n_free(self) -> int:
+        """How many slots are currently free."""
+        return len(self._free)
+
+
+class CIMDecodeLM:
+    """A greedy decode-only LM over a bound CIM program.
+
+    One decode step per row: x = embed[token] + h  ->  CIM network (d in,
+    d out, through BoundProgram.serve with per-row segments/noise ids)
+    ->  h' = y,  logits = y @ embed.T,  next = argmax.  Everything outside
+    the program is strictly per-row, so program-level request isolation
+    (segment quantization + identity-keyed noise) is the whole story:
+    fused rows are bit-identical to solo rows."""
+
+    def __init__(self, bound: BoundProgram, embed: jnp.ndarray):
+        d_in = bound.plan.layers[0].spec.k
+        d_out = bound.plan.layers[-1].spec.n
+        if d_in != d_out:
+            raise ValueError(
+                f"decode LM needs a d->d network, got {d_in}->{d_out}")
+        if embed.ndim != 2 or embed.shape[1] != d_in:
+            raise ValueError(
+                f"embed shape {embed.shape} incompatible with d={d_in}")
+        self.bound = bound
+        self.embed = jnp.asarray(embed, jnp.float32)
+
+    @property
+    def d(self) -> int:
+        """Model width (the CIM network's input/output feature count)."""
+        return self.embed.shape[1]
+
+    @property
+    def vocab(self) -> int:
+        """Vocabulary size (rows of the tied embedding)."""
+        return self.embed.shape[0]
+
+    @classmethod
+    def toy(cls, key: jax.Array, *, d: int = 96, depth: int = 2,
+            vocab: int = 61, r_in: int = 4, r_w: int = 2,
+            cfg: Optional[rt.EngineConfig] = None,
+            buckets: BatchBuckets = DEFAULT_BUCKETS) -> "CIMDecodeLM":
+        """A small self-contained LM (compile + init + bind in one call) —
+        the workhorse of the scheduler property tests and the serving
+        benchmark's arrival-rate sweep."""
+        specs = tuple(mapping.LayerSpec(m=8, k=d, n=d, r_in=r_in, r_w=r_w)
+                      for _ in range(depth))
+        prog = compile_program(specs, cfg or rt.EngineConfig(),
+                               buckets=buckets)
+        params = prog.init_params(jax.random.fold_in(key, 0))
+        embed = 0.25 * jax.random.normal(jax.random.fold_in(key, 1),
+                                         (vocab, d), jnp.float32)
+        return cls(prog.bind(params), embed)
+
+    @staticmethod
+    def noise_id(uid: int, call: int) -> int:
+        """Deterministic noise identity of one request's `call`-th model
+        call (prefill steps count) — what makes a request's thermal draws
+        invariant to slot, batchmates, and dispatch extent.  Both the
+        fused scheduler and decode_sequential derive ids here."""
+        return (uid * NOISE_ID_STRIDE + call) % (1 << 31)
+
+    def step_rows(self, h: jnp.ndarray, tokens: jnp.ndarray,
+                  noise_ids: Optional[jnp.ndarray],
+                  key: Optional[jax.Array]
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """One fused decode step over (R, d) state rows: returns the new
+        state rows and the (R,) greedy next tokens.  Every row is its own
+        quantization segment, so the rows never interact."""
+        rows = h.shape[0]
+        x = self.embed[tokens] + h
+        y = self.bound.serve(
+            x, key, segments=jnp.arange(rows, dtype=jnp.int32),
+            noise_ids=noise_ids)
+        logits = y @ self.embed.T
+        return y, jnp.argmax(logits, axis=-1)
+
+    def prefill(self, request: Request, key: Optional[jax.Array]
+                ) -> Tuple[jnp.ndarray, int, int]:
+        """Consume a request's prompt solo (batch-1 steps at the ladder's
+        smallest rung) and return (state row (d,), first generated token,
+        model calls made).  Runs identically whether the request later
+        decodes fused or sequentially, so admission never enters the
+        equality argument."""
+        h = jnp.zeros((1, self.d), jnp.float32)
+        tok = None
+        for j, t in enumerate(request.prompt):
+            nid = None if key is None else jnp.asarray(
+                [self.noise_id(request.uid, j)], jnp.int32)
+            h, nxt = self.step_rows(
+                h, jnp.asarray([t % self.vocab], jnp.int32), nid, key)
+            tok = int(nxt[0])
+        return h[0], tok, len(request.prompt)
+
+
+def decode_sequential(model: CIMDecodeLM, request: Request,
+                      key: Optional[jax.Array] = None) -> List[int]:
+    """The isolation baseline: decode one request entirely alone (batch-1
+    prefill + batch-1 decode steps), with the identical noise-id schedule
+    the in-flight scheduler would use.  InflightScheduler must reproduce
+    this token stream bit for bit for every request of every schedule —
+    the property tests/test_scheduler.py fuzzes."""
+    h, tok, calls = model.prefill(request, key)
+    tokens = [tok]
+    h = h[None]
+    while len(tokens) < request.max_new_tokens:
+        nid = None if key is None else jnp.asarray(
+            [model.noise_id(request.uid, calls)], jnp.int32)
+        h, nxt = model.step_rows(
+            h, jnp.asarray([tokens[-1]], jnp.int32), nid, key)
+        tokens.append(int(nxt[0]))
+        calls += 1
+    return tokens
+
+
+class InflightScheduler:
+    """The continuous-batching decode loop over a CIMDecodeLM.
+
+    Lifecycle per `step()`: admit pending requests into free slots (solo
+    prefill, one state-row write), run ONE fused decode step over the
+    bucket rung covering the highest live slot, append each live slot's
+    token, retire exhausted requests (slot free, no data movement).
+    Dead slots below the extent ride along as padding — their rows are
+    their own quantization segments, so they cannot perturb live rows.
+
+    A single fixed PRNG key serves every step of every request: per-step
+    variation comes entirely through the (uid, call) noise identities,
+    which is exactly what makes fused noisy decode reproducible by
+    decode_sequential under the same key."""
+
+    def __init__(self, model: CIMDecodeLM, capacity: int = 8,
+                 key: Optional[jax.Array] = None):
+        if model.bound.plan.cfg.noise.enabled and key is None:
+            raise ValueError("noise-enabled model needs a PRNG key")
+        self.model = model
+        self.key = key
+        self.slots = SlotMap(capacity)
+        self.state = jnp.zeros((capacity, model.d), jnp.float32)
+        self.cur_tok = np.zeros((capacity,), np.int64)
+        self.clock = 0
+        self.pending: Deque[RequestRecord] = collections.deque()
+        self.by_slot: Dict[int, RequestRecord] = {}
+        self.finished: Dict[int, RequestRecord] = {}
+        self.extents_seen: set = set()
+        self.decode_steps = 0
+        self.decode_rows = 0
+        self.wall_s = 0.0
+
+    def submit(self, request: Request) -> RequestRecord:
+        """Queue a request (arrival stamped at the current clock); it is
+        admitted at the next step() with a free slot."""
+        rec = RequestRecord(request=request, arrival_step=self.clock)
+        self.pending.append(rec)
+        return rec
+
+    @property
+    def n_inflight(self) -> int:
+        """Live (admitted, unfinished) request count."""
+        return len(self.by_slot)
+
+    @property
+    def idle(self) -> bool:
+        """True when nothing is pending or in flight."""
+        return not self.pending and not self.by_slot
+
+    def _retire(self, rec: RequestRecord) -> None:
+        rec.finished_step = self.clock
+        self.slots.free(rec.slot)
+        del self.by_slot[rec.slot]
+        self.finished[rec.request.uid] = rec
+        # gather-free: the slot's state row stays in place until the next
+        # admission overwrites it
+
+    def _admit(self) -> None:
+        while self.pending and self.slots.n_free:
+            rec = self.pending.popleft()
+            rec.slot = self.slots.alloc()
+            rec.admitted_step = self.clock
+            h, tok, calls = self.model.prefill(rec.request, self.key)
+            rec.calls = calls
+            rec.tokens.append(tok)
+            rec.first_token_step = self.clock
+            self.state = self.state.at[rec.slot].set(h)
+            self.cur_tok[rec.slot] = tok
+            self.by_slot[rec.slot] = rec
+            if rec.done:              # 1-token request: in and out
+                self._retire(rec)
+
+    def step(self) -> bool:
+        """One scheduler tick: admit, fused-decode, retire.  Returns True
+        if a fused decode step ran (False on an idle tick)."""
+        self._admit()
+        extent = self.slots.extent()
+        if extent == 0:
+            self.clock += 1
+            return False
+        bucket = self.model.bound.program.buckets.bucket_for(extent)
+        e = min(bucket, self.slots.capacity)
+        nids = None
+        if self.key is not None:
+            ids = [self.model.noise_id(self.by_slot[s].request.uid,
+                                       self.by_slot[s].calls)
+                   if s in self.by_slot else -1 for s in range(e)]
+            nids = jnp.asarray(ids, jnp.int32)
+        t0 = time.perf_counter()
+        h, nxt = self.model.step_rows(
+            self.state[:e], jnp.asarray(self.cur_tok[:e], jnp.int32),
+            nids, self.key)
+        nxt = np.asarray(jax.device_get(nxt))
+        self.wall_s += time.perf_counter() - t0
+        self.state = self.state.at[:e].set(h)
+        self.extents_seen.add(
+            int(self.model.bound.program.buckets.bucket_for(e)))
+        self.decode_steps += 1
+        self.decode_rows += len(self.by_slot)
+        self.clock += 1
+        for s in self.slots.live():
+            rec = self.by_slot[s]
+            tok = int(nxt[s])
+            rec.tokens.append(tok)
+            rec.calls += 1
+            self.cur_tok[s] = tok
+            if rec.done:
+                self._retire(rec)
+        return True
+
+    def run(self, arrivals: Sequence[Tuple[int, Request]],
+            max_steps: int = 100000) -> Dict[int, List[int]]:
+        """Drive the loop over a timed arrival schedule: each (step,
+        request) is submitted once the clock reaches `step`; runs until
+        everything retires.  Returns {uid: token stream}."""
+        todo = sorted(arrivals, key=lambda a: a[0])
+        i = 0
+        for _ in range(max_steps):
+            while i < len(todo) and todo[i][0] <= self.clock:
+                self.submit(todo[i][1])
+                i += 1
+            if i == len(todo) and self.idle:
+                break
+            self.step()
+        else:
+            raise RuntimeError(f"schedule did not drain in {max_steps} "
+                               "steps")
+        return {uid: list(rec.tokens)
+                for uid, rec in self.finished.items()}
+
+    def metrics(self) -> Dict[str, float]:
+        """Serving metrics over the finished requests: p50/p99 end-to-end
+        latency and time-to-first-token (in scheduler steps), decode
+        throughput (tokens per fused step and per wall-second), and the
+        distinct dispatch bucket rungs seen (the executable-bound
+        check)."""
+        recs = list(self.finished.values())
+        lat = np.asarray([r.finished_step - r.arrival_step for r in recs]
+                         or [0], np.float64)
+        ttft = np.asarray([r.first_token_step - r.arrival_step
+                           for r in recs] or [0], np.float64)
+        toks = sum(len(r.tokens) for r in recs)
+        return {
+            "requests": float(len(recs)),
+            "tokens": float(toks),
+            "steps": float(self.clock),
+            "decode_steps": float(self.decode_steps),
+            "latency_steps_p50": float(np.percentile(lat, 50)),
+            "latency_steps_p99": float(np.percentile(lat, 99)),
+            "ttft_steps_p50": float(np.percentile(ttft, 50)),
+            "ttft_steps_p99": float(np.percentile(ttft, 99)),
+            "tokens_per_decode_step": float(
+                self.decode_rows / max(self.decode_steps, 1)),
+            "decode_wall_s": float(self.wall_s),
+            "tokens_per_s": float(toks / self.wall_s) if self.wall_s
+            else 0.0,
+            "extents_seen": sorted(int(e) for e in self.extents_seen),
+        }

@@ -396,3 +396,77 @@ def test_conv_program_batch_bucket_via_cim_conv2d():
     got = np.asarray(cl.cim_conv2d_apply(p, x, cfg))
     np.testing.assert_array_equal(got, want)
     assert DEFAULT_BUCKETS.bucket_for(3) == 4             # really padded
+
+
+# ---- in-flight bucket-ladder edge cases (ISSUE 6) --------------------------
+
+def _toy_lm(capacity=8):
+    from repro.runtime.scheduler import CIMDecodeLM, InflightScheduler
+    model = CIMDecodeLM.toy(jax.random.PRNGKey(11), d=48, depth=2,
+                            vocab=19, r_in=4, r_w=2)
+    return model, InflightScheduler(model, capacity=capacity)
+
+
+def test_admit_crossing_bucket_boundary_mid_decode():
+    """Admitting past a ladder rung mid-decode (2 live -> 3rd admitted)
+    moves dispatch to the next rung without perturbing the in-flight
+    streams (still bit-exact with solo) and without re-tracing beyond
+    the new rung's warmup."""
+    from repro.runtime.scheduler import Request, decode_sequential
+    model, sched = _toy_lm(capacity=4)
+    reqs = [Request(uid=u, prompt=(u + 1, u + 2), max_new_tokens=6)
+            for u in range(3)]
+    # two arrive at step 0 (bucket 2); the third lands mid-decode,
+    # pushing the extent across the 2 -> 4 rung boundary
+    out = sched.run([(0, reqs[0]), (0, reqs[1]), (3, reqs[2])])
+    for r in reqs:
+        assert out[r.uid] == decode_sequential(model, r)
+    seen = sched.metrics()["extents_seen"]
+    assert 2 in seen and 4 in seen                 # boundary really crossed
+    assert set(seen) <= set(DEFAULT_BUCKETS.ladder(4))
+
+
+def test_retire_to_empty_then_readmit():
+    """Draining to an idle scheduler and admitting a fresh request later
+    reuses slot 0 and the bucket-1 executable; idle ticks advance the
+    clock but run no fused step."""
+    from repro.runtime.scheduler import Request, decode_sequential
+    model, sched = _toy_lm(capacity=2)
+    a = Request(uid=0, prompt=(1,), max_new_tokens=2)
+    b = Request(uid=1, prompt=(2, 3), max_new_tokens=3)
+    out = sched.run([(0, a), (6, b)])              # gap: drains idle first
+    assert out[0] == decode_sequential(model, a)
+    assert out[1] == decode_sequential(model, b)
+    assert sched.finished[1].slot == 0             # slot 0 reused
+    assert sched.finished[0].finished_step < sched.finished[1].admitted_step
+    assert sched.clock > sched.decode_steps        # idle ticks happened
+
+
+def test_executables_bounded_by_ladder_across_fuzzed_schedule():
+    """Across a fuzzed admit/retire schedule the program's executable
+    count stays bounded by the ladder (one per rung per trace signature),
+    not by the number of distinct live extents or schedules."""
+    from repro.runtime.scheduler import InflightScheduler, Request
+    model, sched = _toy_lm(capacity=8)
+    rng = np.random.default_rng(123)
+    arrivals = []
+    for uid in range(12):
+        prompt = tuple(int(t) for t in
+                       rng.integers(0, 19, size=int(rng.integers(1, 4))))
+        arrivals.append((int(rng.integers(0, 10)),
+                         Request(uid=uid, prompt=prompt,
+                                 max_new_tokens=int(rng.integers(1, 6)))))
+    sched.run(arrivals)
+    sched2 = InflightScheduler(model, capacity=8)
+    sched2.run([(s // 2, Request(uid=100 + r.uid, prompt=r.prompt,
+                                 max_new_tokens=r.max_new_tokens))
+                for s, r in arrivals])
+    rungs = set(DEFAULT_BUCKETS.ladder(8))
+    assert set(sched.metrics()["extents_seen"]) <= rungs
+    assert set(sched2.metrics()["extents_seen"]) <= rungs
+    # executable cache: at most one signature per rung for this model's
+    # single (clean, bound, non-reference) serve signature
+    st = model.bound.stats()
+    assert st["executables_compiled"] <= len(rungs)
+    assert st["bucket_misses"] <= len(rungs)
+    assert st["bucket_hits"] > st["bucket_misses"]

@@ -1,0 +1,195 @@
+"""In-flight batching scheduler: per-request numerical isolation (ISSUE 6).
+
+The acceptance bar: continuous batched decode (`InflightScheduler`) must
+produce, for EVERY request of EVERY admit/retire schedule, the token
+stream bit-identical to decoding that request entirely alone
+(`decode_sequential`) — clean and under one fixed noise key, on 1 device
+and on an 8-device fake mesh — with zero re-traces and zero re-plans
+after warmup, and the fused dispatch extents bounded by the BatchBuckets
+ladder.  Schedules (arrival orders, prompt/generation lengths, slot
+capacities) are property-fuzzed via hypothesis (or the deterministic
+hypofallback stand-in when hypothesis is not installed).
+
+Multi-device cases need fake CPU devices:
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m pytest tests/test_scheduler.py
+"""
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from hypofallback import given, settings, st
+
+from repro.core.noise_model import NoiseConfig
+from repro.runtime import engine as rt
+from repro.runtime.scheduler import (CIMDecodeLM, InflightScheduler, Request,
+                                     SlotMap, decode_sequential)
+
+N_DEV = len(jax.devices())
+
+
+def _need(devices: int) -> None:
+    if N_DEV < devices:
+        pytest.skip(f"needs {devices} devices, jax reports {N_DEV} (set "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+KEY = jax.random.PRNGKey(7)
+NOISE_KEY = jax.random.PRNGKey(123)
+_MODELS = {}
+
+
+def _model(noisy: bool = False, devices: int = 0) -> CIMDecodeLM:
+    # module-cached: the compiled program (and its executables) are shared
+    # across every fuzz case, so post-warmup cases pay only dispatch
+    k = (noisy, devices)
+    if k not in _MODELS:
+        cfg = rt.EngineConfig(noise=NoiseConfig()) if noisy \
+            else rt.EngineConfig()
+        if devices:
+            cfg = cfg.replace(
+                sharding=rt.ShardingConfig(devices=devices))
+        _MODELS[k] = CIMDecodeLM.toy(KEY, d=48, depth=2, vocab=23,
+                                     r_in=4, r_w=2, cfg=cfg)
+    return _MODELS[k]
+
+
+_SOLO = {}
+
+
+def _solo(model, req: Request, noisy: bool):
+    # sequential-decode oracle, cached on everything the stream depends on
+    k = (id(model), req.uid, req.prompt, req.max_new_tokens, noisy)
+    if k not in _SOLO:
+        _SOLO[k] = decode_sequential(model, req,
+                                     NOISE_KEY if noisy else None)
+    return _SOLO[k]
+
+
+def _schedule(seed: int, n_req: int, capacity: int):
+    """A deterministic fuzzed schedule: requests with random prompts,
+    generation budgets and arrival times (same seed -> same schedule)."""
+    rng = np.random.default_rng(seed)
+    arrivals = []
+    for uid in range(n_req):
+        prompt = tuple(int(t) for t in
+                       rng.integers(0, 23, size=int(rng.integers(1, 5))))
+        req = Request(uid=uid, prompt=prompt,
+                      max_new_tokens=int(rng.integers(1, 6)))
+        arrivals.append((int(rng.integers(0, 7)), req))
+    return arrivals
+
+
+def _check_schedule(noisy: bool, seed: int, n_req: int, capacity: int,
+                    devices: int = 0):
+    model = _model(noisy, devices)
+    arrivals = _schedule(seed, n_req, capacity)
+    sched = InflightScheduler(model, capacity=capacity,
+                              key=NOISE_KEY if noisy else None)
+    fused = sched.run(arrivals)
+    assert set(fused) == {r.uid for _, r in arrivals}
+    for _, req in arrivals:
+        assert fused[req.uid] == _solo(model, req, noisy), \
+            f"uid={req.uid} diverged from solo decode (seed={seed})"
+    # fused dispatch only ever ran at ladder rungs
+    ladder = set(model.bound.program.buckets.ladder(capacity))
+    assert set(sched.metrics()["extents_seen"]) <= ladder
+
+
+# ---- slot map --------------------------------------------------------------
+
+def test_slotmap_lowest_free_and_extent():
+    s = SlotMap(4)
+    assert [s.alloc() for _ in range(3)] == [0, 1, 2]
+    assert s.extent() == 3 and s.n_free == 1
+    s.free(1)
+    assert s.extent() == 3            # retirement moves no one
+    assert s.alloc() == 1             # lowest free slot is reused first
+    s.free(0), s.free(1), s.free(2)
+    assert s.extent() == 0 and s.live() == ()
+    with pytest.raises(KeyError):
+        s.free(3)                     # not live
+    [s.alloc() for _ in range(4)]
+    with pytest.raises(RuntimeError, match="no free slot"):
+        s.alloc()
+    with pytest.raises(ValueError, match=">= 1"):
+        SlotMap(0)
+
+
+def test_request_validation():
+    with pytest.raises(ValueError, match="non-empty prompt"):
+        Request(uid=0, prompt=(), max_new_tokens=1)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        Request(uid=0, prompt=(1,), max_new_tokens=0)
+    with pytest.raises(ValueError, match="PRNG key"):
+        InflightScheduler(_model(noisy=True), capacity=2)
+
+
+# ---- the isolation property ------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 6), st.sampled_from([2, 3, 4]))
+def test_fused_decode_equals_sequential_clean(seed, n_req, capacity):
+    """Any admit/retire schedule, clean: every request's fused token
+    stream is bit-identical to its solo sequential decode."""
+    _check_schedule(False, seed, n_req, capacity)
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 5), st.sampled_from([2, 4]))
+def test_fused_decode_equals_sequential_noise(seed, n_req, capacity):
+    """Any admit/retire schedule, one fixed noise key: identity-keyed
+    thermal draws keep every fused request bit-identical to solo."""
+    _check_schedule(True, seed, n_req, capacity)
+
+
+@pytest.mark.parametrize("noisy", [False, True])
+def test_fused_decode_equals_sequential_8dev(noisy):
+    """The isolation property holds across the sharded 8-macro mesh."""
+    _need(8)
+    _check_schedule(noisy, seed=42, n_req=5, capacity=4, devices=8)
+
+
+# ---- recompile bound -------------------------------------------------------
+
+def test_zero_postwarmup_recompiles_across_schedules():
+    """After one warmup schedule, new schedules (different arrivals,
+    lengths, retirements) trigger zero re-traces and zero re-plans — the
+    bucket ladder bounds the executable set."""
+    model = _model(False)
+    InflightScheduler(model, capacity=4).run(_schedule(1, 5, 4))  # warmup
+    t0, p0 = rt.TRACE_COUNT["n"], rt.PLAN_COUNT["n"]
+    for seed in (2, 3, 4):
+        sched = InflightScheduler(model, capacity=4)
+        sched.run(_schedule(seed, 6, 4))
+    assert rt.TRACE_COUNT["n"] == t0, "post-warmup retrace"
+    assert rt.PLAN_COUNT["n"] == p0, "post-warmup replan"
+
+
+def test_one_token_request_admit_and_retire_same_step():
+    """A max_new_tokens=1 request retires at admission (prefill already
+    produced its only token) and never joins a fused step."""
+    model = _model(False)
+    req = Request(uid=9, prompt=(3, 1), max_new_tokens=1)
+    sched = InflightScheduler(model, capacity=2)
+    out = sched.run([(0, req)])
+    assert out[9] == _solo(model, req, False)
+    assert len(out[9]) == 1
+    rec = sched.finished[9]
+    assert rec.admitted_step == rec.finished_step
+
+
+def test_queueing_beyond_capacity_preserves_isolation():
+    """More requests than slots: the overflow queues, admits as slots
+    free, and still matches solo decode exactly."""
+    model = _model(False)
+    reqs = [Request(uid=u, prompt=(u % 23, (2 * u) % 23),
+                    max_new_tokens=1 + u % 4) for u in range(7)]
+    sched = InflightScheduler(model, capacity=2)
+    out = sched.run([(0, r) for r in reqs])
+    for r in reqs:
+        assert out[r.uid] == _solo(model, r, False)
+    assert max(sched.metrics()["extents_seen"]) <= 2

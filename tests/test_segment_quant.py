@@ -1,0 +1,231 @@
+"""Segment-wise activation quantization: fused == solo bit-exactness
+(ISSUE 6 satellites).
+
+Three layers of the argument, each tested here:
+  1. `quantize_act(segment_ids=...)` computes per-segment min/max with
+     exact reductions, so a row's segment statistics equal its solo-run
+     statistics bit for bit; the default path is unchanged.
+  2. `BoundProgram.serve_batch(..., isolate=True)` tags each request as
+     its own segment, making every fused request bit-identical to a solo
+     `serve` — across the full precision grid r_in {1,2,4,8} x
+     r_w {1,2,4}, clean and under one fixed noise key.
+  3. The adversarial case that motivates all of it: a batchmate with a
+     100x activation swing.  Legacy fusion (isolate=False) shares the
+     dynamic swing and visibly corrupts the small-swing request — the
+     historical xfail, asserted as an inequality so it flips loudly if
+     fusion semantics drift — while isolate=True is bit-exact.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from hypofallback import given, settings, st
+
+from repro.core.mapping import LayerSpec
+from repro.core.noise_model import NoiseConfig
+from repro.core.quantization import quantize_act
+from repro.runtime import EngineConfig, compile_program, request_noise_ids
+from repro.runtime import engine as rt
+
+KEY = jax.random.PRNGKey(3)
+NOISE_KEY = jax.random.PRNGKey(77)
+
+
+def _bound(r_in, r_w, noisy=False, k=40, n=16, depth=2):
+    cfg = EngineConfig(noise=NoiseConfig()) if noisy else EngineConfig()
+    specs = [LayerSpec(m=8, k=k, n=n, r_in=r_in, r_w=r_w)]
+    for _ in range(depth - 1):
+        specs.append(LayerSpec(m=8, k=n, n=n, r_in=r_in, r_w=r_w))
+    prog = compile_program(specs, cfg)
+    return prog.bind(prog.init_params(KEY))
+
+
+def _requests(sizes, k=40, swing=None, seed=5):
+    rng = np.random.default_rng(seed)
+    xs = []
+    for i, b in enumerate(sizes):
+        x = jnp.asarray(np.abs(rng.normal(size=(b, k))), jnp.float32)
+        if swing is not None:
+            x = x * swing[i]
+        xs.append(x)
+    return xs
+
+
+def _solo(bound, xs, key=None):
+    return [bound.serve(x, key, segments=jnp.zeros(x.shape[0], jnp.int32),
+                        noise_ids=(None if key is None else
+                                   request_noise_ids(i, x.shape[0])))
+            for i, x in enumerate(xs)]
+
+
+# ---- quantize_act ----------------------------------------------------------
+
+def test_segment_stats_equal_solo_stats():
+    """Each segment's scale/zero equals the stats of quantizing that
+    segment's rows alone; identical rows quantize identically with and
+    without segment ids."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(6, 9)), jnp.float32)
+    seg = jnp.asarray([0, 0, 1, 1, 1, 2], jnp.int32)
+    aq = quantize_act(x, 4, segment_ids=seg, num_segments=3)
+    assert aq.scale.shape == (6, 1) and aq.zero.shape == (6, 1)
+    for s, rows in ((0, slice(0, 2)), (1, slice(2, 5)), (2, slice(5, 6))):
+        solo = quantize_act(x[rows], 4)
+        assert np.array_equal(aq.q[rows], solo.q), f"segment {s}"
+        assert np.array_equal(np.asarray(aq.scale[rows]).ravel(),
+                              np.full(rows.stop - rows.start,
+                                      float(solo.scale)))
+        assert np.array_equal(np.asarray(aq.zero[rows]).ravel(),
+                              np.full(rows.stop - rows.start,
+                                      float(solo.zero)))
+
+
+def test_identical_rows_quantize_identically_with_without_segments():
+    """The satellite regression: a batch of identical rows produces the
+    same codes whether quantized globally or per-row-segment."""
+    row = np.linspace(-2.0, 3.0, 12, dtype=np.float32)
+    x = jnp.asarray(np.tile(row, (5, 1)))
+    plain = quantize_act(x, 4)
+    seg = quantize_act(x, 4, segment_ids=jnp.arange(5, dtype=jnp.int32))
+    assert np.array_equal(plain.q, seg.q)
+    assert np.array_equal(np.asarray(seg.scale).ravel(),
+                          np.full(5, float(plain.scale)))
+    assert np.array_equal(np.asarray(seg.zero).ravel(),
+                          np.full(5, float(plain.zero)))
+
+
+def test_default_path_untouched_by_segment_kwargs():
+    """segment_ids=None must be byte-for-byte the legacy global path."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(4, 7)), jnp.float32)
+    a = quantize_act(x, 5)
+    b = quantize_act(x, 5, segment_ids=None, num_segments=None)
+    assert np.array_equal(a.q, b.q)
+    assert float(a.scale) == float(b.scale)
+    assert float(a.zero) == float(b.zero)
+
+
+def test_explicit_scale_zero_override_segments():
+    """Caller-pinned scale/zero win over segment stats (calibrated swing
+    must stay honored)."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(3, 5)), jnp.float32)
+    pinned = quantize_act(x, 4, scale=jnp.float32(0.125),
+                          zero=jnp.float32(-1.0),
+                          segment_ids=jnp.arange(3, dtype=jnp.int32))
+    ref = quantize_act(x, 4, scale=jnp.float32(0.125),
+                       zero=jnp.float32(-1.0))
+    assert np.array_equal(pinned.q, ref.q)
+
+
+# ---- fused serve_batch isolation across the precision grid -----------------
+
+@pytest.mark.parametrize("r_in", [1, 2, 4, 8])
+@pytest.mark.parametrize("r_w", [1, 2, 4])
+def test_isolated_fusion_bit_exact_precision_grid(r_in, r_w):
+    """serve_batch(isolate=True) == per-request solo serve, bitwise, for
+    every (r_in, r_w) the macro supports, at ragged request sizes."""
+    bound = _bound(r_in, r_w)
+    xs = _requests([1, 2, 4, 8], swing=[1.0, 3.0, 0.2, 10.0])
+    fused = bound.serve_batch(xs, isolate=True)
+    solo = _solo(bound, xs)
+    for i, (f, s) in enumerate(zip(fused, solo)):
+        assert np.array_equal(np.asarray(f), np.asarray(s)), \
+            f"request {i} (r_in={r_in}, r_w={r_w})"
+
+
+@pytest.mark.parametrize("r_in,r_w", [(1, 1), (4, 2), (8, 4)])
+def test_isolated_fusion_bit_exact_under_noise(r_in, r_w):
+    """The same bit-exactness under one fixed noise key: thermal draws
+    follow request_noise_ids identities, not batch position."""
+    bound = _bound(r_in, r_w, noisy=True)
+    xs = _requests([2, 1, 3], swing=[1.0, 50.0, 0.5])
+    fused = bound.serve_batch(xs, NOISE_KEY, isolate=True)
+    solo = _solo(bound, xs, NOISE_KEY)
+    for i, (f, s) in enumerate(zip(fused, solo)):
+        assert np.array_equal(np.asarray(f), np.asarray(s)), f"request {i}"
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([1, 2, 3]))
+def test_isolated_fusion_fuzzed_sizes_and_swings(seed, n_extra):
+    """Fuzzed batchmate count / sizes / swings: isolation never depends
+    on who else is in the batch."""
+    rng = np.random.default_rng(seed)
+    bound = _bound(4, 2)
+    sizes = [1] + [int(rng.integers(1, 5)) for _ in range(n_extra)]
+    swing = [float(10.0 ** rng.uniform(-2, 2)) for _ in sizes]
+    xs = _requests(sizes, swing=swing, seed=seed)
+    fused = bound.serve_batch(xs, isolate=True)
+    for f, s in zip(fused, _solo(bound, xs)):
+        assert np.array_equal(np.asarray(f), np.asarray(s))
+
+
+# ---- the adversarial batchmate (xfail turned pass) -------------------------
+
+def test_adversarial_swing_batchmate():
+    """A 100x-swing batchmate: legacy fusion (isolate=False) shares swing
+    statistics and corrupts the small request — the case that failed
+    before segment quantization, asserted as an inequality — while
+    isolate=True serves it bit-identically to solo."""
+    bound = _bound(4, 2)
+    xs = _requests([4, 4], swing=[1.0, 100.0])
+    solo_small = bound.serve(xs[0])
+
+    legacy = bound.serve_batch(xs, isolate=False)
+    assert not np.array_equal(np.asarray(legacy[0]),
+                              np.asarray(solo_small)), \
+        "legacy shared-swing fusion unexpectedly matched solo — the " \
+        "adversarial case this PR fixes should only pass via isolate=True"
+
+    iso = bound.serve_batch(xs, isolate=True)
+    # solo equality under the isolation contract (explicit segment ids)
+    contract = _solo(bound, xs)
+    assert np.array_equal(np.asarray(iso[0]), np.asarray(contract[0]))
+    assert np.array_equal(np.asarray(iso[1]), np.asarray(contract[1]))
+    # ...and the small request's rows equal the plain solo serve too:
+    # segment grouping, not id values, is what matters
+    assert np.array_equal(np.asarray(iso[0]), np.asarray(solo_small))
+
+
+def test_legacy_default_preserved():
+    """isolate defaults to False and stays bit-exact with serving the
+    concatenated batch (the PR 5 fusion contract)."""
+    bound = _bound(4, 2)
+    xs = _requests([2, 3], swing=[1.0, 7.0])
+    fused = bound.serve_batch(xs)
+    whole = bound.serve(jnp.concatenate(xs, axis=0))
+    assert np.array_equal(np.concatenate([np.asarray(f) for f in fused]),
+                          np.asarray(whole))
+
+
+# ---- layer-level isolate_rows ----------------------------------------------
+
+def test_cim_layers_isolate_rows_linear_and_conv():
+    """CIMConfig(isolate_rows=True) makes each leading batch row of the
+    engine-mode layer entry points bit-identical to serving it alone —
+    including a 100x-swing batchmate — for dense (B, S, K) and conv
+    (B, H, W, C) inputs alike."""
+    from repro.core import cim_layers as cl
+    cfg = cl.CIMConfig(mode="engine", r_in=4, r_w=2, isolate_rows=True)
+    p = cl.init_cim_linear(jax.random.PRNGKey(0), 24, 8, cfg=cfg)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (3, 5, 24))
+    x = x.at[1].multiply(100.0)
+    y = cl.cim_linear_apply(p, x, cfg)
+    for i in range(3):
+        solo = cl.cim_linear_apply(p, x[i:i + 1], cfg)
+        assert np.array_equal(np.asarray(y[i]), np.asarray(solo[0])), i
+    legacy = cl.cim_linear_apply(p, x, cfg.replace(isolate_rows=False))
+    assert not np.array_equal(np.asarray(y), np.asarray(legacy))
+
+    pc = cl.init_cim_linear(jax.random.PRNGKey(2), 3 * 3 * 4, 8, cfg=cfg)
+    xc = jax.random.uniform(jax.random.PRNGKey(3), (3, 8, 8, 4))
+    xc = xc.at[2].multiply(50.0)
+    yc = cl.cim_conv2d_apply(pc, xc, cfg)
+    for i in range(3):
+        solo = cl.cim_conv2d_apply(pc, xc[i:i + 1], cfg)
+        assert np.array_equal(np.asarray(yc[i]), np.asarray(solo[0])), i
