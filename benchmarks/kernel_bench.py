@@ -334,6 +334,72 @@ def bench_inflight_sweep(rates=(0.25, 1.0, 4.0), capacity=8, n_req=16,
     return rows
 
 
+def bench_llm_engine(steps=8):
+    """Engine-mode LLM projections (ISSUE 7): per-expert program-cache
+    reuse and engine-vs-fakequant throughput on a small MoE block.
+
+    One moe_block forward routes 3E expert GEMMs (gate/up/down x E
+    experts) through TWO cached programs — the (d->f) program shared by
+    the gate and up banks and the (f->d) down program — so the program
+    cache absorbs (3E-2)/3E of the compiles.  The row reports that hit
+    rate, the per-program serve reuse factor, tokens/s for the engine vs
+    the fakequant reference, and their bit-exactness."""
+    import functools
+
+    from repro.core import mapping
+    from repro.core.cim_layers import CIMConfig, _engine_config
+    from repro.models.moe import init_moe, moe_block
+    from repro.runtime.program import DEFAULT_BUCKETS, compile_program
+
+    e, d, f, top_k, cf = 4, 32, 96, 2, 1.25
+    params = init_moe(jax.random.PRNGKey(0), d, f, e)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, d), jnp.float32)
+    cim_fq = CIMConfig(mode="fakequant", r_in=4, r_w=2)
+    cim_en = cim_fq.replace(mode="engine")
+    run_fq = jax.jit(functools.partial(moe_block, n_experts=e, top_k=top_k,
+                                       capacity_factor=cf, cim=cim_fq))
+    run_en = jax.jit(functools.partial(moe_block, n_experts=e, top_k=top_k,
+                                       capacity_factor=cf, cim=cim_en))
+
+    # replicate the capacity -> bucket -> LayerSpec key moe_block uses so
+    # the stats below read the very programs its expert loop serves
+    t = x.shape[0] * x.shape[1]
+    cap = max(8, min(int(cf * top_k * t / e + 0.5), t * top_k))
+    m = DEFAULT_BUCKETS.bucket_for(cap)
+    progs = [compile_program(
+        [mapping.LayerSpec(m=m, k=ki, n=ni, r_in=cim_en.r_in,
+                           r_w=cim_en.r_w, r_out=cim_en.r_out)],
+        _engine_config(cim_en)) for ki, ni in ((d, f), (f, d))]
+    serves0 = sum(p.stats()["serve_calls"] for p in progs)
+
+    y_en, _ = run_en(params, x)
+    y_en.block_until_ready()
+    y_fq, _ = run_fq(params, x)
+    y_fq.block_until_ready()
+    match = bool(jnp.all(y_en == y_fq))
+    serves = sum(p.stats()["serve_calls"] for p in progs) - serves0
+
+    times = {}
+    for name, fn in (("engine", run_en), ("fakequant", run_fq)):
+        t0 = time.time()
+        for _ in range(steps):
+            fn(params, x)[0].block_until_ready()
+        times[name] = (time.time() - t0) / steps
+    return {
+        "n_experts": e, "d_model": d, "d_ff": f, "top_k": top_k,
+        "tokens_per_call": t,
+        "expert_gemm_serves": serves,
+        "programs_compiled": len(progs),
+        "program_cache_hit_rate": 1.0 - len(progs) / max(serves, 1),
+        "serve_reuse_factor": serves / len(progs),
+        "engine_tokens_per_s": t / times["engine"],
+        "fakequant_tokens_per_s": t / times["fakequant"],
+        "engine_us_per_call": times["engine"] * 1e6,
+        "fakequant_us_per_call": times["fakequant"] * 1e6,
+        "match": match,
+    }
+
+
 def _serving_row(out_json="BENCH_serving.json"):
     """Run bench_serving plus the in-flight arrival-rate sweep, merge both
     into one BENCH_serving.json, print the CSV rows, and return whether
@@ -354,10 +420,17 @@ def _serving_row(out_json="BENCH_serving.json"):
               f"occ{r['tokens_per_decode_step']:.2f}_"
               f"match{r['isolation_match']}")
     row["inflight_sweep"] = sweep
+    llm = bench_llm_engine()
+    print(f"serving_llm_engine,{llm['engine_tokens_per_s']:.0f},"
+          f"fakequant{llm['fakequant_tokens_per_s']:.0f}tok_s_"
+          f"hit{llm['program_cache_hit_rate']:.2f}_"
+          f"reuse{llm['serve_reuse_factor']:.1f}x_match{llm['match']}")
+    row["llm_engine"] = llm
     if out_json:
         with open(out_json, "w") as fh:
             json.dump(row, fh, indent=2)
-    return row["match"] and all(r["isolation_match"] for r in sweep)
+    return (row["match"] and llm["match"]
+            and all(r["isolation_match"] for r in sweep))
 
 
 def main(serving_only=False):

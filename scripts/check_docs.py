@@ -32,6 +32,9 @@ API_MODULES = (
     "repro.runtime.scheduler",
     "repro.core.mapping",
     "repro.core.noise_model",
+    "repro.core.cim_layers",
+    "repro.models.transformer",
+    "repro.models.moe",
     "repro.kernels.cim_mbiw.ops",
 )
 

@@ -43,7 +43,7 @@ from repro.core.cim_macro import cim_macro_forward
 from repro.core.hw import CIMMacroConfig, DEFAULT_MACRO
 from repro.core.noise_model import NO_NOISE, NoiseConfig
 from repro.core.quantization import (ActQuant, adc_quantize, quantize_act,
-                                     quantize_weight)
+                                     quantize_weight, rounding_barrier)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,6 +73,7 @@ class CIMConfig:
                                         # full per-request noise identity)
 
     def replace(self, **kw) -> "CIMConfig":
+        """A copy of this config with the given fields replaced."""
         return dataclasses.replace(self, **kw)
 
 
@@ -97,6 +98,9 @@ def analytic_log_gamma_init(k: int, cfg: CIMConfig,
 def init_cim_linear(key: jax.Array, k: int, n: int,
                     w_init_scale: Optional[float] = None,
                     cfg: Optional[CIMConfig] = None) -> Dict:
+    """Init one CIM linear: fan-in-scaled weights plus the per-output-
+    column ABN gain/offset (gamma seeded analytically when `cfg` is
+    given, else unity)."""
     scale = w_init_scale if w_init_scale is not None else (1.0 / k) ** 0.5
     lg = 0.0 if cfg is None else analytic_log_gamma_init(k, cfg)
     return {
@@ -186,7 +190,10 @@ def _fakequant_forward(params: Dict, x: jnp.ndarray, cfg: CIMConfig,
     w = params["w"]
     k_dim, n = w.shape
     compute_dtype = x.dtype
-    x32 = x.astype(jnp.float32)
+    # entry barrier, mirrored by _engine_forward: both modes quantize the
+    # identical input float and hand the identical output float back to
+    # the (identically-fused) digital glue between projections
+    x32 = rounding_barrier(x.astype(jnp.float32))
 
     aq: ActQuant = quantize_act(x32, cfg.r_in)
     wq = quantize_weight(w, cfg.r_w, axis=0)
@@ -216,6 +223,10 @@ def _fakequant_forward(params: Dict, x: jnp.ndarray, cfg: CIMConfig,
     # exactly the macro-tiling of core/mapping.py (even split_k_slices,
     # matching the runtime engine's schedule).
     row_tiles = -(-k_dim // cfg.macro.n_rows)
+    # the materialized ADC gain: floor/dequant must see the identical
+    # float in every fusion context (see quantization.rounding_barrier)
+    gain = rounding_barrier(gamma * g0)
+    zp = aq.zero / aq.scale
     dp_hat = jnp.zeros(x32.shape[:-1] + (n,), jnp.float32)
     for ks, ksz in mapping.split_k_slices(k_dim, row_tiles):
         ke = ks + ksz
@@ -223,20 +234,24 @@ def _fakequant_forward(params: Dict, x: jnp.ndarray, cfg: CIMConfig,
         # one macro row-tile (|dp| <= 1152*255*15 < 2^24).
         dp = aq.q[..., ks:ke] @ wq.q[ks:ke, :]
         # zero-point: x = q*s + z -> the z*colsum term is per-channel and
-        # constant: absorbed into the ABN offset, exactly what the chip's
-        # signed-to-unsigned conversion + beta block does.
-        zp_dp = (aq.zero / aq.scale) * jnp.sum(wq.q[ks:ke, :], axis=0)
+        # constant: folded into the ABN offset *inside* the ADC floor
+        # (beta_eff = beta + gamma*g0*zp_dp), exactly the chip's
+        # signed-to-unsigned conversion + beta block — and exactly the
+        # engine kernel's fold, which makes this path bit-exact with
+        # mode="engine" under NO_NOISE.
+        zp_dp = zp * jnp.sum(wq.q[ks:ke, :], axis=0)
         if cfg.noise.enabled and key is not None:
             key, k1 = jax.random.split(key)
             # thermal noise referred to dp units through the code gain
             # (single expression shared with the engine noise epilogue)
             dp = dp + nm.thermal_sigma_dp(cfg.noise, cfg.r_out, g0) \
                 * jax.random.normal(k1, dp.shape)
-        code = adc_quantize(dp + zp_dp, r_out=cfg.r_out, gain=gamma * g0,
-                            beta_codes=params["abn_beta"] + offset_codes)
-        dp_hat = dp_hat + (code - mid - params["abn_beta"]) / (gamma * g0)
+        beta_eff = (params["abn_beta"] + offset_codes) + gain * zp_dp
+        code = adc_quantize(dp, r_out=cfg.r_out, gain=gain,
+                            beta_codes=beta_eff)
+        dp_hat = dp_hat + (code - mid - params["abn_beta"]) / gain
 
-    y = dp_hat * aq.scale * wq.scale.reshape(-1)          # (..., N)
+    y = rounding_barrier(dp_hat * aq.scale * wq.scale.reshape(-1))
     return y.astype(compute_dtype)
 
 
@@ -266,7 +281,12 @@ def _engine_forward(params: Dict, x: jnp.ndarray, cfg: CIMConfig,
 
     k_dim, n = params["w"].shape
     lead = x.shape[:-1]
-    x2 = x.reshape((-1, k_dim))
+    # entry/exit barriers delimit the projection from the digital glue
+    # around it: the glue between two projections then forms the same
+    # isolated subgraph in an engine-mode and a fakequant-mode model, so
+    # XLA fuses (and rounds) it identically in both — the stack-level
+    # half of the bit-exactness contract (see _fakequant_forward)
+    x2 = rounding_barrier(x.reshape((-1, k_dim)))
     bucket = DEFAULT_BUCKETS.bucket_for(x2.shape[0])
     spec = mapping.LayerSpec(m=bucket, k=k_dim, n=n, r_in=cfg.r_in,
                              r_w=cfg.r_w, r_out=cfg.r_out)
@@ -277,7 +297,7 @@ def _engine_forward(params: Dict, x: jnp.ndarray, cfg: CIMConfig,
         # S rows each, so fused rows quantize exactly as served alone
         segments = jnp.repeat(jnp.arange(lead[0], dtype=jnp.int32),
                               x2.shape[0] // lead[0])
-    y = prog.serve([params], x2, key, segments=segments)
+    y = rounding_barrier(prog.serve([params], x2, key, segments=segments))
     return y.reshape(lead + (n,)).astype(x.dtype)
 
 

@@ -12,6 +12,7 @@ from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def ste(fwd: jnp.ndarray, grad_of: jnp.ndarray) -> jnp.ndarray:
@@ -25,6 +26,44 @@ def ste_round(x: jnp.ndarray) -> jnp.ndarray:
 
 def ste_floor(x: jnp.ndarray) -> jnp.ndarray:
     return ste(jnp.floor(x), x)
+
+
+@jax.custom_jvp
+def rounding_barrier(x: jnp.ndarray) -> jnp.ndarray:
+    """Identity that pins `x` to its rounded f32 value across fusion.
+
+    XLA is free to algebraically rewrite a value that only feeds other
+    arithmetic (e.g. fold the `gamma * g0` ADC gain into a neighbouring
+    division as a reciprocal multiply), and it makes that choice per
+    fusion context — two jitted graphs of the same quantizer arithmetic
+    can then disagree by 1 ulp.  The fakequant reference and the engine
+    schedule both materialize the ADC gain through this barrier so their
+    floor/dequant chains see the identical float no matter how either
+    graph is fused.  Gradients pass straight through (the barrier is
+    numerically the identity).
+    """
+    return jax.lax.optimization_barrier(x)
+
+
+@rounding_barrier.defjvp
+def _rounding_barrier_jvp(primals, tangents):
+    (x,), (t,) = primals, tangents
+    return rounding_barrier(x), t
+
+
+def _static_reciprocal(levels: float) -> float:
+    """f32-rounded 1/levels as a trace-time Python constant.
+
+    Dividing the dynamic-range reduction by the (static) level count must
+    produce the same float in every graph that quantizes the same tensor:
+    XLA CPU rewrites a static-divisor division into a reciprocal multiply
+    in some fusion contexts but not others, which makes the quantizer
+    scale — and everything dequantized with it — differ by 1 ulp between
+    two jitted graphs of the same arithmetic.  Baking the f32 reciprocal
+    in as a constant multiply keeps eager, jitted, and differently-fused
+    executions bitwise identical.
+    """
+    return float(np.float32(1.0) / np.float32(levels))
 
 
 class ActQuant(NamedTuple):
@@ -58,6 +97,7 @@ def quantize_act(x: jnp.ndarray, r_in: int, *,
     The default (segment_ids=None) path is unchanged.
     """
     levels = 2.0 ** r_in - 1.0
+    inv_levels = _static_reciprocal(levels)
     if segment_ids is not None and (zero is None or scale is None):
         if num_segments is None:
             num_segments = x.shape[0]
@@ -75,12 +115,12 @@ def quantize_act(x: jnp.ndarray, r_in: int, *,
         if scale is None:
             rng = jax.lax.stop_gradient(
                 seg_max[segment_ids].reshape(bshape) - zero)
-            scale = jnp.maximum(rng, eps) / levels
+            scale = jnp.maximum(rng, eps) * inv_levels
     if zero is None:
         zero = jax.lax.stop_gradient(jnp.min(x))
     if scale is None:
         rng = jax.lax.stop_gradient(jnp.max(x) - zero)
-        scale = jnp.maximum(rng, eps) / levels
+        scale = jnp.maximum(rng, eps) * inv_levels
     q = ste_round(jnp.clip((x - zero) / scale, 0.0, levels))
     return ActQuant(q=q, scale=scale, zero=zero)
 
@@ -102,7 +142,7 @@ def quantize_weight(w: jnp.ndarray, r_w: int, *, axis: int = 0,
     full = 2.0 ** r_w - 1.0
     amax = jax.lax.stop_gradient(
         jnp.max(jnp.abs(w), axis=axis, keepdims=True))
-    scale = jnp.maximum(amax, eps) / full
+    scale = jnp.maximum(amax, eps) * _static_reciprocal(full)
     u = jnp.clip(w / scale, -full, full)
     # nearest odd integer with STE: 2*round((u-1)/2)+1
     q = 2.0 * ste_round((u - 1.0) / 2.0) + 1.0
@@ -114,5 +154,8 @@ def adc_quantize(dp: jnp.ndarray, *, r_out: int, gain: jnp.ndarray,
                  beta_codes: jnp.ndarray) -> jnp.ndarray:
     """Eq. (7) in code space with STE: code = floor(mid + gain*dp + beta)."""
     mid = 2.0 ** (r_out - 1)
-    code = ste_floor(mid + gain * dp + beta_codes)
+    # the product is barriered in lockstep with the kernel/ref ADC epilogue
+    # (kernels/cim_mbiw) so no fusion context can FMA-contract the floor
+    # argument differently on either side of the bit-exactness contract
+    code = ste_floor(mid + rounding_barrier(gain * dp) + beta_codes)
     return jnp.clip(code, 0.0, 2.0 ** r_out - 1.0) + 0.5

@@ -78,7 +78,14 @@ def _cim_mbiw_kernel(x_ref, w_ref, gamma_ref, beta_ref, o_ref, acc_ref, *,
         gamma = gamma_ref[...].astype(jnp.float32)      # (1, bn)
         beta = beta_ref[...].astype(jnp.float32)        # (1, bn) or (bm, bn)
         mid = 2.0 ** (r_out - 1)
-        code = jnp.floor(mid + gamma * g0 * dp + beta)
+        # Pin both float intermediates of the floor argument: XLA may
+        # FMA-contract `gain*dp + (mid+beta)` in some fusion contexts (e.g.
+        # inside a scan body) but not others, flipping codes where the
+        # product needs rounding.  ref.py computes the identical barriered
+        # chain — the float-op lockstep contract.
+        gain = jax.lax.optimization_barrier(gamma * g0)
+        t = jax.lax.optimization_barrier(gain * dp)
+        code = jnp.floor(mid + t + beta)
         o_ref[...] = jnp.clip(code, 0.0, 2.0 ** r_out - 1.0
                               ).astype(jnp.int32)
 

@@ -21,6 +21,7 @@ Two oracles:
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import digital_ref
@@ -34,8 +35,11 @@ def _adc_epilogue(dp: jnp.ndarray, gamma: jnp.ndarray, beta: jnp.ndarray,
     # broadcasts identically per element against the (M, N) dp
     beta_b = beta if beta.ndim >= 2 else beta[None, :]
     mid = 2.0 ** (r_out - 1)
-    code = jnp.floor(mid + gamma[None, :] * g0 * dp.astype(jnp.float32)
-                     + beta_b)
+    # barriered in float-op lockstep with the kernel epilogue (kernel.py):
+    # pinning gain and gain*dp forbids context-dependent FMA contraction
+    gain = jax.lax.optimization_barrier(gamma[None, :] * g0)
+    t = jax.lax.optimization_barrier(gain * dp.astype(jnp.float32))
+    code = jnp.floor(mid + t + beta_b)
     return jnp.clip(code, 0.0, 2.0 ** r_out - 1.0).astype(jnp.int32)
 
 

@@ -24,6 +24,8 @@ from repro.models.sharding import BATCH, TP, shard
 # ---------------------------------------------------------------------------
 
 def init_norm(d: int, kind: str) -> Dict:
+    """Parameters for a `kind` norm over a width-`d` feature axis
+    (rmsnorm / layernorm / OLMo-style non-parametric layernorm)."""
     if kind == "rmsnorm":
         return {"scale": jnp.ones((d,), jnp.float32)}
     if kind == "layernorm":
@@ -36,6 +38,8 @@ def init_norm(d: int, kind: str) -> Dict:
 
 def apply_norm(params: Dict, x: jnp.ndarray, kind: str,
                eps: float = 1e-6) -> jnp.ndarray:
+    """Normalize the trailing feature axis in float32, cast back to
+    x.dtype.  `kind` matches init_norm."""
     xf = x.astype(jnp.float32)
     if kind == "rmsnorm":
         y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
@@ -56,6 +60,7 @@ def apply_norm(params: Dict, x: jnp.ndarray, kind: str,
 # ---------------------------------------------------------------------------
 
 def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse rotary frequencies, shape (head_dim // 2,)."""
     return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
 
 
@@ -172,6 +177,8 @@ def flash_attention(q, k, v, *, q_pos, k_pos, causal, window=0,
 
 @dataclasses.dataclass(frozen=True)
 class AttnConfig:
+    """Static attention-block hyperparameters (GQA shape, RoPE, window,
+    flash threshold, kernel implementation)."""
     d_model: int
     n_heads: int
     n_kv_heads: int
@@ -187,6 +194,7 @@ class AttnConfig:
 
 def init_attention(key: jax.Array, cfg: AttnConfig,
                    cim: Optional[CIMConfig] = None) -> Dict:
+    """Q/K/V/O projection params (CIM-linear layout) + optional biases."""
     ks = jax.random.split(key, 4)
     d, h, g, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     p = {
@@ -216,21 +224,29 @@ def attention_block(params: Dict, x: jnp.ndarray, cfg: AttnConfig,
                     kv_repeat_to: int = 0,
                     x_kv: Optional[jnp.ndarray] = None,
                     cross_kv: Optional[Dict] = None,
-                    kv_positions: Optional[jnp.ndarray] = None
+                    kv_positions: Optional[jnp.ndarray] = None,
+                    key: Optional[jax.Array] = None
                     ) -> Tuple[jnp.ndarray, Optional[Dict]]:
     """Self- (x_kv None) or cross- (x_kv given) attention with optional
     KV cache for decode.  `cross_kv` supplies precomputed cross-attention
     K/V ({"k","v"}) during cached decode.  Returns (out, updated_cache).
+
+    `key` seeds the CIM noise model of the four projections (a distinct
+    fold per projection); None keeps them clean/deterministic.
 
     The self-attention decode cache is a *ring buffer* of length L: writes
     land at idx % L, so sliding-window layers keep only their window."""
     b, s, d = x.shape
     h, g, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     src = x if x_kv is None else x_kv
+    kq = kk_key = kv_key = ko = None
+    if key is not None:
+        kq, kk_key, kv_key, ko = (jax.random.fold_in(key, i)
+                                  for i in range(4))
 
     use_pallas = (cfg.impl == "pallas" and s > 1 and cache is None
                   and cross_kv is None)
-    q = cim_linear_apply(params["wq"], x, cim)
+    q = cim_linear_apply(params["wq"], x, cim, key=kq)
     if "bq" in params:
         q = q + params["bq"]
     q = q.reshape(b, s, h, hd)
@@ -245,8 +261,8 @@ def attention_block(params: Dict, x: jnp.ndarray, cfg: AttnConfig,
         k_pos = jnp.arange(k.shape[1])
         new_cache = cross_kv
     else:
-        kk = cim_linear_apply(params["wk"], src, cim)
-        vv = cim_linear_apply(params["wv"], src, cim)
+        kk = cim_linear_apply(params["wk"], src, cim, key=kk_key)
+        vv = cim_linear_apply(params["wv"], src, cim, key=kv_key)
         if "bk" in params:
             kk, vv = kk + params["bk"], vv + params["bv"]
         k = kk.reshape(b, src.shape[1], g, hd)
@@ -338,7 +354,7 @@ def attention_block(params: Dict, x: jnp.ndarray, cfg: AttnConfig,
                               causal=cfg.causal and x_kv is None and s > 1,
                               window=cfg.window if x_kv is None else 0)
     out = out.reshape(b, s, h * hd)
-    y = cim_linear_apply(params["wo"], out, cim)
+    y = cim_linear_apply(params["wo"], out, cim, key=ko)
     return shard(y, BATCH, None, None), new_cache
 
 
@@ -396,8 +412,29 @@ def free_slot_kv(cache: Dict, slot) -> Dict:
 # MLP
 # ---------------------------------------------------------------------------
 
+_ACTIVATIONS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu2": lambda v: jnp.square(jax.nn.relu(v)),
+}
+
+
+def activation_fn(name: str):
+    """The single source of the MLP/MoE activation table (silu / gelu /
+    relu2).  Every function preserves the input dtype — callers apply it
+    in whatever compute dtype the projections produced.  Raises ValueError
+    on an unknown name rather than serving an un-activated hidden state."""
+    try:
+        return _ACTIVATIONS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown activation {name!r}; expected one of "
+            f"{sorted(_ACTIVATIONS)}") from None
+
+
 def init_mlp(key: jax.Array, d: int, f: int, gated: bool,
              cim: Optional[CIMConfig] = None) -> Dict:
+    """Up/down (+ optional gate) projection params for a d->f->d MLP."""
     ks = jax.random.split(key, 3)
     p = {"w_up": init_cim_linear(ks[0], d, f, cfg=cim),
          "w_down": init_cim_linear(ks[1], f, d, cfg=cim)}
@@ -407,16 +444,22 @@ def init_mlp(key: jax.Array, d: int, f: int, gated: bool,
 
 
 def mlp_block(params: Dict, x: jnp.ndarray, cim: CIMConfig,
-              act: str = "silu") -> jnp.ndarray:
-    up = cim_linear_apply(params["w_up"], x, cim)
+              act: str = "silu",
+              key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """(Gated) MLP with every projection through the CIM path.  `key`
+    seeds the projections' noise model (distinct fold per projection)."""
+    k_up = k_gate = k_down = None
+    if key is not None:
+        k_up, k_gate, k_down = (jax.random.fold_in(key, i)
+                                for i in range(3))
+    up = cim_linear_apply(params["w_up"], x, cim, key=k_up)
     up = shard(up, BATCH, None, TP)
-    fn = {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
-          "relu2": lambda v: jnp.square(jax.nn.relu(v))}[act]
+    fn = activation_fn(act)
     if "w_gate" in params:
-        gate = cim_linear_apply(params["w_gate"], x, cim)
+        gate = cim_linear_apply(params["w_gate"], x, cim, key=k_gate)
         gate = shard(gate, BATCH, None, TP)
         hidden = fn(gate) * up
     else:
         hidden = fn(up)
-    y = cim_linear_apply(params["w_down"], hidden, cim)
+    y = cim_linear_apply(params["w_down"], hidden, cim, key=k_down)
     return shard(y, BATCH, None, None)

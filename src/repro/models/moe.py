@@ -12,6 +12,16 @@ Per-expert ABN: the CIM fakequant path quantizes each expert's weights with
 per-(expert, channel) scales and applies per-expert gamma/beta — the paper's
 distribution-aware reshaping argument is strongest exactly here, since every
 expert sees a different token distribution.
+
+CIM modes: "fakequant" runs the batched-einsum reference with *per-expert*
+activation statistics (segment quantization over the expert axis) and the
+zero-point folded inside the ADC floor; "engine" routes every expert's
+capacity-grouped GEMM through one compiled CIM program per (fan_in, fan_out,
+precision) shape — the experts are the plan-once/serve-many case (same
+LayerSpec, E different binds), so E experts hit a single program-cache
+entry.  The two paths are bit-exact in clean mode.  Unknown modes raise
+ValueError — an engine-mode serving config can never silently fall back to
+an unquantized float einsum.
 """
 from __future__ import annotations
 
@@ -22,14 +32,21 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.cim_layers import CIMConfig
-from repro.core.quantization import adc_quantize, quantize_act, quantize_weight
+from repro.core import abn as abn_lib
+from repro.core import mapping
+from repro.core import noise_model as nm
+from repro.core.cim_layers import CIMConfig, _code_gain, _engine_config
+from repro.core.quantization import (adc_quantize, quantize_act,
+                                     quantize_weight, rounding_barrier)
 from repro.jax_compat import get_abstract_mesh, shard_map
+from repro.models.common import activation_fn
 from repro.models.sharding import BATCH, TP, mesh_spec, shard
 
 
 def init_moe(key: jax.Array, d: int, f: int, n_experts: int,
              cim: Optional[CIMConfig] = None) -> Dict:
+    """Router + expert bank params: w_gate/w_up (E, D, F), w_down (E, F, D),
+    per-expert ABN gamma/beta on the down-projection's D outputs."""
     ks = jax.random.split(key, 4)
     s_in = (1.0 / d) ** 0.5
     s_out = (1.0 / f) ** 0.5
@@ -51,38 +68,129 @@ def _get_expert_w(params: Dict, name: str, dtype) -> jnp.ndarray:
     return params[name]
 
 
-def _expert_gemm(x_g: jnp.ndarray, w: jnp.ndarray, cim: CIMConfig,
-                 abn: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None
-                 ) -> jnp.ndarray:
-    """(E, C, D) x (E, D, F) -> (E, C, F), optionally CIM-fakequantized with
-    per-expert weight scales and (on the down-proj) per-expert ABN."""
-    if cim.mode != "fakequant":
-        return jnp.einsum("ecd,edf->ecf", x_g, w.astype(x_g.dtype))
-    aq = quantize_act(x_g.astype(jnp.float32), cim.r_in)
-    wq = quantize_weight(w, cim.r_w, axis=1)          # scale (E, 1, F)
-    dp = jnp.einsum("ecd,edf->ecf", aq.q, wq.q)
-    zp_dp = (aq.zero / aq.scale) * jnp.sum(wq.q, axis=1, keepdims=True)
-    # code gain for one macro row-tile of the expert's fan-in
-    from repro.core.cim_layers import _code_gain
-    g0 = _code_gain(cim, w.shape[1])
+def _expert_abn(abn: Optional[Tuple[jnp.ndarray, jnp.ndarray]],
+                e: int, f: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-expert ABN params, defaulting to log2(gamma)=4 / beta=0 for the
+    projections that carry no learned reshaping (gate/up)."""
     if abn is not None:
-        gamma = jnp.clip(2.0 ** abn[0], 2.0 ** -4, cim.max_gamma)[:, None, :]
-        beta = abn[1][:, None, :]
-    else:
-        gamma, beta = jnp.float32(16.0), jnp.float32(0.0)
-    code = adc_quantize(dp + zp_dp, r_out=cim.r_out, gain=gamma * g0,
-                        beta_codes=beta)
+        return abn[0], abn[1]
+    return (jnp.full((e, f), 4.0, jnp.float32),
+            jnp.zeros((e, f), jnp.float32))
+
+
+def _expert_gemm_engine(x_g: jnp.ndarray, w: jnp.ndarray, cim: CIMConfig,
+                        abn: Optional[Tuple[jnp.ndarray, jnp.ndarray]],
+                        key: Optional[jax.Array],
+                        reference: bool) -> jnp.ndarray:
+    """(E, C, D) x (E, D, F) through ONE compiled CIM program, E binds.
+
+    Every expert shares the same LayerSpec (capacity bucket, fan-in,
+    fan-out, precision) so compile_program returns a single cached
+    program; the per-expert weights/ABN differ only in the bind — the
+    plan-once/serve-many contract, visible as >= E serve calls per
+    program in CIMProgram.stats()."""
+    from repro.runtime.program import DEFAULT_BUCKETS, compile_program
+
+    e, c, d = x_g.shape
+    f = w.shape[2]
+    # entry/exit barriers: match _expert_gemm's fakequant branch so the
+    # digital glue around the expert GEMMs (activation, gating, scatter)
+    # is the same isolated subgraph in both modes (rounding_barrier)
+    x_g = rounding_barrier(x_g)
+    bucket = DEFAULT_BUCKETS.bucket_for(c)
+    spec = mapping.LayerSpec(m=bucket, k=d, n=f, r_in=cim.r_in,
+                             r_w=cim.r_w, r_out=cim.r_out)
+    prog = compile_program([spec], _engine_config(cim))
+    lg, bt = _expert_abn(abn, e, f)
+    outs = []
+    for ei in range(e):
+        p = {"w": w[ei].astype(jnp.float32),
+             "abn_log_gamma": lg[ei], "abn_beta": bt[ei]}
+        sub = None if key is None else jax.random.fold_in(key, ei)
+        outs.append(prog.serve([p], x_g[ei].astype(jnp.float32), sub,
+                               reference=reference))
+    return rounding_barrier(jnp.stack(outs)).astype(x_g.dtype)
+
+
+def _expert_gemm(x_g: jnp.ndarray, w: jnp.ndarray, cim: CIMConfig,
+                 abn: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+                 *, key: Optional[jax.Array] = None,
+                 reference: bool = False) -> jnp.ndarray:
+    """(E, C, D) x (E, D, F) -> (E, C, F) through the configured CIM path.
+
+    fakequant: per-expert activation statistics (segment quantization over
+    the expert axis), per-(expert, channel) weight scales, per-expert ABN,
+    and the zero-point folded into the ABN offset *inside* the per-row-tile
+    ADC floor — the same arithmetic as core.cim_layers._fakequant_forward,
+    so it is bit-exact with mode="engine" in clean mode.  engine: compiled
+    per-expert programs (_expert_gemm_engine).  bypass/deploy: plain
+    einsum.  Anything else raises ValueError."""
+    if cim.mode in ("bypass", "deploy"):
+        return jnp.einsum("ecd,edf->ecf", x_g, w.astype(x_g.dtype))
+    if cim.mode == "engine":
+        return _expert_gemm_engine(x_g, w, cim, abn, key, reference)
+    if cim.mode != "fakequant":
+        raise ValueError(
+            f"moe expert GEMM does not support CIM mode {cim.mode!r}; "
+            "use fakequant, engine, bypass or deploy")
+    e, _, _ = x_g.shape
+    fan_in, fan_out = w.shape[1], w.shape[2]
+    # entry barrier mirroring _expert_gemm_engine (rounding_barrier)
+    x_g = rounding_barrier(x_g)
+    aq = quantize_act(x_g.astype(jnp.float32), cim.r_in,
+                      segment_ids=jnp.arange(e, dtype=jnp.int32),
+                      num_segments=e)                 # per-expert stats
+    wq = quantize_weight(w, cim.r_w, axis=1)          # scale (E, 1, F)
+    lg, bt = _expert_abn(abn, e, fan_out)
+    gamma = abn_lib.abn_gamma(
+        abn_lib.ABNParams(lg, bt), gamma_bits=cim.gamma_bits,
+        max_gamma=cim.max_gamma)[:, None, :]          # (E, 1, F)
+    beta = bt[:, None, :]
+    g0 = _code_gain(cim, fan_in)
     mid = 2.0 ** (cim.r_out - 1)
-    dp_hat = (code - mid - beta) / (gamma * g0)
-    return (dp_hat * aq.scale * wq.scale).astype(x_g.dtype)
+
+    if cim.noise.enabled and key is not None:
+        key, k2 = jax.random.split(key)
+        res_v = jax.vmap(
+            lambda kk: nm.sample_column_residues(kk, fan_out, cim.r_w,
+                                                 cim.noise, cim.macro)
+        )(jax.random.split(k2, e))                    # (E, F) per expert
+        lsb_v = cim.macro.alpha_adc() * cim.macro.vddh \
+            / 2.0 ** (cim.r_out - 1)
+        offset_codes = gamma * res_v[:, None, :] / lsb_v
+    else:
+        offset_codes = 0.0
+
+    # K > n_rows splits into row tiles with per-tile ADC conversions,
+    # mirroring _fakequant_forward / the engine schedule exactly.
+    row_tiles = -(-fan_in // cim.macro.n_rows)
+    # materialized ADC gain (quantization.rounding_barrier): the floor /
+    # dequant chain must see the identical float in every fusion context
+    gain = rounding_barrier(gamma * g0)
+    zp = aq.zero / aq.scale                           # (E, 1, 1)
+    dp_hat = jnp.zeros(x_g.shape[:-1] + (fan_out,), jnp.float32)
+    for ks, ksz in mapping.split_k_slices(fan_in, row_tiles):
+        ke = ks + ksz
+        dp = jnp.einsum("ecd,edf->ecf", aq.q[..., ks:ke], wq.q[:, ks:ke, :])
+        zp_dp = zp * jnp.sum(wq.q[:, ks:ke, :], axis=1, keepdims=True)
+        if cim.noise.enabled and key is not None:
+            key, k1 = jax.random.split(key)
+            dp = dp + nm.thermal_sigma_dp(cim.noise, cim.r_out, g0) \
+                * jax.random.normal(k1, dp.shape)
+        beta_eff = (beta + offset_codes) + gain * zp_dp
+        code = adc_quantize(dp, r_out=cim.r_out, gain=gain,
+                            beta_codes=beta_eff)
+        dp_hat = dp_hat + (code - mid - beta) / gain
+    return rounding_barrier(dp_hat * aq.scale * wq.scale).astype(x_g.dtype)
 
 
 def _moe_local(x: jnp.ndarray, probs: jnp.ndarray, top_idx: jnp.ndarray,
                w_gate: jnp.ndarray, w_up: jnp.ndarray, w_down: jnp.ndarray,
-               abn_lg: jnp.ndarray, abn_b: jnp.ndarray, *,
+               abn_lg: jnp.ndarray, abn_b: jnp.ndarray,
+               key: Optional[jax.Array] = None, *,
                n_experts: int, top_k: int, capacity_factor: float,
-               cim: CIMConfig, act: str, psum_axis: Optional[str]
-               ) -> jnp.ndarray:
+               cim: CIMConfig, act: str, psum_axis: Optional[str],
+               reference: bool = False) -> jnp.ndarray:
     """Local (per data shard) dropped-token expert execution.
 
     x (t, D); probs/top_idx (t, k).  Returns (t, D)."""
@@ -110,15 +218,19 @@ def _moe_local(x: jnp.ndarray, probs: jnp.ndarray, top_idx: jnp.ndarray,
     tok_grid = tok_grid[:-1].reshape(n_experts, cap)
     gate_grid = gate_grid[:-1].reshape(n_experts, cap)
 
+    k_up = k_gate = k_down = None
+    if key is not None:
+        k_up, k_gate, k_down = (jax.random.fold_in(key, i) for i in range(3))
     x_g = x[tok_grid]                                  # (E, C, D)
-    h_up = _expert_gemm(x_g, w_up, cim)
-    fn = {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
-          "relu2": lambda v: jnp.square(jax.nn.relu(v))}[act]
+    h_up = _expert_gemm(x_g, w_up, cim, key=k_up, reference=reference)
+    fn = activation_fn(act)
     if w_gate is not None:
-        h = fn(_expert_gemm(x_g, w_gate, cim)) * h_up
+        h = fn(_expert_gemm(x_g, w_gate, cim, key=k_gate,
+                            reference=reference)) * h_up
     else:
         h = fn(h_up)
-    y_g = _expert_gemm(h, w_down, cim, abn=(abn_lg, abn_b))  # (E, C, D)
+    y_g = _expert_gemm(h, w_down, cim, abn=(abn_lg, abn_b), key=k_down,
+                       reference=reference)            # (E, C, D)
     y_g = y_g * gate_grid[..., None].astype(y_g.dtype)
 
     out = jnp.zeros((t, d), y_g.dtype).at[tok_grid.reshape(-1)].add(
@@ -129,9 +241,17 @@ def _moe_local(x: jnp.ndarray, probs: jnp.ndarray, top_idx: jnp.ndarray,
 
 
 def moe_block(params: Dict, x: jnp.ndarray, *, n_experts: int, top_k: int,
-              capacity_factor: float, cim: CIMConfig, act: str = "silu"
+              capacity_factor: float, cim: CIMConfig, act: str = "silu",
+              key: Optional[jax.Array] = None, reference: bool = False
               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """x (B, S, D) -> (out (B, S, D), aux load-balance loss scalar)."""
+    """x (B, S, D) -> (out (B, S, D), aux load-balance loss scalar).
+
+    `key` seeds the experts' CIM noise model (a distinct fold per
+    projection bank and per expert).  `reference` asks the engine path to
+    run its interpret-mode oracle instead of the Pallas kernel (noise-key
+    parity tests).  mode="engine" always executes the *local* expert path:
+    the compiled programs own their sharding (cim.sharding), so the outer
+    data/tensor shard_map is skipped rather than nested."""
     b, s, d = x.shape
     xf = x.reshape(b * s, d)
 
@@ -147,14 +267,15 @@ def moe_block(params: Dict, x: jnp.ndarray, *, n_experts: int, top_k: int,
 
     mesh = get_abstract_mesh()
     kwargs = dict(n_experts=n_experts, top_k=top_k,
-                  capacity_factor=capacity_factor, cim=cim, act=act)
+                  capacity_factor=capacity_factor, cim=cim, act=act,
+                  reference=reference)
     w_gate = _get_expert_w(params, "w_gate", x.dtype)
     w_up = _get_expert_w(params, "w_up", x.dtype)
     w_down = _get_expert_w(params, "w_down", x.dtype)
-    if mesh.empty:
+    if mesh.empty or cim.mode == "engine":
         out = _moe_local(xf, top_p, top_idx, w_gate, w_up,
                          w_down, params["abn_log_gamma"],
-                         params["abn_beta"], psum_axis=None, **kwargs)
+                         params["abn_beta"], key, psum_axis=None, **kwargs)
     else:
         names = set(mesh.axis_names)
         batch_axes = tuple(a for a in BATCH if a in names)
@@ -166,12 +287,25 @@ def moe_block(params: Dict, x: jnp.ndarray, *, n_experts: int, top_k: int,
         tp = TP if TP in names else None
         body = functools.partial(_moe_local, psum_axis=tp, **kwargs)
         tok_spec = P(batch_axes if batch_axes else None, None)
-        out = shard_map(
-            body, mesh=mesh,
-            in_specs=(tok_spec, tok_spec, tok_spec,
-                      P(None, None, tp), P(None, None, tp), P(None, tp, None),
-                      P(None, None), P(None, None)),
-            out_specs=tok_spec,
-        )(xf, top_p, top_idx, w_gate, w_up,
-          w_down, params["abn_log_gamma"], params["abn_beta"])
+        if key is None:
+            def body_nokey(xs, ps, ti, wg, wu, wd, lg, bt):
+                return body(xs, ps, ti, wg, wu, wd, lg, bt, None)
+            out = shard_map(
+                body_nokey, mesh=mesh,
+                in_specs=(tok_spec, tok_spec, tok_spec,
+                          P(None, None, tp), P(None, None, tp),
+                          P(None, tp, None), P(None, None), P(None, None)),
+                out_specs=tok_spec,
+            )(xf, top_p, top_idx, w_gate, w_up,
+              w_down, params["abn_log_gamma"], params["abn_beta"])
+        else:
+            out = shard_map(
+                body, mesh=mesh,
+                in_specs=(tok_spec, tok_spec, tok_spec,
+                          P(None, None, tp), P(None, None, tp),
+                          P(None, tp, None), P(None, None), P(None, None),
+                          P(None)),
+                out_specs=tok_spec,
+            )(xf, top_p, top_idx, w_gate, w_up,
+              w_down, params["abn_log_gamma"], params["abn_beta"], key)
     return out.reshape(b, s, d), aux

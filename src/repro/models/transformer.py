@@ -122,6 +122,8 @@ def _init_xdec_layer(cfg: ModelConfig, key: jax.Array) -> Dict:
 
 
 def init_params(cfg: ModelConfig, key: jax.Array) -> Dict:
+    """Init the full parameter pytree for `cfg` (embeddings, every block
+    of the family's layer stack, final norm, untied lm_head if any)."""
     keys = jax.random.split(key, 8)
     d = cfg.d_model
     emb_scale = d ** -0.5
@@ -176,27 +178,38 @@ def init_params(cfg: ModelConfig, key: jax.Array) -> Dict:
 # ---------------------------------------------------------------------------
 
 def _decoder_layer(cfg: ModelConfig, p: Dict, x: jnp.ndarray, *,
-                   positions: jnp.ndarray, cache: Optional[Dict]
+                   positions: jnp.ndarray, cache: Optional[Dict],
+                   key: Optional[jax.Array] = None
                    ) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
+    """One pre-norm decoder layer (attention + MLP-or-MoE FFN); `key`
+    seeds the CIM noise model of the layer's projections (distinct folds
+    for the attention and FFN banks)."""
     cim = cfg.cim
+    k_attn = k_ffn = None
+    if key is not None:
+        k_attn, k_ffn = jax.random.fold_in(key, 0), jax.random.fold_in(key, 1)
     h = cm.apply_norm(p["ln1"], x, cfg.norm_type)
     attn_out, new_kv = cm.attention_block(
         p["attn"], h, _attn_cfg(cfg, window=cfg.sliding_window), cim,
-        positions=positions, cache=None if cache is None else cache["kv"])
+        positions=positions, cache=None if cache is None else cache["kv"],
+        key=k_attn)
     x = x + attn_out
     h = cm.apply_norm(p["ln2"], x, cfg.norm_type)
     if cfg.family == "moe":
         ffn_out, aux = moe_block(
             p["moe"], h, n_experts=cfg.moe_experts, top_k=cfg.moe_top_k,
-            capacity_factor=cfg.moe_capacity_factor, cim=cim, act=cfg.mlp_act)
+            capacity_factor=cfg.moe_capacity_factor, cim=cim, act=cfg.mlp_act,
+            key=k_ffn)
     else:
-        ffn_out, aux = cm.mlp_block(p["mlp"], h, cim, cfg.mlp_act), 0.0
+        ffn_out = cm.mlp_block(p["mlp"], h, cim, cfg.mlp_act, key=k_ffn)
+        aux = 0.0
     x = x + ffn_out
     new_cache = None if cache is None else {"kv": new_kv}
     return x, new_cache, jnp.asarray(aux, jnp.float32)
 
 
-def _ssm_layer(cfg: ModelConfig, p: Dict, x, *, positions, cache):
+def _ssm_layer(cfg: ModelConfig, p: Dict, x, *, positions, cache,
+               key: Optional[jax.Array] = None):
     h = cm.apply_norm(p["ln1"], x, cfg.norm_type)
     out, new_state = m2.mamba2_layer(
         p["mixer"], h, cfg, cfg.cim,
@@ -253,15 +266,29 @@ def _scan_stack(layer_fn, stacked_params, x, cache, remat: bool,
     return x, new_cache, aux
 
 
-def _decoder_stack(cfg: ModelConfig, params, x, positions, cache):
+def _decoder_stack(cfg: ModelConfig, params, x, positions, cache, key=None):
     layer = {"dense": _decoder_layer, "moe": _decoder_layer,
              "vlm": _decoder_layer, "ssm": _ssm_layer}[cfg.family]
 
-    def f(p, x, c):
-        return layer(cfg, p, x, positions=positions, cache=c)
+    if key is None:
+        def f(p, x, c):
+            return layer(cfg, p, x, positions=positions, cache=c)
 
-    return _scan_stack(f, params["layers"], x, cache, cfg.remat,
-                       cfg.remat_policy)
+        return _scan_stack(f, params["layers"], x, cache, cfg.remat,
+                           cfg.remat_policy)
+
+    # noise-keyed run: fold a distinct key per layer index (the scan body
+    # sees a traced index, so one trace covers every layer)
+    n_layers = jax.tree_util.tree_leaves(params["layers"])[0].shape[0]
+
+    def f_keyed(px, x, c):
+        p, idx = px
+        return layer(cfg, p, x, positions=positions, cache=c,
+                     key=jax.random.fold_in(key, idx))
+
+    return _scan_stack(f_keyed, (params["layers"],
+                                 jnp.arange(n_layers, dtype=jnp.int32)),
+                       x, cache, cfg.remat, cfg.remat_policy)
 
 
 def _hybrid_stack(cfg: ModelConfig, params, x, positions, cache):
@@ -296,12 +323,16 @@ def _hybrid_stack(cfg: ModelConfig, params, x, positions, cache):
 # ---------------------------------------------------------------------------
 
 def embed_tokens(cfg: ModelConfig, params, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Token-id lookup into the (sharded) embedding table, cast to the
+    model compute dtype."""
     emb = shard(params["embed"], TP, None)
     x = emb[tokens].astype(_dtype(cfg))
     return shard(x, BATCH, None, None)
 
 
 def lm_logits(cfg: ModelConfig, params, x: jnp.ndarray) -> jnp.ndarray:
+    """Final norm + LM head (tied embedding, bypass-mode lm_head, or
+    deploy-quantized serving weights — always digital, see DESIGN.md)."""
     x = cm.apply_norm(params["final_norm"], x, cfg.norm_type)
     if cfg.tie_embeddings:
         logits = x @ params["embed"].T.astype(x.dtype)
@@ -319,15 +350,20 @@ def forward(cfg: ModelConfig, params, tokens: jnp.ndarray, *,
             positions: Optional[jnp.ndarray] = None,
             cache: Optional[Dict] = None,
             prefix_embeds: Optional[jnp.ndarray] = None,
-            encoder_frames: Optional[jnp.ndarray] = None
+            encoder_frames: Optional[jnp.ndarray] = None,
+            key: Optional[jax.Array] = None
             ) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
     """Returns (logits, new_cache, aux_loss).
 
     tokens (B, S); positions default arange (no cache) / cache index offset.
     vlm: prefix_embeds (B, P, D) prepended.  audio: encoder_frames (B,T,D)
     run through the encoder (train/prefill) — for cached decode the cross
-    KV lives in the cache instead.
+    KV lives in the cache instead.  `key` seeds the CIM noise model of the
+    projections (decoder-stack families only; one fold per layer).
     """
+    if key is not None and cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(
+            f"noise-keyed forward is not wired for family {cfg.family!r}")
     b, s = tokens.shape
     x = embed_tokens(cfg, params, tokens)
 
@@ -351,7 +387,7 @@ def forward(cfg: ModelConfig, params, tokens: jnp.ndarray, *,
         logits = lm_logits(cfg, params, x)
     else:
         x, new_inner, aux = _decoder_stack(cfg, params, x, positions,
-                                           inner_cache)
+                                           inner_cache, key=key)
         logits = lm_logits(cfg, params, x)
     new_cache = (None if cache is None
                  else {"pos": cache["pos"] + s, "layers": new_inner})

@@ -8,9 +8,11 @@ from repro.runtime.engine import (CIMInferenceEngine, EngineConfig,  # noqa
                                   im2col_patches, plan_layer, plan_network,
                                   run_network, run_network_reference)
 from repro.runtime.program import (BatchBuckets, BoundProgram,  # noqa
-                                   CIMProgram, clear_program_cache,
+                                   CIMProgram, SharedInputBind,
+                                   SharedInputProgram, clear_program_cache,
                                    compile_program, program_cache_stats,
                                    program_for_plan, request_noise_ids)
-from repro.runtime.scheduler import (CIMDecodeLM, InflightScheduler,  # noqa
-                                     Request, RequestRecord, SlotMap,
+from repro.runtime.scheduler import (CIMDecodeLM, DecodeBlock,  # noqa
+                                     InflightScheduler, Request,
+                                     RequestRecord, SlotMap,
                                      decode_sequential)

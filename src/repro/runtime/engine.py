@@ -114,6 +114,7 @@ from repro.core import digital_ref, mapping
 from repro.core import noise_model as nm
 from repro.core.hw import CIMMacroConfig, DEFAULT_MACRO
 from repro.core.noise_model import NO_NOISE, NoiseConfig
+from repro.core.quantization import rounding_barrier
 from repro.kernels.cim_mbiw import ops as kops
 
 Params = List[Dict[str, jnp.ndarray]]
@@ -594,6 +595,10 @@ def _tile_schedule(lp: LayerPlan, q_rows: jnp.ndarray, zp: jnp.ndarray,
     mid = 2.0 ** (lp.spec.r_out - 1)
     g0 = lp.g0
     tsz = lp.tile_n
+    # materialized ADC gain: the fakequant reference and this schedule must
+    # dequantize with the identical float in every fusion context
+    # (quantization.rounding_barrier)
+    gain = rounding_barrier(gamma * g0)
     dp_hat = []
     for ni in range(wqq.shape[1] // tsz):
         ns, ne = ni * tsz, (ni + 1) * tsz
@@ -603,7 +608,7 @@ def _tile_schedule(lp: LayerPlan, q_rows: jnp.ndarray, zp: jnp.ndarray,
             # zero-point: x = q*s + z -> z*colsum is per-channel constant,
             # folded into the ABN offset inside the ADC floor
             zp_dp = zp * jnp.sum(wqq[ks:ke, ns:ne], axis=0)
-            beta_eff = beta[ns:ne] + gamma[ns:ne] * g0 * zp_dp
+            beta_eff = beta[ns:ne] + gain[ns:ne] * zp_dp
             out = matmul(q_rows[:, ks:ke], wqq[ks:ke, ns:ne],
                          gamma[ns:ne], beta_eff, g0)
             if nctx is None:
@@ -616,7 +621,7 @@ def _tile_schedule(lp: LayerPlan, q_rows: jnp.ndarray, zp: jnp.ndarray,
             # against the *raw* beta keeps the zero-point contribution in
             # dp_hat, exactly like the fakequant training path
             acc = acc + (codes.astype(jnp.float32) + 0.5 - mid
-                         - beta[None, ns:ne]) / (gamma[None, ns:ne] * g0)
+                         - beta[None, ns:ne]) / gain[None, ns:ne]
         dp_hat.append(acc)
     return jnp.concatenate(dp_hat, axis=-1)
 

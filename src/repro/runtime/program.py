@@ -448,6 +448,151 @@ class BoundProgram:
         return self.program.stats()
 
 
+class SharedInputProgram:
+    """N projection heads over one shared input, fused as ONE program.
+
+    A transformer block computes several projections of the *same*
+    normalized hidden state — Q/K/V from the attention input, gate/up from
+    the MLP input.  On the macro these are columns of one wide GEMM: the
+    activations stream through the rows once and every head's columns
+    convert in the same ADC pass.  This artifact expresses that: it
+    compiles a single (k -> sum(n_i)) layer via `compile_program` (so the
+    fused program shares the global plan cache like any other) and serves
+    every head from one dispatch.
+
+    Bit-exactness of the per-head slices vs. per-head programs is
+    structural, not approximate: activation quantization depends only on
+    the shared input, and weight quantization, ABN gamma/beta, the ADC
+    epilogue, and dequantization are all per-output-column — concatenating
+    heads along the output axis changes no column's arithmetic
+    (tests/test_program.py proves the slices bitwise).
+    """
+
+    __slots__ = ("program", "heads", "_offsets")
+
+    def __init__(self, program: CIMProgram,
+                 heads: Sequence[Tuple[str, int]]):
+        heads = tuple((str(name), int(n)) for name, n in heads)
+        if len({name for name, _ in heads}) != len(heads):
+            raise ValueError(f"duplicate head names in {heads}")
+        n_tot = sum(n for _, n in heads)
+        if len(program.plan.layers) != 1:
+            raise ValueError("shared-input fusion is a single-layer "
+                             f"artifact, got {len(program.plan.layers)} "
+                             "layers")
+        if program.plan.layers[0].spec.n != n_tot:
+            raise ValueError(
+                f"program n={program.plan.layers[0].spec.n} != "
+                f"sum of head widths {n_tot}")
+        offsets, s = [], 0
+        for _, n in heads:
+            offsets.append((s, s + n))
+            s += n
+        object.__setattr__(self, "program", program)
+        object.__setattr__(self, "heads", heads)
+        object.__setattr__(self, "_offsets", tuple(offsets))
+
+    def __setattr__(self, name, value):
+        raise AttributeError("SharedInputProgram is immutable")
+
+    @classmethod
+    def compile(cls, k: int, heads: Sequence[Tuple[str, int]],
+                cfg: rt.EngineConfig = rt.EngineConfig(), *,
+                r_in: int, r_w: int, m: int = 8,
+                buckets: BatchBuckets = DEFAULT_BUCKETS
+                ) -> "SharedInputProgram":
+        """Compile (through the global program cache) the fused program of
+        `heads` — ((name, n_i), ...) projections sharing a width-k input
+        at one precision point.  `m` is the planner's batch-extent hint."""
+        heads = tuple((str(name), int(n)) for name, n in heads)
+        n_tot = sum(n for _, n in heads)
+        prog = compile_program(
+            (mapping.LayerSpec(m=m, k=int(k), n=n_tot,
+                               r_in=r_in, r_w=r_w),),
+            cfg, activations=("none",), buckets=buckets)
+        return cls(prog, heads)
+
+    @property
+    def k(self) -> int:
+        """The shared input width."""
+        return self.program.plan.layers[0].spec.k
+
+    def init_params(self, key: jax.Array) -> Dict[str, Dict]:
+        """Distribution-aware init, split per head: {name: {"w",
+        "abn_log_gamma", "abn_beta"}} with w (k, n_i)."""
+        (lay,) = list(self.program.init_params(key))
+        out = {}
+        for (name, _), (s, e) in zip(self.heads, self._offsets):
+            out[name] = {"w": lay["w"][:, s:e],
+                         "abn_log_gamma": lay["abn_log_gamma"][s:e],
+                         "abn_beta": lay["abn_beta"][s:e]}
+        return out
+
+    def bind(self, params: Dict[str, Dict]) -> "SharedInputBind":
+        """Concatenate the per-head params along the output axis and bind
+        once (weight quantization is per-output-column, so the fused bind
+        equals the per-head binds column for column)."""
+        missing = [name for name, _ in self.heads if name not in params]
+        if missing:
+            raise ValueError(f"missing head params {missing}")
+        for (name, n) in self.heads:
+            w = params[name]["w"]
+            if w.shape != (self.k, n):
+                raise ValueError(
+                    f"head {name!r} weight shape {w.shape} != "
+                    f"({self.k}, {n})")
+        cat = {
+            fld: jnp.concatenate(
+                [jnp.asarray(params[name][fld]) for name, _ in self.heads],
+                axis=-1 if fld == "w" else 0)
+            for fld in ("w", "abn_log_gamma", "abn_beta")}
+        return SharedInputBind(self, self.program.bind([cat]))
+
+    def stats(self) -> Dict[str, int]:
+        """The fused program's compile/bucket counters."""
+        return self.program.stats()
+
+
+class SharedInputBind:
+    """A SharedInputProgram closed over bound (pre-quantized) weights:
+    `serve(x)` runs the one fused dispatch and returns {head: slice}."""
+
+    __slots__ = ("shared", "bound")
+
+    def __init__(self, shared: SharedInputProgram, bound: BoundProgram):
+        object.__setattr__(self, "shared", shared)
+        object.__setattr__(self, "bound", bound)
+
+    def __setattr__(self, name, value):
+        raise AttributeError("SharedInputBind is immutable")
+
+    @property
+    def program(self) -> CIMProgram:
+        """The backing fused CIMProgram."""
+        return self.shared.program
+
+    def serve(self, x: jnp.ndarray, key: Optional[jax.Array] = None,
+              noise: Optional[NoiseConfig] = None, *,
+              segments: Optional[jnp.ndarray] = None,
+              noise_ids: Optional[jnp.ndarray] = None,
+              reference: bool = False) -> Dict[str, jnp.ndarray]:
+        """One bucketed dispatch of the shared input; the result splits
+        along the output axis into {head name: (..., n_i)}.  Isolation
+        arguments (`segments`/`noise_ids`) pass through unchanged — a
+        fused-head serve isolates rows exactly like any other program."""
+        y = self.bound.serve(x, key, noise, segments=segments,
+                             noise_ids=noise_ids, reference=reference)
+        return {name: y[..., s:e]
+                for (name, _), (s, e) in zip(self.shared.heads,
+                                             self.shared._offsets)}
+
+    __call__ = serve
+
+    def stats(self) -> Dict[str, int]:
+        """The backing program's compile/bucket counters."""
+        return self.shared.program.stats()
+
+
 # ---------------------------------------------------------------------------
 # the global program cache
 # ---------------------------------------------------------------------------

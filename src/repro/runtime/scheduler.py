@@ -22,17 +22,22 @@ on three invariants the PR 5/PR 6 runtime provides:
   ever compacted, shifted, or gathered, so neither event can perturb the
   requests already in flight.
 
-The model here (`CIMDecodeLM`) is a deliberately small greedy decode-only
-LM over a BoundProgram (embed -> d-to-d CIM network -> tied logits): rich
-enough to exercise every runtime path the property tests and the serving
-benchmark need, small enough that fuzzing hundreds of schedules stays
-cheap.  The transformer serving path reuses the same slot discipline via
-models/common.init_slot_kv_cache (see launch/serve.py --inflight).
+The model here (`CIMDecodeLM`) is a greedy decode-only *transformer* LM
+whose projections all serve through compiled CIM programs: per block, a
+fused Q/K/V `SharedInputBind` (three heads of one shared normalized
+input), an O `BoundProgram`, a fused gate/up `SharedInputBind`, and a
+down `BoundProgram` — with digital RMS norms, rotary embedding, and
+ring-buffer KV attention between them (token mixing stays digital, per
+the macro mapping in docs/ARCHITECTURE.md §8).  Its per-slot state is a
+pytree (KV rings + position), and the scheduler treats state generically
+through `init_state`/`step_rows`, so the isolation property tests fuzz
+the real serving datapath, not a toy d->d stand-in.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import heapq
 import time
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
@@ -44,6 +49,7 @@ from repro.core import mapping
 from repro.runtime import engine as rt
 from repro.runtime.program import (DEFAULT_BUCKETS, NOISE_ID_STRIDE,
                                    BatchBuckets, BoundProgram,
+                                   SharedInputBind, SharedInputProgram,
                                    compile_program)
 
 
@@ -96,22 +102,21 @@ class SlotMap:
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.capacity = capacity
-        self._free = list(range(capacity))    # kept sorted ascending
+        self._free = list(range(capacity))    # min-heap of free slot ids
         self._live: set = set()
 
     def alloc(self) -> int:
         """Claim and return the lowest free slot (raises when full)."""
         if not self._free:
             raise RuntimeError("no free slot")
-        s = self._free.pop(0)
+        s = heapq.heappop(self._free)
         self._live.add(s)
         return s
 
     def free(self, slot: int) -> None:
         """Release a live slot back to the pool (no data movement)."""
         self._live.remove(slot)
-        self._free.append(slot)
-        self._free.sort()
+        heapq.heappush(self._free, slot)
 
     def live(self) -> Tuple[int, ...]:
         """The live slot ids, ascending."""
@@ -127,31 +132,84 @@ class SlotMap:
         return len(self._free)
 
 
+def _rms_norm(x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """Non-parametric RMS norm (strictly per row — no batch statistics)."""
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+
+
+def _rope(x: jnp.ndarray, pos: jnp.ndarray,
+          theta: float = 10000.0) -> jnp.ndarray:
+    """Rotary embedding of (R, H, hd) vectors at per-row positions (R,)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos.astype(jnp.float32)[:, None, None] * freq[None, None, :]
+    c, s = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:2 * half]
+    rot = jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return rot if 2 * half == hd else jnp.concatenate(
+        [rot, x[..., 2 * half:]], axis=-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeBlock:
+    """One transformer block's bound CIM artifacts: the fused Q/K/V
+    shared-input bind, the O projection, the fused gate/up bind, and the
+    down projection.  Every block of a CIMDecodeLM shares the same four
+    *programs* (one per distinct shape — the keyed program cache), each
+    block owning only its binds — the per-expert/per-block serve-many
+    pattern."""
+    qkv: SharedInputBind
+    o: BoundProgram
+    gate_up: SharedInputBind
+    down: BoundProgram
+
+
 class CIMDecodeLM:
-    """A greedy decode-only LM over a bound CIM program.
+    """A greedy decode-only transformer LM over bound CIM programs.
 
-    One decode step per row: x = embed[token] + h  ->  CIM network (d in,
-    d out, through BoundProgram.serve with per-row segments/noise ids)
-    ->  h' = y,  logits = y @ embed.T,  next = argmax.  Everything outside
-    the program is strictly per-row, so program-level request isolation
-    (segment quantization + identity-keyed noise) is the whole story:
-    fused rows are bit-identical to solo rows."""
+    Per block and per decode step (one new token per row):
 
-    def __init__(self, bound: BoundProgram, embed: jnp.ndarray):
-        d_in = bound.plan.layers[0].spec.k
-        d_out = bound.plan.layers[-1].spec.n
-        if d_in != d_out:
-            raise ValueError(
-                f"decode LM needs a d->d network, got {d_in}->{d_out}")
-        if embed.ndim != 2 or embed.shape[1] != d_in:
-            raise ValueError(
-                f"embed shape {embed.shape} incompatible with d={d_in}")
-        self.bound = bound
-        self.embed = jnp.asarray(embed, jnp.float32)
+        h1 = rms_norm(x);  q,k,v = qkv.serve(h1)     # one fused dispatch
+        attn = ring-KV causal attention(rope(q), rope(k), v)   # digital
+        x   += o.serve(attn)
+        h2 = rms_norm(x);  g,u = gate_up.serve(h2)   # one fused dispatch
+        x   += down.serve(silu(g) * u)
+
+    with tied logits `rms_norm(x) @ embed.T` and greedy argmax.  All four
+    GEMMs per block serve through compiled CIM programs; the norms, rope,
+    attention, and activation are digital (ARCHITECTURE.md §8).  Per-slot
+    state is a pytree — KV rings (depth, window, H, hd) plus the absolute
+    position — and everything outside the programs is strictly per-row,
+    so program-level request isolation (per-row quantization segments +
+    identity-keyed noise) makes fused rows bit-identical to solo rows."""
+
+    def __init__(self, embed: jnp.ndarray, blocks: Sequence[DecodeBlock],
+                 *, n_heads: int, window: int = 16,
+                 rope_theta: float = 10000.0):
+        embed = jnp.asarray(embed, jnp.float32)
+        if embed.ndim != 2:
+            raise ValueError(f"embed must be (vocab, d), got {embed.shape}")
+        d = embed.shape[1]
+        if n_heads < 1 or d % n_heads:
+            raise ValueError(f"d={d} not divisible into {n_heads} heads")
+        if window < 1:
+            raise ValueError(f"KV window must be >= 1, got {window}")
+        blocks = tuple(blocks)
+        if not blocks:
+            raise ValueError("need at least one DecodeBlock")
+        for i, blk in enumerate(blocks):
+            if blk.qkv.shared.k != d or blk.o.plan.layers[-1].spec.n != d:
+                raise ValueError(f"block {i} is not d->d at d={d}")
+        self.embed = embed
+        self.blocks = blocks
+        self.n_heads = n_heads
+        self.window = window
+        self.rope_theta = rope_theta
 
     @property
     def d(self) -> int:
-        """Model width (the CIM network's input/output feature count)."""
+        """Model width."""
         return self.embed.shape[1]
 
     @property
@@ -159,22 +217,58 @@ class CIMDecodeLM:
         """Vocabulary size (rows of the tied embedding)."""
         return self.embed.shape[0]
 
+    @property
+    def depth(self) -> int:
+        """Transformer block count."""
+        return len(self.blocks)
+
+    @property
+    def bound(self) -> BoundProgram:
+        """A representative bound program (all programs share one
+        EngineConfig and bucket ladder — this is the one observability
+        handle the scheduler and tests key their checks on)."""
+        return self.blocks[0].o
+
     @classmethod
     def toy(cls, key: jax.Array, *, d: int = 96, depth: int = 2,
             vocab: int = 61, r_in: int = 4, r_w: int = 2,
             cfg: Optional[rt.EngineConfig] = None,
-            buckets: BatchBuckets = DEFAULT_BUCKETS) -> "CIMDecodeLM":
-        """A small self-contained LM (compile + init + bind in one call) —
-        the workhorse of the scheduler property tests and the serving
-        benchmark's arrival-rate sweep."""
-        specs = tuple(mapping.LayerSpec(m=8, k=d, n=d, r_in=r_in, r_w=r_w)
-                      for _ in range(depth))
-        prog = compile_program(specs, cfg or rt.EngineConfig(),
-                               buckets=buckets)
-        params = prog.init_params(jax.random.fold_in(key, 0))
+            buckets: BatchBuckets = DEFAULT_BUCKETS,
+            n_heads: int = 4, window: int = 16,
+            d_ff: int = 0) -> "CIMDecodeLM":
+        """A small self-contained transformer LM (compile + init + bind in
+        one call) — the workhorse of the scheduler property tests and the
+        serving benchmark.  `depth` counts transformer blocks; all blocks
+        share the same four programs (program-cache reuse is depth-fold),
+        each with its own bind."""
+        cfg = cfg or rt.EngineConfig()
+        if d % n_heads:
+            n_heads = 1
+        d_ff = d_ff or 2 * d
+        qkv_p = SharedInputProgram.compile(
+            d, (("q", d), ("k", d), ("v", d)), cfg,
+            r_in=r_in, r_w=r_w, buckets=buckets)
+        o_p = compile_program(
+            (mapping.LayerSpec(m=8, k=d, n=d, r_in=r_in, r_w=r_w),), cfg,
+            activations=("none",), buckets=buckets)
+        gu_p = SharedInputProgram.compile(
+            d, (("gate", d_ff), ("up", d_ff)), cfg,
+            r_in=r_in, r_w=r_w, buckets=buckets)
+        dn_p = compile_program(
+            (mapping.LayerSpec(m=8, k=d_ff, n=d, r_in=r_in, r_w=r_w),),
+            cfg, activations=("none",), buckets=buckets)
+        blocks = []
+        for b in range(depth):
+            kb = jax.random.fold_in(key, 100 + b)
+            blocks.append(DecodeBlock(
+                qkv=qkv_p.bind(qkv_p.init_params(jax.random.fold_in(kb, 0))),
+                o=o_p.bind(o_p.init_params(jax.random.fold_in(kb, 1))),
+                gate_up=gu_p.bind(
+                    gu_p.init_params(jax.random.fold_in(kb, 2))),
+                down=dn_p.bind(dn_p.init_params(jax.random.fold_in(kb, 3)))))
         embed = 0.25 * jax.random.normal(jax.random.fold_in(key, 1),
                                          (vocab, d), jnp.float32)
-        return cls(prog.bind(params), embed)
+        return cls(embed, blocks, n_heads=n_heads, window=window)
 
     @staticmethod
     def noise_id(uid: int, call: int) -> int:
@@ -184,37 +278,96 @@ class CIMDecodeLM:
         fused scheduler and decode_sequential derive ids here."""
         return (uid * NOISE_ID_STRIDE + call) % (1 << 31)
 
-    def step_rows(self, h: jnp.ndarray, tokens: jnp.ndarray,
+    @staticmethod
+    def _proj_ids(noise_ids: Optional[jnp.ndarray],
+                  proj: int) -> Optional[jnp.ndarray]:
+        """Per-projection noise identities: the four GEMMs of each block
+        must draw distinct thermal noise, so the row identity mixes with a
+        per-projection index.  A pure function of the row's own id — the
+        fused and sequential paths derive identical ids per row."""
+        if noise_ids is None:
+            return None
+        return (noise_ids * jnp.int32(29)
+                + jnp.int32(proj)) & jnp.int32(0x7FFFFFFF)
+
+    def init_state(self, n: int) -> Dict[str, jnp.ndarray]:
+        """Fresh per-slot decode state for `n` slots: KV rings of shape
+        (n, depth, window, H, hd) plus each slot's absolute position
+        (position 0 = first prompt token).  All recurrence lives here —
+        step_rows embeds the current token fresh each call."""
+        hd = self.d // self.n_heads
+        shape = (n, self.depth, self.window, self.n_heads, hd)
+        return {"k": jnp.zeros(shape, jnp.float32),
+                "v": jnp.zeros(shape, jnp.float32),
+                "pos": jnp.zeros((n,), jnp.int32)}
+
+    def step_rows(self, state: Dict[str, jnp.ndarray], tokens: jnp.ndarray,
                   noise_ids: Optional[jnp.ndarray],
                   key: Optional[jax.Array]
-                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """One fused decode step over (R, d) state rows: returns the new
+                  ) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray]:
+        """One fused decode step over R state rows: returns the updated
         state rows and the (R,) greedy next tokens.  Every row is its own
-        quantization segment, so the rows never interact."""
-        rows = h.shape[0]
-        x = self.embed[tokens] + h
-        y = self.bound.serve(
-            x, key, segments=jnp.arange(rows, dtype=jnp.int32),
-            noise_ids=noise_ids)
-        logits = y @ self.embed.T
-        return y, jnp.argmax(logits, axis=-1)
+        quantization segment in every program dispatch, and attention only
+        reads the row's own KV ring, so the rows never interact."""
+        rows = tokens.shape[0]
+        hd = self.d // self.n_heads
+        seg = jnp.arange(rows, dtype=jnp.int32)
+        pos = state["pos"]                                   # (R,)
+        x = self.embed[tokens]                               # (R, d)
+        idx = pos % self.window                              # ring write
+        # absolute position of each ring slot j given the row's pos
+        # (common.attention_block's ring recovery): src = pos - ((pos-j)%L)
+        j = jnp.arange(self.window, dtype=jnp.int32)
+        src = pos[:, None] - ((pos[:, None] - j[None, :]) % self.window)
+        bias = jnp.where(src < 0, -1e9, 0.0)                 # (R, L)
+        new_k, new_v = state["k"], state["v"]
+        for b, blk in enumerate(self.blocks):
+            h1 = _rms_norm(x)
+            qkv = blk.qkv.serve(
+                h1, key, segments=seg,
+                noise_ids=self._proj_ids(noise_ids, 4 * b))
+            q = _rope(qkv["q"].reshape(rows, self.n_heads, hd), pos,
+                      self.rope_theta)
+            kk = _rope(qkv["k"].reshape(rows, self.n_heads, hd), pos,
+                       self.rope_theta)
+            vv = qkv["v"].reshape(rows, self.n_heads, hd)
+            new_k = new_k.at[jnp.arange(rows), b, idx].set(kk)
+            new_v = new_v.at[jnp.arange(rows), b, idx].set(vv)
+            kr, vr = new_k[:rows, b], new_v[:rows, b]        # (R, L, H, hd)
+            scores = jnp.einsum("rhd,rlhd->rhl", q, kr) / np.sqrt(hd)
+            probs = jax.nn.softmax(scores + bias[:, None, :], axis=-1)
+            attn = jnp.einsum("rhl,rlhd->rhd", probs, vr)
+            x = x + blk.o.serve(
+                attn.reshape(rows, self.d), key, segments=seg,
+                noise_ids=self._proj_ids(noise_ids, 4 * b + 1))
+            h2 = _rms_norm(x)
+            gu = blk.gate_up.serve(
+                h2, key, segments=seg,
+                noise_ids=self._proj_ids(noise_ids, 4 * b + 2))
+            x = x + blk.down.serve(
+                jax.nn.silu(gu["gate"]) * gu["up"], key, segments=seg,
+                noise_ids=self._proj_ids(noise_ids, 4 * b + 3))
+        logits = _rms_norm(x) @ self.embed.T
+        new_state = {"k": new_k, "v": new_v, "pos": pos + 1}
+        return new_state, jnp.argmax(logits, axis=-1)
 
     def prefill(self, request: Request, key: Optional[jax.Array]
-                ) -> Tuple[jnp.ndarray, int, int]:
+                ) -> Tuple[Dict[str, jnp.ndarray], int, int]:
         """Consume a request's prompt solo (batch-1 steps at the ladder's
-        smallest rung) and return (state row (d,), first generated token,
-        model calls made).  Runs identically whether the request later
-        decodes fused or sequentially, so admission never enters the
-        equality argument."""
-        h = jnp.zeros((1, self.d), jnp.float32)
+        smallest rung) and return (state row pytree, first generated
+        token, model calls made).  Runs identically whether the request
+        later decodes fused or sequentially, so admission never enters
+        the equality argument."""
+        st = self.init_state(1)
         tok = None
         for j, t in enumerate(request.prompt):
             nid = None if key is None else jnp.asarray(
                 [self.noise_id(request.uid, j)], jnp.int32)
-            h, nxt = self.step_rows(
-                h, jnp.asarray([t % self.vocab], jnp.int32), nid, key)
+            st, nxt = self.step_rows(
+                st, jnp.asarray([t % self.vocab], jnp.int32), nid, key)
             tok = int(nxt[0])
-        return h[0], tok, len(request.prompt)
+        row = jax.tree_util.tree_map(lambda a: a[0], st)
+        return row, tok, len(request.prompt)
 
 
 def decode_sequential(model: CIMDecodeLM, request: Request,
@@ -224,14 +377,14 @@ def decode_sequential(model: CIMDecodeLM, request: Request,
     the in-flight scheduler would use.  InflightScheduler must reproduce
     this token stream bit for bit for every request of every schedule —
     the property tests/test_scheduler.py fuzzes."""
-    h, tok, calls = model.prefill(request, key)
+    row, tok, calls = model.prefill(request, key)
     tokens = [tok]
-    h = h[None]
+    st = jax.tree_util.tree_map(lambda a: a[None], row)
     while len(tokens) < request.max_new_tokens:
         nid = None if key is None else jnp.asarray(
             [model.noise_id(request.uid, calls)], jnp.int32)
-        h, nxt = model.step_rows(
-            h, jnp.asarray([tokens[-1]], jnp.int32), nid, key)
+        st, nxt = model.step_rows(
+            st, jnp.asarray([tokens[-1]], jnp.int32), nid, key)
         tokens.append(int(nxt[0]))
         calls += 1
     return tokens
@@ -259,7 +412,7 @@ class InflightScheduler:
         self.model = model
         self.key = key
         self.slots = SlotMap(capacity)
-        self.state = jnp.zeros((capacity, model.d), jnp.float32)
+        self.state = model.init_state(capacity)   # pytree, leading = slot
         self.cur_tok = np.zeros((capacity,), np.int64)
         self.clock = 0
         self.pending: Deque[RequestRecord] = collections.deque()
@@ -304,7 +457,8 @@ class InflightScheduler:
             rec.calls = calls
             rec.tokens.append(tok)
             rec.first_token_step = self.clock
-            self.state = self.state.at[rec.slot].set(h)
+            self.state = jax.tree_util.tree_map(
+                lambda a, r, s=rec.slot: a.at[s].set(r), self.state, h)
             self.cur_tok[rec.slot] = tok
             self.by_slot[rec.slot] = rec
             if rec.done:              # 1-token request: in and out
@@ -327,12 +481,14 @@ class InflightScheduler:
                    if s in self.by_slot else -1 for s in range(e)]
             nids = jnp.asarray(ids, jnp.int32)
         t0 = time.perf_counter()
+        rows = jax.tree_util.tree_map(lambda a: a[:e], self.state)
         h, nxt = self.model.step_rows(
-            self.state[:e], jnp.asarray(self.cur_tok[:e], jnp.int32),
+            rows, jnp.asarray(self.cur_tok[:e], jnp.int32),
             nids, self.key)
         nxt = np.asarray(jax.device_get(nxt))
         self.wall_s += time.perf_counter() - t0
-        self.state = self.state.at[:e].set(h)
+        self.state = jax.tree_util.tree_map(
+            lambda a, r: a.at[:e].set(r), self.state, h)
         self.extents_seen.add(
             int(self.model.bound.program.buckets.bucket_for(e)))
         self.decode_steps += 1

@@ -470,3 +470,62 @@ def test_executables_bounded_by_ladder_across_fuzzed_schedule():
     assert st["executables_compiled"] <= len(rungs)
     assert st["bucket_misses"] <= len(rungs)
     assert st["bucket_hits"] > st["bucket_misses"]
+
+
+# ---- shared-input (multi-head) fusion --------------------------------------
+
+def test_shared_input_heads_bitexact_vs_per_head_programs():
+    """Q/K/V-style fusion: N heads of one shared input compile as ONE
+    program, and every head's output slice is bitwise equal to serving
+    that head through its own single-head program (weight quantization,
+    ABN, and the ADC epilogue are all per-output-column, so fusion
+    changes no column's arithmetic)."""
+    from repro.runtime import SharedInputProgram
+    cfg = EngineConfig()
+    d = 40
+    heads = (("q", 24), ("k", 16), ("v", 16))
+    for r_in, r_w in ((8, 4), (2, 1)):
+        sp = SharedInputProgram.compile(d, heads, cfg, r_in=r_in, r_w=r_w)
+        params = sp.init_params(jax.random.PRNGKey(3))
+        bind = sp.bind(params)
+        x = jax.random.normal(jax.random.PRNGKey(4), (5, d), jnp.float32)
+        fused = bind.serve(x)
+        assert set(fused) == {"q", "k", "v"}
+        for name, n in heads:
+            solo_prog = compile_program(
+                (LayerSpec(m=8, k=d, n=n, r_in=r_in, r_w=r_w),), cfg,
+                activations=("none",))
+            solo = solo_prog.bind([params[name]]).serve(x)
+            assert fused[name].shape == (5, n)
+            np.testing.assert_array_equal(np.asarray(fused[name]),
+                                          np.asarray(solo))
+
+
+def test_shared_input_program_validation():
+    from repro.runtime import SharedInputProgram
+    with pytest.raises(ValueError, match="duplicate head"):
+        SharedInputProgram.compile(16, (("q", 8), ("q", 8)), r_in=4, r_w=2)
+    sp = SharedInputProgram.compile(16, (("a", 8), ("b", 4)), r_in=4, r_w=2)
+    params = sp.init_params(jax.random.PRNGKey(0))
+    assert params["a"]["w"].shape == (16, 8)
+    assert params["b"]["abn_beta"].shape == (4,)
+    with pytest.raises(ValueError, match="missing head params"):
+        sp.bind({"a": params["a"]})
+    bad = dict(params, b=dict(params["b"], w=jnp.zeros((16, 5))))
+    with pytest.raises(ValueError, match="weight shape"):
+        sp.bind(bad)
+
+
+def test_shared_input_fusion_shares_program_cache():
+    """Equal (k, heads, precision, cfg) fusions hit one cache entry, and
+    the fused program is the same object the equivalent wide single-layer
+    compile returns."""
+    from repro.runtime import SharedInputProgram
+    sp1 = SharedInputProgram.compile(24, (("g", 32), ("u", 32)),
+                                     r_in=4, r_w=2)
+    sp2 = SharedInputProgram.compile(24, (("gate", 32), ("up", 32)),
+                                     r_in=4, r_w=2)
+    assert sp1.program is sp2.program
+    wide = compile_program((LayerSpec(m=8, k=24, n=64, r_in=4, r_w=2),),
+                           activations=("none",))
+    assert wide is sp1.program

@@ -119,6 +119,30 @@ def test_slotmap_lowest_free_and_extent():
         SlotMap(0)
 
 
+def test_slotmap_fuzz_alloc_free_orderings():
+    """Regression for the heap rewrite: any interleaving of allocs and
+    frees keeps the lowest-free-slot invariant, the live set, and
+    extent() in lockstep with a brute-force model."""
+    rng = np.random.default_rng(1234)
+    for _ in range(200):
+        cap = int(rng.integers(1, 9))
+        s = SlotMap(cap)
+        live = set()
+        for _ in range(60):
+            if live and (len(live) == cap or rng.random() < 0.45):
+                victim = int(rng.choice(sorted(live)))
+                s.free(victim)
+                live.discard(victim)
+            else:
+                got = s.alloc()
+                expect = min(set(range(cap)) - live)
+                assert got == expect, (got, expect, sorted(live))
+                live.add(got)
+            assert set(s.live()) == live
+            assert s.extent() == (max(live) + 1 if live else 0)
+            assert s.n_free == cap - len(live)
+
+
 def test_request_validation():
     with pytest.raises(ValueError, match="non-empty prompt"):
         Request(uid=0, prompt=(), max_new_tokens=1)
