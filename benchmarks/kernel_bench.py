@@ -285,6 +285,40 @@ def bench_serving(batch=4, d=256, layers=3, steps=24, out_json=None):
     return row
 
 
+def bench_verify_overhead(d=192, layers=2, batch=8):
+    """One-time cost of `compile_program(..., verify="strict")` (ISSUE 8).
+
+    Plans and warms a genuinely cold program at the most expensive grid
+    point (r_in=8, r_w=4 — 32 kernel planes), then times the full cimcheck
+    pass stack (`verify_program`) against it.  The acceptance gate is
+    overhead < 5% of the one-time plan+warmup cost: static verification
+    must stay invisible next to the XLA compile it rides along with."""
+    from repro.analysis import verify_program
+    from repro.core.mapping import LayerSpec
+    from repro.runtime import compile_program
+    from repro.runtime.program import clear_program_cache
+
+    specs = [LayerSpec(m=batch, k=d, n=d, r_in=8, r_w=4)
+             for _ in range(layers)]
+    clear_program_cache()
+    t0 = time.time()
+    prog = compile_program(specs)
+    params = prog.init_params(jax.random.PRNGKey(0))
+    bound = prog.bind(params)
+    x = jax.random.normal(jax.random.PRNGKey(1), (batch, d))
+    bound.serve(x).block_until_ready()
+    t_plan = time.time() - t0
+
+    t0 = time.time()
+    verify_program(prog, "strict", graphs="serving")   # = verify="strict"
+    t_verify = time.time() - t0
+    return {
+        "plan_warmup_s": t_plan,
+        "verify_s": t_verify,
+        "verify_strict_overhead": t_verify / t_plan,
+    }
+
+
 def bench_inflight_sweep(rates=(0.25, 1.0, 4.0), capacity=8, n_req=16,
                          seed=0):
     """Arrival-rate sweep of the in-flight batching scheduler (ISSUE 6).
@@ -426,6 +460,11 @@ def _serving_row(out_json="BENCH_serving.json"):
           f"hit{llm['program_cache_hit_rate']:.2f}_"
           f"reuse{llm['serve_reuse_factor']:.1f}x_match{llm['match']}")
     row["llm_engine"] = llm
+    vo = bench_verify_overhead()
+    print(f"serving_verify_strict,{vo['verify_s'] * 1e3:.0f}ms,"
+          f"plan{vo['plan_warmup_s'] * 1e3:.0f}ms_"
+          f"overhead{vo['verify_strict_overhead']:.3f}")
+    row.update(vo)
     if out_json:
         with open(out_json, "w") as fh:
             json.dump(row, fh, indent=2)

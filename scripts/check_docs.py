@@ -36,6 +36,12 @@ API_MODULES = (
     "repro.models.transformer",
     "repro.models.moe",
     "repro.kernels.cim_mbiw.ops",
+    "repro.analysis",
+    "repro.analysis.findings",
+    "repro.analysis.barriers",
+    "repro.analysis.noise_keys",
+    "repro.analysis.recompile",
+    "repro.analysis.plan_checks",
 )
 
 # markdown inline links, skipping images; target group up to the first ')'

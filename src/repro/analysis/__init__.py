@@ -1,0 +1,171 @@
+"""cimcheck: plan-time static verification of compiled CIM programs.
+
+The analysis package walks the jaxprs of a compiled `CIMProgram`'s
+executables plus its plan-level metadata and reports contract violations
+*before* they cost a production incident (see `docs/ARCHITECTURE.md` §9):
+
+  * `barriers`    — numerics-barrier lint on rounding paths (NB0xx/NB1xx);
+  * `noise_keys`  — fold_in-chain injectivity + noise-id range audit
+    (NK0xx);
+  * `recompile`   — executable-cache key budget and sensitivity (RC0xx);
+  * `plan_checks` — LayerSpec/ConvGeometry/macro-envelope invariants
+    (PV0xx).
+
+Entry points: `check_program` (one Report over every pass),
+`verify_program` (raise/warn per mode — what
+``compile_program(..., verify=...)`` calls), `check_all_cached_programs`
+(sweep the global program cache, e.g. after serving warmup), and
+`lint_callable` (barrier-lint any traceable function).  The
+`scripts/cimcheck.py` CLI sweeps the model zoo across the precision grid
+and emits the findings as JSON.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+from repro.analysis import barriers, noise_keys, plan_checks, recompile
+from repro.analysis.findings import (CimcheckError, Finding, Report,
+                                     Severity, Suppression,
+                                     parse_suppressions)
+
+lint_callable = barriers.lint_callable
+lint_hlo_text = barriers.lint_hlo_text
+
+__all__ = [
+    "CimcheckError", "Finding", "Report", "Severity", "Suppression",
+    "barriers", "check_all_cached_programs", "check_program",
+    "lint_callable", "lint_hlo_text", "noise_keys", "parse_suppressions",
+    "plan_checks", "recompile", "verify_program",
+]
+
+
+def _traced_graphs(program, graphs: str = "all"):
+    """(label, ClosedJaxpr) per executable variant the program can serve.
+
+    Traces through `engine._exec_jit` with ShapeDtypeStruct operands at
+    the smallest bucket rung — pure abstract tracing, no XLA compile.
+    `TRACE_COUNT` is restored afterwards (a lint trace is not a compile).
+
+    ``graphs="all"`` traces every variant: unbound serve (weight
+    quantization in-graph), segmented, reference, and the noise-id path
+    when noise is on.  ``graphs="serving"`` traces only the bound-weights
+    serve path `BoundProgram.serve` dispatches (+ noise ids under noise)
+    — the cheap subset inline `compile_program(verify=...)` runs.  Both
+    modes trace stacks that repeat a layer plan once per *unique* layer:
+    the barrier lint is per-layer local (inter-layer glue adds no
+    rounding ops), so duplicate layers would only retrace identical eqns.
+    """
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.runtime import engine as rt
+
+    plan = program.plan
+    m = program.buckets.bucket_for(1)
+    sds = lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype)  # noqa: E731
+
+    def x_struct(p):
+        g = p.layers[0].spec.conv
+        if g is not None:
+            return jax.ShapeDtypeStruct((m,) + g.spatial_in, jnp.float32)
+        return jax.ShapeDtypeStruct((m, p.layers[0].spec.k), jnp.float32)
+
+    unique = list(dict.fromkeys(plan.layers))
+    if len(unique) < len(plan.layers):
+        plans = [(f"layer{plan.layers.index(lp)}",
+                  dataclasses.replace(plan, layers=(lp,)))
+                 for lp in unique]
+    else:
+        plans = [("", plan)]
+    saved_traces = rt.TRACE_COUNT["n"]
+    try:
+        out = []
+        for tag, p in plans:
+            params = rt.init_network_params(p, jax.random.PRNGKey(0))
+            p_sds = jax.tree_util.tree_map(sds, list(params))
+            if graphs == "serving":
+                # the bound payload, abstractly: eval_shape through the
+                # jitted bind populates the same trace cache bind() hits
+                from repro.runtime.program import _bind_jit
+                p_sds = tuple(
+                    jax.eval_shape(lambda pr: _bind_jit(p, pr), p_sds))
+            bound = graphs == "serving"
+            x_sds = x_struct(p)
+            mv_sds = jax.ShapeDtypeStruct((), jnp.int32)
+            ids_sds = jax.ShapeDtypeStruct((m,), jnp.int32)
+            key_sds = sds(jax.random.PRNGKey(0))
+            noisy = p.cfg.noise.enabled
+            nz = rt._dispatch_noise(p, None)
+
+            def trace(label, *, reference=False, seg=False, nid=False):
+                def fn(payload, x, mv, key, segv, nidv):
+                    return rt._exec_jit(p, payload, x, mv, key, nz, segv,
+                                        nidv, bound, reference)
+                closed = jax.make_jaxpr(fn)(
+                    p_sds, x_sds, mv_sds,
+                    key_sds if noisy else None,
+                    ids_sds if seg else None,
+                    ids_sds if nid else None)
+                return (f"{label}@{tag}" if tag else label, closed)
+
+            out.append(trace("serve"))
+            if graphs == "all":
+                out += [trace("serve+segments", seg=True),
+                        trace("reference", reference=True)]
+            if noisy:
+                out.append(trace("serve+noise_ids", nid=True))
+        return out
+    finally:
+        rt.TRACE_COUNT["n"] = saved_traces
+
+
+def check_program(program, *, max_m: int = 1024,
+                  suppressions: Tuple[Suppression, ...] = (),
+                  lint_graphs: bool = True, graphs: str = "all",
+                  key_budget: int = recompile.DEFAULT_KEY_BUDGET) -> Report:
+    """Run every cimcheck pass over one compiled `CIMProgram`.
+
+    Args:
+      program: the compiled artifact (`compile_program(...)`).
+      max_m: largest request extent the recompile pass budgets for.
+      suppressions: fnmatch waivers applied to every pass's findings.
+      lint_graphs: trace + barrier-lint the executables (the expensive
+        part; plan-only checks run regardless).
+      graphs: "all" lints every executable variant (segmented, reference,
+        noise ids — the CLI / CI sweep); "serving" lints only the default
+        serve path, whose trace jit warmup then reuses, so inline
+        verification stays a few percent of one-time plan cost.
+      key_budget: RC001 executable-key budget.
+    Returns:
+      A `Report`; call `.raise_if(mode)` or inspect `.findings`.
+    """
+    report = Report(suppressions=tuple(suppressions))
+    plan = program.plan
+    report.merge(plan_checks.run(plan))
+    m = program.buckets.bucket_for(1)
+    report.merge(noise_keys.run(plan, m))
+    report.merge(recompile.run(program, max_m=max_m, budget=key_budget))
+    if lint_graphs:
+        for label, closed in _traced_graphs(program, graphs):
+            report.extend(barriers.lint_jaxpr(closed, where_prefix=label))
+    return report
+
+
+def verify_program(program, mode: str = "strict", **kw) -> Report:
+    """`check_program` + mode enforcement; the `compile_program(verify=)`
+    hook.  "strict" raises `CimcheckError` on errors, "warn" prints."""
+    return check_program(program, **kw).raise_if(mode)
+
+
+def check_all_cached_programs(mode: str = "warn", **kw) -> Report:
+    """Sweep every program in the global cache (e.g. post-warmup in a
+    serving process) through `check_program`; returns the merged Report
+    after mode enforcement."""
+    from repro.runtime import program as prog_mod
+
+    merged = Report()
+    for prog in list(prog_mod._PLAN_PROGRAMS.values()):
+        merged.merge(check_program(prog, **kw))
+    return merged.raise_if(mode)

@@ -1,0 +1,301 @@
+"""Numerics-barrier lint (pass id ``barriers``): the PR 7 bug class.
+
+XLA is free to rewrite float arithmetic in context-dependent ways — fusing a
+``mul`` + ``add`` into an FMA, or turning ``x / c`` into ``x * (1/c)`` — and
+either rewrite can flip the integer produced by a downstream ``floor``/
+``round`` (the ADC epilogue and the quantizers).  The repo's contract is
+that every product feeding a rounding op must be pinned behind
+``rounding_barrier`` (``jax.lax.optimization_barrier``) and every division
+by a trace-time constant must be pre-folded with ``_static_reciprocal``
+(see `repro.core.quantization`).
+
+This pass walks a traced jaxpr backwards from every float ``floor`` /
+``round`` / ``ceil`` sink and reports:
+
+  * **NB001** — an unbarriered ``mul`` reachable from a rounding sink
+    through value-preserving ops (the ``gain*dp`` pattern);
+  * **NB002** — a ``div`` by a non-power-of-two trace-time literal on such
+    a path (should be a ``_static_reciprocal`` multiply, barriered).
+
+The walk is transparent through ops that cannot introduce FMA contraction
+or reciprocal rewrites (add/sub/select/reshape/slice/...), stops safely at
+``optimization_barrier``, integer values, and scope inputs, and descends
+through ``pjit``/``custom_jvp_call``/``closed_call`` boundaries so sinks
+wrapped in ``ste_floor`` still see their caller's arithmetic.
+
+A light HLO-text cross-check (`lint_hlo_text`) additionally flags
+constant-divides living in the same compiled computation as a ``floor``
+(**NB101**, WARNING) — a weaker signal than the jaxpr walk, but it runs on
+the *scheduled* module after XLA had its say.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+
+from repro.analysis.findings import Finding, Report, Severity
+from repro.analysis.jaxpr_walk import (ClosedJaxpr, Jaxpr, Literal, Var,
+                                       def_map, is_float_var, is_pow2,
+                                       literal_value, source_summary,
+                                       subjaxprs)
+
+PASS_ID = "barriers"
+
+# Rounding primitives whose integer output depends on exact float bits.
+SINK_PRIMS = ("floor", "round", "ceil")
+
+# Value-preserving / contraction-immune ops the backward walk passes
+# through (all float invars are pushed; non-float invars drop out).
+TRANSPARENT_PRIMS = frozenset({
+    "add", "sub", "neg", "max", "min", "clamp", "select_n",
+    "broadcast_in_dim", "reshape", "transpose", "squeeze", "expand_dims",
+    "slice", "dynamic_slice", "rev", "concatenate", "pad", "stop_gradient",
+    "copy", "gather", "reduce_max", "reduce_min", "abs", "sign",
+})
+
+# Call-like primitives we descend through, mapping inner scope inputs back
+# to the caller's operands when the signatures line up 1:1.
+CALL_PRIMS = frozenset({
+    "pjit", "closed_call", "core_call", "custom_jvp_call",
+    "custom_vjp_call", "custom_vjp_call_jaxpr", "remat", "checkpoint",
+    "remat2",
+})
+
+
+@dataclass(frozen=True)
+class _Scope:
+    """One jaxpr scope plus how its invars map back to a caller."""
+
+    jaxpr: Jaxpr
+    defs: Dict[Any, Any]
+    parent: Optional["_Scope"]
+    call_eqn: Optional[Any]    # caller eqn when invars map 1:1, else None
+
+
+def _call_body(eqn) -> Optional[Jaxpr]:
+    subs = dict(subjaxprs(eqn))
+    for name in ("jaxpr", "call_jaxpr"):
+        if name in subs:
+            return subs[name]
+    return next(iter(subs.values()), None)
+
+
+def _child_scope(eqn, parent: _Scope) -> Optional[_Scope]:
+    body = _call_body(eqn)
+    if body is None:
+        return None
+    mapped = len(eqn.invars) == len(body.invars)
+    return _Scope(body, def_map(body), parent, eqn if mapped else None)
+
+
+class _Lint:
+    """Backward-walk state for one traced jaxpr."""
+
+    def __init__(self, where_prefix: str, layer: Optional[int]):
+        self.where_prefix = where_prefix
+        self.layer = layer
+        self.findings: List[Finding] = []
+        self._emitted: set = set()
+        self._visited: set = set()
+
+    def _emit(self, code: str, message: str, eqn, sink_where: str) -> None:
+        where = source_summary(eqn)
+        if sink_where and sink_where != where:
+            where = f"{where} -> sink {sink_where}"
+        if self.where_prefix:
+            where = f"{self.where_prefix}: {where}"
+        key = (code, message, where)
+        if key in self._emitted:
+            return
+        self._emitted.add(key)
+        self.findings.append(Finding(
+            pass_id=PASS_ID, code=code, severity=Severity.ERROR,
+            message=message, where=where, layer=self.layer))
+
+    def scan(self, root: Jaxpr) -> None:
+        """Find every rounding sink in every nested scope and trace back."""
+        stack = [_Scope(root, def_map(root), None, None)]
+        seen = set()
+        while stack:
+            scope = stack.pop()
+            if id(scope.jaxpr) in seen:
+                continue
+            seen.add(id(scope.jaxpr))
+            for eqn in scope.jaxpr.eqns:
+                if (eqn.primitive.name in SINK_PRIMS and eqn.invars
+                        and is_float_var(eqn.invars[0])):
+                    self._trace(eqn.invars[0], scope, source_summary(eqn))
+                child = (_child_scope(eqn, scope)
+                         if subjaxprs(eqn) else None)
+                if child is not None:
+                    stack.append(child)
+
+    # -- backward walk ----------------------------------------------------
+    def _trace(self, var, scope: _Scope, sink_where: str) -> None:
+        work: List[Tuple[Any, _Scope]] = [(var, scope)]
+        while work:
+            v, sc = work.pop()
+            if isinstance(v, Literal):
+                continue
+            if not is_float_var(v):
+                continue
+            vkey = (id(sc.jaxpr), v)
+            if vkey in self._visited:
+                continue
+            self._visited.add(vkey)
+            eqn = sc.defs.get(v)
+            if eqn is None:
+                # Scope input (invar or closed-over const).  Ascend to the
+                # caller's operand when the call mapped 1:1, else opaque.
+                if sc.call_eqn is not None and v in sc.jaxpr.invars:
+                    idx = sc.jaxpr.invars.index(v)
+                    work.append((sc.call_eqn.invars[idx], sc.parent))
+                continue
+            name = eqn.primitive.name
+            if name == "optimization_barrier":
+                continue
+            if name in TRANSPARENT_PRIMS:
+                for iv in eqn.invars:
+                    work.append((iv, sc))
+                continue
+            if name == "convert_element_type":
+                src = eqn.invars[0]
+                if is_float_var(src):
+                    work.append((src, sc))
+                continue
+            if name == "mul":
+                lits = [literal_value(iv) for iv in eqn.invars]
+                pow2_idx = next((i for i, lv in enumerate(lits)
+                                 if lv is not None and is_pow2(lv)), None)
+                if pow2_idx is not None:
+                    work.append((eqn.invars[1 - pow2_idx], sc))
+                    continue
+                self._emit(
+                    "NB001",
+                    "unbarriered float product reaches a rounding op; wrap "
+                    "the product in rounding_barrier(...) to pin it against "
+                    "FMA contraction", eqn, sink_where)
+                continue
+            if name == "div":
+                dlit = literal_value(eqn.invars[1])
+                if dlit is not None and not is_pow2(dlit):
+                    self._emit(
+                        "NB002",
+                        f"division by trace-time constant {dlit!r} reaches "
+                        "a rounding op; XLA may rewrite it as a reciprocal "
+                        "multiply — use _static_reciprocal + "
+                        "rounding_barrier", eqn, sink_where)
+                    continue
+                if dlit is not None and is_pow2(dlit):
+                    work.append((eqn.invars[0], sc))
+                continue   # traced divisor: div is itself an FMA boundary
+            if name in CALL_PRIMS:
+                child = _child_scope(eqn, sc)
+                if child is None:
+                    continue
+                try:
+                    idx = eqn.outvars.index(v)
+                except ValueError:
+                    continue
+                work.append((child.jaxpr.outvars[idx], child))
+                continue
+            # anything else (dot_general, reductions, rng, transcendentals,
+            # pallas_call, ...) produces a fresh value: safe stop.
+        return
+
+
+def lint_jaxpr(closed: ClosedJaxpr, *, where_prefix: str = "",
+               layer: Optional[int] = None) -> List[Finding]:
+    """Run the barrier lint over one traced (Closed)Jaxpr."""
+    root = closed.jaxpr if isinstance(closed, ClosedJaxpr) else closed
+    lint = _Lint(where_prefix, layer)
+    lint.scan(root)
+    return lint.findings
+
+
+def lint_callable(fn, *args, where_prefix: str = "", **kwargs) -> Report:
+    """Trace ``fn(*args, **kwargs)`` (ShapeDtypeStructs welcome) and lint."""
+    closed = jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
+    report = Report()
+    report.extend(lint_jaxpr(closed, where_prefix=where_prefix))
+    return report
+
+
+# -- scheduled-HLO cross-check -------------------------------------------
+
+_HLO_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\([^)]*\)\s*->",
+                          re.MULTILINE)
+_HLO_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*[\w\[\],{}\s/]*?\s"
+    r"([a-z][\w\-]*)\((.*?)\)(.*)$", re.MULTILINE)
+_HLO_REF_RE = re.compile(r"%([\w.\-]+)")
+_HLO_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+# HLO opcodes the backward walk passes through (the TRANSPARENT_PRIMS
+# analogue at the scheduled level)
+_HLO_TRANSPARENT = frozenset({
+    "add", "subtract", "negate", "maximum", "minimum", "clamp", "select",
+    "broadcast", "reshape", "transpose", "convert", "slice", "copy",
+    "concatenate", "pad", "reverse", "abs", "sign", "multiply",
+    "dynamic-slice", "get-tuple-element",
+})
+
+
+def lint_hlo_text(hlo_text: str, *, where_prefix: str = "",
+                  max_hops: int = 12) -> List[Finding]:
+    """WARNING-level cross-check on *scheduled* HLO text (code NB101).
+
+    By schedule time XLA has already turned constant divides into
+    reciprocal multiplies, but it preserves the originating jaxpr op in
+    metadata: the rewritten op is a ``multiply`` whose ``op_name`` ends in
+    ``/div``.  For every ``floor`` in the module this walks its producer
+    chain backwards (through elementwise/shape ops, up to ``max_hops``)
+    and flags such a rewrite on the path — the exact post-hoc signature
+    of the PR 7 bug, caught after XLA had its say.  Post-floor divides
+    (the dequantize path) never fire: the walk follows producers only,
+    and ``optimization_barrier`` stops it.
+    """
+    findings: List[Finding] = []
+    blocks = re.split(r"\n\s*\n", hlo_text)
+    for block in blocks:
+        comp = _HLO_COMP_RE.search(block)
+        if comp is None:
+            continue
+        defs = {}        # op name -> (opcode, [operand names], from_div)
+        for name, opcode, operands, rest in _HLO_OP_RE.findall(block):
+            refs = _HLO_REF_RE.findall(operands)
+            opname = _HLO_OPNAME_RE.search(rest)
+            from_div = bool(opname) and opname.group(1).endswith("/div")
+            defs[name] = (opcode, refs, from_div)
+        for name, (opcode, operands, _) in defs.items():
+            if opcode != "floor":
+                continue
+            work = [(op, 0) for op in operands]
+            seen = set()
+            while work:
+                ref, depth = work.pop()
+                if ref in seen or depth > max_hops or ref not in defs:
+                    continue
+                seen.add(ref)
+                sub_opcode, sub_ops, sub_from_div = defs[ref]
+                if sub_opcode in ("multiply", "divide") and sub_from_div:
+                    where = f"{comp.group(1)}/{name}"
+                    if where_prefix:
+                        where = f"{where_prefix}: {where}"
+                    findings.append(Finding(
+                        pass_id=PASS_ID, code="NB101",
+                        severity=Severity.WARNING,
+                        message="XLA rewrote a constant divide into a "
+                                "reciprocal multiply on a floor() path "
+                                "in the scheduled module; pre-fold it "
+                                "with _static_reciprocal + "
+                                "rounding_barrier", where=where))
+                    work = []
+                    continue
+                if sub_opcode in _HLO_TRANSPARENT:
+                    for op in sub_ops:
+                        work.append((op, depth + 1))
+    return findings

@@ -1,0 +1,121 @@
+"""Jaxpr traversal utilities shared by the cimcheck passes.
+
+JAX programs arrive as nested `ClosedJaxpr` scopes: the outer trace wraps
+`pjit`/`custom_jvp_call`/`scan`/`pallas_call`/`shard_map` equations whose
+params embed further jaxprs.  The passes in `repro.analysis` need
+
+  * `iter_scopes(jaxpr)` — depth-first enumeration of every nested scope,
+  * `subjaxprs(eqn)` — the child jaxprs embedded in one equation's params,
+  * `def_map(jaxpr)` — var -> defining-equation index within one scope,
+  * `source_summary(eqn)` — best-effort "file:line (fn)" location string,
+  * small literal/dtype helpers used by the barrier lint.
+
+Everything here treats jaxprs as read-only data; nothing is retraced.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+from jax.extend import core as jex_core
+from jax.extend import source_info_util as _siu
+
+Jaxpr = jex_core.Jaxpr
+ClosedJaxpr = jex_core.ClosedJaxpr
+Literal = jex_core.Literal
+Var = jex_core.Var
+
+
+def as_jaxpr(obj: Any) -> Optional[Jaxpr]:
+    """Unwrap ClosedJaxpr -> Jaxpr; pass Jaxpr through; else None."""
+    if isinstance(obj, ClosedJaxpr):
+        return obj.jaxpr
+    if isinstance(obj, Jaxpr):
+        return obj
+    return None
+
+
+def subjaxprs(eqn) -> List[Tuple[str, Jaxpr]]:
+    """Child jaxprs embedded in an equation's params.
+
+    Returns ``(param_name, jaxpr)`` pairs; params holding tuples/lists of
+    jaxprs (e.g. ``cond``'s branches) are flattened with an index suffix.
+    """
+    out: List[Tuple[str, Jaxpr]] = []
+    for name, val in eqn.params.items():
+        j = as_jaxpr(val)
+        if j is not None:
+            out.append((name, j))
+            continue
+        if isinstance(val, (tuple, list)):
+            for i, item in enumerate(val):
+                ji = as_jaxpr(item)
+                if ji is not None:
+                    out.append((f"{name}[{i}]", ji))
+    return out
+
+
+def iter_scopes(jaxpr: Jaxpr) -> Iterator[Jaxpr]:
+    """Depth-first over this scope and every nested sub-jaxpr scope."""
+    stack = [jaxpr]
+    seen = set()
+    while stack:
+        j = stack.pop()
+        if id(j) in seen:
+            continue
+        seen.add(id(j))
+        yield j
+        for eqn in j.eqns:
+            for _, sub in subjaxprs(eqn):
+                stack.append(sub)
+
+
+def def_map(jaxpr: Jaxpr) -> Dict[Any, Any]:
+    """Map each Var in one scope to the equation that defines it."""
+    defs: Dict[Any, Any] = {}
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            if isinstance(v, Var):
+                defs[v] = eqn
+    return defs
+
+
+def source_summary(eqn) -> str:
+    """Best-effort 'file:line (fn)' string for an equation."""
+    try:
+        return _siu.summarize(eqn.source_info)
+    except Exception:
+        return ""
+
+
+def literal_value(v) -> Optional[float]:
+    """The scalar float value of a Literal invar, else None."""
+    if not isinstance(v, Literal):
+        return None
+    val = v.val
+    try:
+        import numpy as np
+        arr = np.asarray(val)
+        if arr.size != 1:
+            return None
+        return float(arr.reshape(()))
+    except Exception:
+        return None
+
+
+def is_float_var(v) -> bool:
+    """True when the var/literal has an inexact (float) dtype."""
+    aval = getattr(v, "aval", None)
+    dtype = getattr(aval, "dtype", None)
+    if dtype is None:
+        return False
+    import numpy as np
+    return np.issubdtype(dtype, np.inexact)
+
+
+def is_pow2(x: float) -> bool:
+    """True for finite nonzero powers of two (incl. negative exponents)."""
+    import math
+    if x == 0.0 or not math.isfinite(x):
+        return False
+    m, _ = math.frexp(abs(x))
+    return m == 0.5

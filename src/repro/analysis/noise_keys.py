@@ -1,0 +1,200 @@
+"""Noise-key injectivity pass (pass id ``noise``).
+
+The engine's determinism/isolation contracts rest on every PRNG draw
+having a unique `fold_in` chain (see `engine._layer_noise`):
+
+  * SA-residue draws:       key -> (layer, 0)
+  * positional thermal:     key -> (layer, 1, row_tile, col_tile, row_block)
+  * identity-keyed thermal: key -> (layer, 1, row_tile, col_tile,
+                                    noise_id, sub)
+
+Because `jax.random.fold_in` is an iterated hash, two draws collide
+exactly when their complete integer chains are equal (cross-length
+equality is cryptographically negligible).  This pass statically
+enumerates every chain a plan can emit for a given row extent and proves
+the set collision-free, and additionally audits the `NOISE_ID_STRIDE`
+request-range allocator and the in-flight scheduler's id arithmetic.
+
+Finding codes:
+
+  * **NK001** — two enumerated fold chains collide (structural engine bug);
+  * **NK002** — duplicate explicit noise id within one fused batch;
+  * **NK003** — two requests' `NOISE_ID_STRIDE` id ranges overlap;
+  * **NK004** — a request's id range exceeds int32 (`request_index >= 2048`
+    wraps ``request_index * NOISE_ID_STRIDE`` — the
+    `program.request_noise_ids` overflow class);
+  * **NK005** — (WARNING) scheduler uid/call arithmetic can wrap its
+    2**31 modulus, silently reusing another request's id range.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.analysis.findings import Finding, Report, Severity
+
+PASS_ID = "noise"
+
+INT32_MAX = 0x7FFFFFFF
+
+
+def _stride() -> int:
+    from repro.runtime.program import NOISE_ID_STRIDE
+    return NOISE_ID_STRIDE
+
+
+def _row_block() -> int:
+    from repro.runtime.engine import NOISE_ROW_BLOCK
+    return NOISE_ROW_BLOCK
+
+
+def enumerate_fold_tuples(plan, m: int, *,
+                          noise_ids: Optional[Sequence[int]] = None,
+                          row_sub: Optional[Sequence[int]] = None
+                          ) -> List[Tuple[int, ...]]:
+    """Every complete fold_in chain the plan emits for row extent ``m``.
+
+    With ``noise_ids`` the thermal draws are identity-keyed (chains fold
+    (id, sub) per GEMM row); without, they are positional (chains fold the
+    global NOISE_ROW_BLOCK block index).
+    """
+    block = _row_block()
+    n_blocks = -(-max(m, 1) // block)
+    chains: List[Tuple[int, ...]] = []
+    for i, lp in enumerate(plan.layers):
+        chains.append((i, 0))                       # SA residue draw
+        for ki in range(len(lp.k_slices)):
+            for ni in range(len(lp.n_slices)):
+                if noise_ids is not None:
+                    subs = (list(row_sub) if row_sub is not None
+                            else [0] * len(noise_ids))
+                    for rid, sub in zip(noise_ids, subs):
+                        chains.append((i, 1, ki, ni, int(rid), int(sub)))
+                else:
+                    for b in range(n_blocks):
+                        chains.append((i, 1, ki, ni, b))
+    return chains
+
+
+def check_injectivity(plan, m: int, *,
+                      noise_ids: Optional[Sequence[int]] = None,
+                      row_sub: Optional[Sequence[int]] = None
+                      ) -> List[Finding]:
+    """NK001/NK002: prove the plan's fold-chain set is collision-free."""
+    findings: List[Finding] = []
+    if noise_ids is not None:
+        findings.extend(check_noise_ids(noise_ids, row_sub=row_sub))
+    seen: Dict[Tuple[int, ...], int] = {}
+    for chain in enumerate_fold_tuples(plan, m, noise_ids=noise_ids,
+                                       row_sub=row_sub):
+        if chain in seen:
+            seen[chain] += 1
+            if seen[chain] == 2:       # report each colliding chain once
+                findings.append(Finding(
+                    pass_id=PASS_ID, code="NK001", severity=Severity.ERROR,
+                    message=f"fold_in chain {chain} emitted more than once; "
+                            "independent noise draws would be identical",
+                    layer=chain[0]))
+        else:
+            seen[chain] = 1
+    return findings
+
+
+def check_noise_ids(noise_ids: Sequence[int], *,
+                    row_sub: Optional[Sequence[int]] = None
+                    ) -> List[Finding]:
+    """NK002: duplicate (noise_id, sub) pairs within one fused batch."""
+    findings: List[Finding] = []
+    subs = (list(row_sub) if row_sub is not None else [0] * len(noise_ids))
+    seen: Dict[Tuple[int, int], int] = {}
+    for rid, sub in zip((int(r) for r in noise_ids), subs):
+        pair = (rid, int(sub))
+        n = seen.get(pair, 0) + 1
+        seen[pair] = n
+        if n == 2:
+            findings.append(Finding(
+                pass_id=PASS_ID, code="NK002", severity=Severity.ERROR,
+                message=f"noise id {pair[0]} (sub {pair[1]}) appears more "
+                        "than once in a fused batch; the duplicated rows "
+                        "would share identity-keyed thermal draws"))
+    return findings
+
+
+def check_request_ranges(requests: Iterable[Tuple[int, int]]) -> List[Finding]:
+    """NK003/NK004: audit `request_noise_ids`-style (index, rows) ranges.
+
+    Each request ``(request_index, rows)`` claims ids
+    ``[request_index * NOISE_ID_STRIDE, request_index * NOISE_ID_STRIDE
+    + rows)``; ranges must stay disjoint and inside int32.
+    """
+    stride = _stride()
+    findings: List[Finding] = []
+    spans: List[Tuple[int, int, int]] = []
+    for idx, rows in requests:
+        lo = idx * stride
+        hi = lo + rows          # exclusive
+        if rows > stride:
+            findings.append(Finding(
+                pass_id=PASS_ID, code="NK003", severity=Severity.ERROR,
+                message=f"request {idx} needs {rows} ids but "
+                        f"NOISE_ID_STRIDE is {stride}; its range bleeds "
+                        "into the next request's"))
+        if idx < 0 or hi - 1 > INT32_MAX:
+            findings.append(Finding(
+                pass_id=PASS_ID, code="NK004", severity=Severity.ERROR,
+                message=f"request {idx} id range [{lo}, {hi}) leaves int32 "
+                        f"(max {INT32_MAX}); request_noise_ids would wrap "
+                        "into another request's range "
+                        "(request_index >= 2048 overflows)"))
+            continue
+        spans.append((lo, hi, idx))
+    spans.sort()
+    for (lo_a, hi_a, idx_a), (lo_b, hi_b, idx_b) in zip(spans, spans[1:]):
+        if lo_b < hi_a:
+            findings.append(Finding(
+                pass_id=PASS_ID, code="NK003", severity=Severity.ERROR,
+                message=f"requests {idx_a} and {idx_b} claim overlapping "
+                        f"noise-id ranges [{lo_a},{hi_a}) and "
+                        f"[{lo_b},{hi_b})"))
+    return findings
+
+
+def check_scheduler_limits(*, max_requests: int,
+                           max_calls_per_request: int) -> List[Finding]:
+    """NK005: can `CIMDecodeLM.noise_id(uid, call)` wrap its modulus?
+
+    ``noise_id = (uid * NOISE_ID_STRIDE + call) % 2**31``: the modulus
+    silently aliases uid 2048 onto uid 0, and a call counter reaching the
+    stride bleeds into uid+1's range.
+    """
+    stride = _stride()
+    findings: List[Finding] = []
+    if max_requests * stride > INT32_MAX + 1:
+        findings.append(Finding(
+            pass_id=PASS_ID, code="NK005", severity=Severity.WARNING,
+            message=f"serving {max_requests} requests exceeds the "
+                    f"{(INT32_MAX + 1) // stride} distinct uid ranges the "
+                    "2**31 noise-id modulus provides; ranges recycle"))
+    if max_calls_per_request > stride:
+        findings.append(Finding(
+            pass_id=PASS_ID, code="NK005", severity=Severity.WARNING,
+            message=f"a request may issue {max_calls_per_request} decode "
+                    f"calls but NOISE_ID_STRIDE is {stride}; its call "
+                    "counter bleeds into the next uid's id range"))
+    return findings
+
+
+def run(plan, m: int, *, noise_ids: Optional[Sequence[int]] = None,
+        row_sub: Optional[Sequence[int]] = None,
+        requests: Optional[Iterable[Tuple[int, int]]] = None,
+        max_requests: int = 0, max_calls_per_request: int = 0) -> Report:
+    """Run the full noise-key pass over one plan; returns a Report."""
+    report = Report()
+    report.extend(check_injectivity(plan, m, noise_ids=noise_ids,
+                                    row_sub=row_sub))
+    if requests is not None:
+        report.extend(check_request_ranges(requests))
+    if max_requests or max_calls_per_request:
+        report.extend(check_scheduler_limits(
+            max_requests=max_requests,
+            max_calls_per_request=max_calls_per_request))
+    return report

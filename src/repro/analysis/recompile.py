@@ -1,0 +1,160 @@
+"""Recompile-hazard pass (pass id ``recompile``).
+
+`serve.py --assert-no-recompile` catches executable-cache misses at
+runtime, after the damage; this pass bounds them at plan time.  Two
+checks:
+
+  * **RC001** — the statically-reachable executable-key set (the
+    `BatchBuckets` ladder x every operand-presence flag combination the
+    program's config allows) must be finite and within budget.  An
+    uncapped ladder or a flag that multiplies the key space past the
+    budget means steady-state serving keeps compiling.
+  * **RC002** — key-function sensitivity: perturbing any single
+    `EXEC_KEY_FIELDS` field must change the produced cache key.  A key
+    function that drops a field (e.g. forgets ``segmented``) aliases two
+    different trace signatures onto one cache entry — the cache reports a
+    hit while jit silently retraces (the "weak cache key" bug
+    `--assert-no-recompile` only sees in production).
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Callable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.findings import Finding, Report, Severity
+
+PASS_ID = "recompile"
+
+# a noise-enabled program reaches 24 flag combinations per ladder rung
+# (noise x bound x reference x segmented x identity, key tied to noise);
+# an 11-rung ladder (max_m=1024) is 264 keys — budget leaves ~2x headroom
+DEFAULT_KEY_BUDGET = 512
+
+# representative perturbation per EXEC_KEY_FIELDS field: (base, altered)
+_FIELD_PROBES = {
+    "kind": ("bucket", "exact"),
+    "extent": (8, 16),
+    "noise": (False, True),
+    "keyed": (False, True),
+    "devices": (1, 2),
+    "bound": (False, True),
+    "reference": (False, True),
+    "segmented": (False, True),
+    "identity": (False, True),
+}
+
+
+def reachable_keys(buckets, max_m: int, *, devices: int,
+                   noise_enabled: bool) -> Set[tuple]:
+    """Every executable key requests of extent 1..max_m can reach.
+
+    Flag combinations follow the dispatch rules: a PRNG key travels with
+    noise, identity ids only matter under noise, and bound/reference/
+    segmented are free axes.
+    """
+    from repro.runtime.program import executable_key
+    keys: Set[tuple] = set()
+    noise_opts = (False, True) if noise_enabled else (False,)
+    for m in buckets.ladder(max_m):
+        for noise, bound, reference, segmented in itertools.product(
+                noise_opts, (False, True), (False, True), (False, True)):
+            id_opts = (False, True) if noise else (False,)
+            for identity in id_opts:
+                keys.add(executable_key(
+                    "bucket", m, noise=noise, keyed=noise, devices=devices,
+                    bound=bound, reference=reference, segmented=segmented,
+                    identity=identity))
+    return keys
+
+
+def check_key_budget(buckets, max_m: int, *, devices: int,
+                     noise_enabled: bool,
+                     budget: int = DEFAULT_KEY_BUDGET) -> List[Finding]:
+    """RC001: the reachable key set must be finite and within budget."""
+    findings: List[Finding] = []
+    ladder = buckets.ladder(max_m)
+    if not ladder:
+        findings.append(Finding(
+            pass_id=PASS_ID, code="RC001", severity=Severity.ERROR,
+            message=f"empty bucket ladder for max_m={max_m}; every request "
+                    "extent would trace a fresh executable"))
+        return findings
+    # a sane ladder grows at most logarithmically (plus the cap grid)
+    import math
+    bound = int(math.log2(max(max_m, 1))) + 2
+    if buckets.max_bucket:
+        bound += -(-max_m // buckets.max_bucket)
+    if len(ladder) > bound:
+        findings.append(Finding(
+            pass_id=PASS_ID, code="RC001", severity=Severity.ERROR,
+            message=f"bucket ladder has {len(ladder)} rungs for "
+                    f"max_m={max_m} (expected <= {bound}); the ladder is "
+                    "not bounding the compile count"))
+    n = len(reachable_keys(buckets, max_m, devices=devices,
+                           noise_enabled=noise_enabled))
+    if n > budget:
+        findings.append(Finding(
+            pass_id=PASS_ID, code="RC001", severity=Severity.ERROR,
+            message=f"{n} statically-reachable executable keys exceed the "
+                    f"budget of {budget}; steady-state serving would keep "
+                    "compiling"))
+    return findings
+
+
+def check_key_sensitivity(key_fn: Optional[Callable] = None, *,
+                          fields: Sequence[str] = ()) -> List[Finding]:
+    """RC002: every key field must be discriminated by the key function.
+
+    ``key_fn(kind, extent, **flags)`` defaults to the runtime's real
+    `executable_key`; ``fields`` defaults to `EXEC_KEY_FIELDS`.
+    """
+    from repro.runtime import program as prog_mod
+    if key_fn is None:
+        key_fn = prog_mod.executable_key
+    if not fields:
+        fields = prog_mod.EXEC_KEY_FIELDS
+    base_kw = {f: probes[0] for f, probes in _FIELD_PROBES.items()
+               if f not in ("kind", "extent")}
+    findings: List[Finding] = []
+
+    def call(kind, extent, kw):
+        return key_fn(kind, extent, **kw)
+
+    base = call(_FIELD_PROBES["kind"][0], _FIELD_PROBES["extent"][0],
+                base_kw)
+    for field in fields:
+        if field not in _FIELD_PROBES:
+            findings.append(Finding(
+                pass_id=PASS_ID, code="RC002", severity=Severity.ERROR,
+                message=f"no perturbation probe for key field {field!r}; "
+                        "extend recompile._FIELD_PROBES alongside "
+                        "EXEC_KEY_FIELDS"))
+            continue
+        kind = (_FIELD_PROBES["kind"][1] if field == "kind"
+                else _FIELD_PROBES["kind"][0])
+        extent = (_FIELD_PROBES["extent"][1] if field == "extent"
+                  else _FIELD_PROBES["extent"][0])
+        kw = dict(base_kw)
+        if field not in ("kind", "extent"):
+            kw[field] = _FIELD_PROBES[field][1]
+        if call(kind, extent, kw) == base:
+            findings.append(Finding(
+                pass_id=PASS_ID, code="RC002", severity=Severity.ERROR,
+                message=f"executable cache key ignores the {field!r} "
+                        "field: two different trace signatures alias one "
+                        "cache entry and jit silently retraces"))
+    return findings
+
+
+def run(program, *, max_m: int = 1024,
+        budget: int = DEFAULT_KEY_BUDGET) -> Report:
+    """Run both recompile checks against a compiled `CIMProgram`."""
+    report = Report()
+    plan = program.plan
+    devices = (plan.cfg.sharding.resolve_devices()
+               if plan.cfg.sharding is not None else 1)
+    report.extend(check_key_budget(
+        program.buckets, max_m, devices=devices,
+        noise_enabled=plan.cfg.noise.enabled, budget=budget))
+    report.extend(check_key_sensitivity())
+    return report

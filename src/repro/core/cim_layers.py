@@ -42,7 +42,8 @@ from repro.core import noise_model as nm
 from repro.core.cim_macro import cim_macro_forward
 from repro.core.hw import CIMMacroConfig, DEFAULT_MACRO
 from repro.core.noise_model import NO_NOISE, NoiseConfig
-from repro.core.quantization import (ActQuant, adc_quantize, quantize_act,
+from repro.core.quantization import (ActQuant, _static_reciprocal,
+                                     adc_quantize, quantize_act,
                                      quantize_weight, rounding_barrier)
 
 
@@ -214,7 +215,10 @@ def _fakequant_forward(params: Dict, x: jnp.ndarray, cfg: CIMConfig,
         res_v = nm.sample_column_residues(k2, n, cfg.r_w, cfg.noise,
                                           cfg.macro)
         lsb_v = cfg.macro.alpha_adc() * cfg.macro.vddh / 2.0 ** (cfg.r_out - 1)
-        offset_codes = gamma * res_v / lsb_v
+        # volts -> codes: static-reciprocal + barrier keeps the offset on
+        # the ADC-floor path pinned (mirrors the engine's _layer_noise)
+        offset_codes = rounding_barrier(gamma * res_v
+                                        * _static_reciprocal(lsb_v))
     else:
         offset_codes = 0.0
 
@@ -246,7 +250,8 @@ def _fakequant_forward(params: Dict, x: jnp.ndarray, cfg: CIMConfig,
             # (single expression shared with the engine noise epilogue)
             dp = dp + nm.thermal_sigma_dp(cfg.noise, cfg.r_out, g0) \
                 * jax.random.normal(k1, dp.shape)
-        beta_eff = (params["abn_beta"] + offset_codes) + gain * zp_dp
+        beta_eff = (params["abn_beta"] + offset_codes) \
+            + rounding_barrier(gain * zp_dp)
         code = adc_quantize(dp, r_out=cfg.r_out, gain=gain,
                             beta_codes=beta_eff)
         dp_hat = dp_hat + (code - mid - params["abn_beta"]) / gain

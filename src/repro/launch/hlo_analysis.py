@@ -235,7 +235,10 @@ class HLOModule:
         """HBM traffic estimate: every materialized buffer is written once
         and read ~once downstream -> 2 x result bytes per op, with aliasing
         exceptions (while carries, in-place dynamic-update-slice, slices of
-        big buffers only move the slice).
+        big buffers only move the slice).  scatter writes in place — only
+        its update rows move, never the whole operand — and gather /
+        dynamic-slice move the gathered rows (the in-flight scheduler's
+        slot state updates and KV-cache reads).
 
         Pallas-kernel awareness: ops whose metadata op_name contains
         "vmem_kernel" (our named_scope marker around pl.pallas_call in
@@ -290,10 +293,25 @@ class HLOModule:
                         ub = _shape_elems_bytes(t)[1] if t else 0
                         total += 2.0 * ub * m
                     continue
+                if op.opcode == "scatter":
+                    # scatter(operand, indices, updates) writes in place:
+                    # only the update rows move (the scheduler's slot
+                    # state[slot] := row), never the whole operand — the
+                    # generic 2 x result-bytes rule would charge the full
+                    # state buffer per decode step
+                    ub = 0
+                    if len(op.operands) > 2:
+                        t = comp.symbols.get(op.operands[2])
+                        ub = _shape_elems_bytes(t)[1] if t else 0
+                    total += (ub if in_vmem else 2.0 * ub) * m
+                    continue
+                if op.opcode in ("gather", "dynamic-slice"):
+                    # gathered/sliced rows move, not the source buffer; in
+                    # VMEM context this is the HBM->VMEM DMA read stream
+                    _, rb = _shape_elems_bytes(op.result)
+                    total += (rb if in_vmem else 2.0 * rb) * m
+                    continue
                 if in_vmem:
-                    if op.opcode == "dynamic-slice":
-                        _, rb = _shape_elems_bytes(op.result)
-                        total += rb * m          # HBM <-> VMEM block DMA
                     continue                      # VMEM-resident compute
                 _, wb = _shape_elems_bytes(op.result)
                 total += 2.0 * wb * m

@@ -114,7 +114,7 @@ from repro.core import digital_ref, mapping
 from repro.core import noise_model as nm
 from repro.core.hw import CIMMacroConfig, DEFAULT_MACRO
 from repro.core.noise_model import NO_NOISE, NoiseConfig
-from repro.core.quantization import rounding_barrier
+from repro.core.quantization import _static_reciprocal, rounding_barrier
 from repro.kernels.cim_mbiw import ops as kops
 
 Params = List[Dict[str, jnp.ndarray]]
@@ -516,11 +516,15 @@ def _layer_noise(lp: LayerPlan, cfg: EngineConfig, noise: NoiseConfig,
                                       spec.r_w, noise, macro)
     res_v = _pad_dim(res_v, 0, gamma_p.shape[0])
     lsb0_v = macro.alpha_adc() * macro.vddh / 2.0 ** (spec.r_out - 1)
-    offset_codes = gamma_p * res_v / lsb0_v
+    # volts -> codes conversions feed the ADC floor: pre-fold the LSB
+    # divide into a trace-time reciprocal and pin the products, exactly
+    # like the gain*dp product in the ADC epilogue (cimcheck NB001/NB002)
+    inv_lsb0 = _static_reciprocal(lsb0_v)
+    offset_codes = rounding_barrier(gamma_p * res_v * inv_lsb0)
     # leakage droop on V_acc, attenuated by the weight-parallel combination
     droop_v = nm.leakage_droop(spec.r_in, macro.t_dp_ns, noise) \
         * (1.0 - 2.0 ** (-spec.r_w))
-    droop_codes = gamma_p * droop_v / lsb0_v
+    droop_codes = rounding_barrier(gamma_p * droop_v * inv_lsb0)
     settle = nm.settle_fraction(units, macro.t_dp_ns, noise)
     ci = nm.charge_injection_gain(spec.r_in, noise, macro)
     sigma_dp = nm.thermal_sigma_dp(noise, spec.r_out, lp.g0)
@@ -574,7 +578,9 @@ def _noise_adc_code(lp: LayerPlan, dp: jnp.ndarray, gamma_t: jnp.ndarray,
     ns, ne = n_slice
     dp = dp.astype(jnp.float32) + thermal
     mid = 2.0 ** (lp.spec.r_out - 1)
-    code = jnp.floor(mid + gamma_t * lp.g0 * nctx.gain_mult * dp + beta_eff
+    code = jnp.floor(mid + rounding_barrier(gamma_t * lp.g0
+                                            * nctx.gain_mult * dp)
+                     + beta_eff
                      + nctx.offset_codes[ns:ne] - nctx.droop_codes[ns:ne])
     return jnp.clip(code, 0.0, 2.0 ** lp.spec.r_out - 1.0).astype(jnp.int32)
 
@@ -608,7 +614,7 @@ def _tile_schedule(lp: LayerPlan, q_rows: jnp.ndarray, zp: jnp.ndarray,
             # zero-point: x = q*s + z -> z*colsum is per-channel constant,
             # folded into the ABN offset inside the ADC floor
             zp_dp = zp * jnp.sum(wqq[ks:ke, ns:ne], axis=0)
-            beta_eff = beta[ns:ne] + gain[ns:ne] * zp_dp
+            beta_eff = beta[ns:ne] + rounding_barrier(gain[ns:ne] * zp_dp)
             out = matmul(q_rows[:, ks:ke], wqq[ks:ke, ns:ne],
                          gamma[ns:ne], beta_eff, g0)
             if nctx is None:

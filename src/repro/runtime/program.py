@@ -114,9 +114,47 @@ def request_noise_ids(request_index: int, rows: int) -> jnp.ndarray:
     `(request_index, row)` maps to `request_index * NOISE_ID_STRIDE + row`
     (int32).  Both the fused serve_batch(isolate=True) path and a solo
     per-request serve must key thermal draws on the *same* ids for noise
-    runs to be bit-identical — use this helper on both sides."""
+    runs to be bit-identical — use this helper on both sides.
+
+    Raises ValueError when the range would leave int32: with the default
+    stride that is `request_index >= 2048`, where the old arithmetic
+    silently wrapped into another request's id range (x64 is disabled, so
+    the ids must genuinely fit int32)."""
+    if request_index < 0:
+        raise ValueError(f"request_index must be >= 0, got {request_index}")
+    if rows < 1:
+        raise ValueError(f"rows must be >= 1, got {rows}")
+    base = request_index * NOISE_ID_STRIDE       # python int: no wrap
+    if base + rows - 1 > 0x7FFFFFFF:
+        raise ValueError(
+            f"request_noise_ids({request_index}, {rows}) spans "
+            f"[{base}, {base + rows}) which overflows int32; at stride "
+            f"{NOISE_ID_STRIDE} only request indices < "
+            f"{(0x7FFFFFFF + 1) // NOISE_ID_STRIDE} are representable")
     return (jnp.arange(rows, dtype=jnp.int32)
-            + jnp.int32(request_index * NOISE_ID_STRIDE))
+            + jnp.int32(base))
+
+
+# the trace-signature fields an executable cache key must discriminate;
+# `executable_key` is the single constructor both dispatch paths and the
+# cimcheck recompile-hazard pass (analysis/recompile.py) share, so a field
+# added to the jit signature but dropped from the key is statically visible
+EXEC_KEY_FIELDS = ("kind", "extent", "noise", "keyed", "devices", "bound",
+                   "reference", "segmented", "identity")
+
+
+def executable_key(kind: str, extent: int, *, noise: bool, keyed: bool,
+                   devices: int, bound: bool, reference: bool,
+                   segmented: bool, identity: bool) -> tuple:
+    """The cache key of one executable trace signature.
+
+    Mirrors the jit static/presence signature of `_exec_jit`: dispatch
+    kind ("exact"/"bucket") and batch extent, plus every operand-presence
+    flag that changes the traced graph (noise operands, PRNG key, device
+    mesh, bound params, reference oracle, segment ids, noise-identity
+    ids).  Keep in sync with EXEC_KEY_FIELDS."""
+    return (kind, int(extent), bool(noise), bool(keyed), int(devices),
+            bool(bound), bool(reference), bool(segmented), bool(identity))
 
 
 @functools.partial(jax.jit, static_argnames=("plan",))
@@ -259,9 +297,11 @@ class CIMProgram:
         # the key tuple mirrors the jit trace signature: dispatch kind and
         # key presence both change the traced graph, so they discriminate
         self._note_executable(
-            ("exact", xc.shape[0], nz is not None, key is not None,
-             self._devices(), False, bool(reference),
-             seg is not None, nid is not None), bucketed=False)
+            executable_key("exact", xc.shape[0], noise=nz is not None,
+                           keyed=key is not None, devices=self._devices(),
+                           bound=False, reference=bool(reference),
+                           segmented=seg is not None,
+                           identity=nid is not None), bucketed=False)
         y = rt._exec_jit(self._plan, list(params), xc, None, key, nz,
                          seg, nid, False, bool(reference))
         return y.reshape(lead + y.shape[1:])
@@ -302,9 +342,11 @@ class CIMProgram:
                 nid = jnp.concatenate(
                     [nid, jnp.broadcast_to(nid[:1], (bucket - m,))])
         self._note_executable(
-            ("bucket", bucket, nz is not None, key is not None,
-             self._devices(), bound, reference,
-             seg is not None, nid is not None), bucketed=True)
+            executable_key("bucket", bucket, noise=nz is not None,
+                           keyed=key is not None, devices=self._devices(),
+                           bound=bound, reference=reference,
+                           segmented=seg is not None,
+                           identity=nid is not None), bucketed=True)
         y = rt._exec_jit(self._plan, payload, xc,
                          jnp.asarray(m, jnp.int32), key, nz, seg, nid,
                          bound, reference)
@@ -618,7 +660,8 @@ def compile_program(specs: Sequence[mapping.LayerSpec],
                     cfg: rt.EngineConfig = rt.EngineConfig(), *,
                     activations: Optional[Sequence[str]] = None,
                     pools: Optional[Sequence[int]] = None,
-                    buckets: BatchBuckets = DEFAULT_BUCKETS) -> CIMProgram:
+                    buckets: BatchBuckets = DEFAULT_BUCKETS,
+                    verify: str = "off") -> CIMProgram:
     """Compile (or fetch from the global cache) the program for a network.
 
     The cache key is (specs, cfg, activations, pools, buckets) — all
@@ -632,6 +675,11 @@ def compile_program(specs: Sequence[mapping.LayerSpec],
       cfg: shared EngineConfig (noise, sharding, macro, block sizes).
       activations/pools: per-layer epilogues (plan_network defaults).
       buckets: the serve-path batch-bucket ladder.
+      verify: cimcheck static verification of the fresh program —
+        "strict" raises `repro.analysis.CimcheckError` on any ERROR
+        finding, "warn" prints findings to stderr, "off" (default) skips.
+        Cache hits skip verification (the program was already checked or
+        deliberately not).
     Returns:
       The cached (or freshly planned) CIMProgram.
     """
@@ -650,6 +698,12 @@ def compile_program(specs: Sequence[mapping.LayerSpec],
         _PLAN_PROGRAMS[(plan, buckets)] = prog
         _CACHE_STATS["programs_built"] += 1
     _PROGRAM_CACHE[key] = prog
+    if verify != "off":
+        # inline verification lints the serving graphs (the trace is
+        # reused by jit warmup); the exhaustive variant sweep is
+        # scripts/cimcheck.py's job
+        from repro.analysis import verify_program
+        verify_program(prog, mode=verify, graphs="serving")
     return prog
 
 

@@ -1,0 +1,300 @@
+"""cimcheck static verification: clean on HEAD + golden seeded violations.
+
+Each pass must (a) report nothing on the repo's real programs and
+quantizers, and (b) catch a deliberately-seeded instance of exactly the
+bug class it exists for: a `rounding_barrier` stripped from a copy of the
+ADC epilogue (the pre-PR-7 pattern), a duplicated noise id in a fused
+batch, and an executable cache key that drops the segment flag.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import (CimcheckError, Report, Severity, Suppression,
+                            barriers, check_program, lint_callable,
+                            noise_keys, parse_suppressions, plan_checks,
+                            recompile, verify_program)
+from repro.core.mapping import LayerSpec
+from repro.core.noise_model import NoiseConfig
+from repro.core.quantization import (adc_quantize, quantize_act,
+                                     quantize_weight, rounding_barrier,
+                                     ste_floor)
+from repro.runtime.engine import EngineConfig, plan_network
+from repro.runtime.program import (EXEC_KEY_FIELDS, NOISE_ID_STRIDE,
+                                   compile_program, executable_key,
+                                   request_noise_ids)
+
+_X = jnp.ones((8,), jnp.float32)
+_G = jnp.full((8,), 1.5, jnp.float32)
+_B = jnp.zeros((8,), jnp.float32)
+
+
+def _dense_program(r_in=4, r_w=2, **cfg_kw):
+    specs = [LayerSpec(m=8, k=64, n=32, r_in=r_in, r_w=r_w)]
+    return compile_program(specs, EngineConfig(**cfg_kw))
+
+
+# ---------------------------------------------------------------------------
+# barrier lint
+# ---------------------------------------------------------------------------
+
+def test_barrier_lint_clean_on_real_quantizers():
+    w = jnp.ones((8, 4), jnp.float32)
+    assert lint_callable(
+        lambda dp, g, b: adc_quantize(dp, r_out=8, gain=g, beta_codes=b),
+        _X, _G, _B).codes() == []
+    assert lint_callable(lambda v: quantize_act(v, 4), _X).codes() == []
+    assert lint_callable(lambda v: quantize_weight(v, 2), w).codes() == []
+
+
+def test_barrier_lint_fires_on_stripped_barrier():
+    """Seeded violation: the ADC epilogue with its barrier stripped (the
+    exact pre-PR-7 pattern) must produce NB001."""
+    def bad_epilogue(dp, gain, beta):
+        mid = 2.0 ** 7
+        return jnp.floor(mid + gain * dp + beta)      # no rounding_barrier
+
+    codes = lint_callable(bad_epilogue, _X, _G, _B).codes()
+    assert codes == ["NB001"]
+
+    def good_epilogue(dp, gain, beta):
+        mid = 2.0 ** 7
+        return jnp.floor(mid + rounding_barrier(gain * dp) + beta)
+
+    assert lint_callable(good_epilogue, _X, _G, _B).codes() == []
+
+
+def test_barrier_lint_fires_on_constant_divide():
+    """NB002: div by a trace-time non-pow2 constant on a rounding path."""
+    codes = lint_callable(lambda v: jnp.round(v / 255.0), _X).codes()
+    assert codes == ["NB002"]
+    # powers of two divide exactly: no finding
+    assert lint_callable(lambda v: jnp.round(v / 256.0), _X).codes() == []
+    # traced divisors are an FMA boundary, not the reciprocal bug class
+    assert lint_callable(
+        lambda v, s: jnp.round(v / s), _X, jnp.float32(3.0)).codes() == []
+
+
+def test_barrier_lint_descends_into_ste_floor():
+    """The sink lives inside ste_floor's custom_jvp scope; the caller's
+    unbarriered product must still be reached."""
+    codes = lint_callable(lambda dp, g: ste_floor(g * dp + 8.0),
+                          _X, _G).codes()
+    assert codes == ["NB001"]
+    assert lint_callable(
+        lambda dp, g: ste_floor(rounding_barrier(g * dp) + 8.0),
+        _X, _G).codes() == []
+
+
+def test_barrier_lint_through_jit_boundary():
+    bad = jax.jit(lambda dp, g: jnp.floor(g * dp))
+    assert lint_callable(bad, _X, _G).codes() == ["NB001"]
+
+
+def test_hlo_cross_check_flags_reciprocal_rewrite():
+    """NB101: XLA's divide->reciprocal-multiply rewrite is visible in the
+    scheduled module's op_name metadata when it lands on a floor path."""
+    text = jax.jit(lambda x: jnp.floor(x / 3.0)).lower(_X) \
+        .compile().as_text()
+    assert [f.code for f in barriers.lint_hlo_text(text)] == ["NB101"]
+    # a divide *after* the floor (the dequantize path) must not fire
+    text2 = jax.jit(lambda x: jnp.floor(x * 2.0) / 3.0).lower(_X) \
+        .compile().as_text()
+    assert barriers.lint_hlo_text(text2) == []
+
+
+# ---------------------------------------------------------------------------
+# noise-key injectivity
+# ---------------------------------------------------------------------------
+
+def _plan():
+    return plan_network([LayerSpec(m=8, k=64, n=32, r_in=4, r_w=2)],
+                        EngineConfig())
+
+
+def test_noise_chains_clean_on_plan():
+    plan = _plan()
+    assert noise_keys.check_injectivity(plan, 8) == []
+    chains = noise_keys.enumerate_fold_tuples(plan, 300)
+    # 300 rows span 3 NOISE_ROW_BLOCK blocks per (layer, row, col) tile
+    assert len(chains) == len(set(chains))
+    assert any(len(c) == 2 for c in chains)       # residue draws
+    assert any(c[-1] == 2 for c in chains if len(c) == 5)
+
+
+def test_duplicate_noise_id_detected():
+    """Seeded violation: one noise id appears twice in a fused batch."""
+    plan = _plan()
+    findings = noise_keys.check_injectivity(
+        plan, 4, noise_ids=[100, 101, 100, 102])
+    assert {f.code for f in findings} == {"NK001", "NK002"}
+    # unique ids are clean
+    assert noise_keys.check_injectivity(
+        plan, 4, noise_ids=[100, 101, 102, 103]) == []
+    # identical ids with distinct sub-counters (conv im2col rows) are fine
+    assert noise_keys.check_noise_ids([7, 7], row_sub=[0, 1]) == []
+
+
+def test_request_range_overlap_and_overflow():
+    ok = noise_keys.check_request_ranges([(0, 64), (1, 64), (2046, 64)])
+    assert ok == []
+    codes = [f.code for f in noise_keys.check_request_ranges(
+        [(2048, 4)])]
+    assert codes == ["NK004"]                     # int32 wrap class
+    over = noise_keys.check_request_ranges([(0, NOISE_ID_STRIDE + 1)])
+    assert "NK003" in [f.code for f in over]      # bleeds into request 1
+
+
+def test_request_noise_ids_validates_int32():
+    """Satellite fix: request_index >= 2048 used to wrap int32 silently."""
+    ids = request_noise_ids(2047, 4)
+    assert int(ids[0]) == 2047 * NOISE_ID_STRIDE
+    assert ids.dtype == jnp.int32
+    with pytest.raises(ValueError, match="overflows int32"):
+        request_noise_ids(2048, 1)
+    with pytest.raises(ValueError):
+        request_noise_ids(-1, 4)
+    with pytest.raises(ValueError):
+        request_noise_ids(0, 0)
+    # the range end is checked, not just the base
+    with pytest.raises(ValueError, match="overflows int32"):
+        request_noise_ids(2047, NOISE_ID_STRIDE + 1)
+
+
+def test_scheduler_limit_warnings():
+    f = noise_keys.check_scheduler_limits(max_requests=4096,
+                                          max_calls_per_request=8)
+    assert [x.code for x in f] == ["NK005"]
+    assert all(x.severity == Severity.WARNING for x in f)
+    assert noise_keys.check_scheduler_limits(
+        max_requests=2048, max_calls_per_request=64) == []
+
+
+# ---------------------------------------------------------------------------
+# recompile hazards
+# ---------------------------------------------------------------------------
+
+def test_reachable_key_set_bounded():
+    prog = _dense_program()
+    rep = recompile.run(prog, max_m=1024)
+    assert rep.findings == []
+    keys = recompile.reachable_keys(prog.buckets, 1024, devices=1,
+                                    noise_enabled=False)
+    ladder = prog.buckets.ladder(1024)
+    assert len(keys) == 8 * len(ladder)       # 2^3 flag combos per rung
+
+
+def test_weak_cache_key_detected():
+    """Seeded violation: a key function that drops the segment flag."""
+    def weak_key(kind, extent, *, noise, keyed, devices, bound,
+                 reference, segmented, identity):
+        # 'segmented' intentionally ignored
+        return (kind, extent, noise, keyed, devices, bound, reference,
+                identity)
+
+    findings = recompile.check_key_sensitivity(weak_key)
+    assert [f.code for f in findings] == ["RC002"]
+    assert "segmented" in findings[0].message
+
+
+def test_real_executable_key_is_sensitive():
+    assert recompile.check_key_sensitivity() == []
+    # and every declared field has a probe
+    assert set(EXEC_KEY_FIELDS) <= set(recompile._FIELD_PROBES)
+
+
+def test_executable_key_shape():
+    k = executable_key("bucket", 8, noise=False, keyed=False, devices=1,
+                       bound=True, reference=False, segmented=True,
+                       identity=False)
+    assert len(k) == len(EXEC_KEY_FIELDS)
+    assert k[0] == "bucket" and k[1] == 8
+
+
+# ---------------------------------------------------------------------------
+# plan validator
+# ---------------------------------------------------------------------------
+
+def test_plan_validator_clean_on_head():
+    assert plan_checks.check_plan(_plan()) == []
+
+
+def test_plan_validator_flags_bad_precision():
+    plan = _plan()
+    lp = plan.layers[0]
+    bad = dataclasses.replace(lp, spec=dataclasses.replace(lp.spec, r_in=11))
+    f = plan_checks.check_layer(bad, plan.cfg.macro, 0)
+    assert "PV001" in [x.code for x in f]
+    bad_w = dataclasses.replace(lp, spec=dataclasses.replace(lp.spec, r_w=3))
+    f = plan_checks.check_layer(bad_w, plan.cfg.macro, 0)
+    assert "PV002" in [x.code for x in f]
+
+
+def test_plan_validator_flags_bad_tiles():
+    plan = _plan()
+    lp = plan.layers[0]
+    macro = plan.cfg.macro
+    # row tiles with a gap
+    bad = dataclasses.replace(lp, k_slices=((0, 32), (40, 24)))
+    assert "PV003" in [x.code for x in
+                       plan_checks.check_layer(bad, macro, 0)]
+    # a row tile beyond the macro's 1152 physical rows
+    big = dataclasses.replace(
+        lp, spec=dataclasses.replace(lp.spec, k=2000),
+        k_slices=((0, 2000),))
+    assert "PV004" in [x.code for x in
+                       plan_checks.check_layer(big, macro, 0)]
+
+
+# ---------------------------------------------------------------------------
+# integration: check_program / verify / suppressions
+# ---------------------------------------------------------------------------
+
+def test_check_program_clean_on_head_dense():
+    rep = check_program(_dense_program())
+    assert rep.findings == []
+    assert rep.ok()
+
+
+def test_check_program_clean_on_head_noise():
+    rep = check_program(_dense_program(noise=NoiseConfig(enabled=True)))
+    assert rep.findings == []
+
+
+def test_compile_program_verify_strict():
+    specs = [LayerSpec(m=8, k=32, n=16, r_in=2, r_w=1)]
+    prog = compile_program(specs, EngineConfig(), verify="strict")
+    assert prog is not None
+    with pytest.raises(ValueError, match="unknown cimcheck mode"):
+        Report().raise_if("bogus")
+
+
+def test_verify_strict_raises_on_errors():
+    prog = _dense_program()
+    rep = check_program(prog, key_budget=1)       # force an RC001 error
+    assert not rep.ok()
+    with pytest.raises(CimcheckError) as ei:
+        rep.raise_if("strict")
+    assert "RC001" in str(ei.value)
+    with pytest.raises(CimcheckError):
+        verify_program(prog, "strict", key_budget=1)
+
+
+def test_suppressions_waive_findings():
+    prog = _dense_program()
+    sups = parse_suppressions(["recompile/RC001:known ladder size"])
+    rep = check_program(prog, key_budget=1, suppressions=sups)
+    assert rep.ok()
+    assert [f.code for f in rep.suppressed] == ["RC001"]
+    assert sups[0].reason == "known ladder size"
+    assert Suppression("recompile", "*").matches(rep.suppressed[0])
+
+
+def test_report_json_roundtrip():
+    import json
+    rep = check_program(_dense_program())
+    payload = json.loads(rep.to_json())
+    assert payload["ok"] is True
+    assert payload["findings"] == []

@@ -57,6 +57,73 @@ ENTRY %main (p: f32[8,16]) -> f32[8,16] {
     assert c["all-reduce"]["bytes"] == 8 * 16 * 4
 
 
+_SCATTER_TXT = """
+HloModule scatter_test
+
+%assign (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] maximum(%a, %b)
+}
+
+ENTRY %main (state: f32[512,128], ids: s32[4,1], upd: f32[4,128]) -> f32[512,128] {
+  %state = f32[512,128]{1,0} parameter(0)
+  %ids = s32[4,1]{1,0} parameter(1)
+  %upd = f32[4,128]{1,0} parameter(2)
+  %g = f32[4,128]{1,0} gather(%state, %ids), offset_dims={1}, collapsed_slice_dims={0}, start_index_map={0}, index_vector_dim=1, slice_sizes={1,128}
+  ROOT %sc = f32[512,128]{1,0} scatter(%state, %ids, %upd), update_window_dims={1}, inserted_window_dims={0}, scatter_dims_to_operand_dims={0}, index_vector_dim=1, to_apply=%assign
+}
+"""
+
+
+def test_hlo_scatter_gather_synthetic():
+    """scatter charges its update rows, not the whole operand; gather
+    charges the gathered rows.  The generic 2x-result rule would bill the
+    scatter at 2 x 512x128x4 bytes (the full slot-state buffer) per decode
+    step instead of the 4 updated rows."""
+    mod = HLOModule(_SCATTER_TXT)
+    upd_bytes = 4 * 128 * 4
+    assert mod.hbm_bytes() == 2 * upd_bytes + 2 * upd_bytes
+
+
+_VMEM_TXT = """
+HloModule vmem_test
+
+ENTRY %main (state: f32[512,128], ids: s32[4,1], upd: f32[4,128]) -> f32[512,128] {
+  %state = f32[512,128]{1,0} parameter(0)
+  %ids = s32[4,1]{1,0} parameter(1)
+  %upd = f32[4,128]{1,0} parameter(2)
+  %g = f32[4,128]{1,0} gather(%state, %ids), offset_dims={1}, collapsed_slice_dims={0}, start_index_map={0}, index_vector_dim=1, slice_sizes={1,128}, metadata={op_name="jit(f)/vmem_kernel/gather"}
+  %ds = f32[4,128]{1,0} dynamic-slice(%state, %ids, %ids), dynamic_slice_sizes={4,128}, metadata={op_name="jit(f)/vmem_kernel/dynamic-slice"}
+  ROOT %dus = f32[512,128]{1,0} dynamic-update-slice(%state, %upd, %ids, %ids), metadata={op_name="jit(f)/vmem_kernel/dynamic-update-slice"}
+}
+"""
+
+
+def test_hlo_vmem_gather_slice_dma_accounted():
+    """In a vmem_kernel computation gather/dynamic-slice count once as the
+    HBM->VMEM DMA read stream (they used to be silently dropped), and the
+    dynamic-update-slice is folded into its paired read."""
+    mod = HLOModule(_VMEM_TXT)
+    row_bytes = 4 * 128 * 4
+    assert mod.hbm_bytes() == 2 * row_bytes   # gather DMA + slice DMA, 1x each
+
+
+def test_hlo_dynamic_slice_live_module():
+    """A compiled KV-cache-style read is billed for the slice it moves,
+    never the resident buffer."""
+    state = jax.ShapeDtypeStruct((4096, 256), jnp.float32)
+
+    @jax.jit
+    def f(s, i):
+        return jax.lax.dynamic_slice(s, (i, 0), (4, 256))
+
+    txt = f.lower(state, jax.ShapeDtypeStruct((), jnp.int32)) \
+        .compile().as_text()
+    b = HLOModule(txt).hbm_bytes()
+    assert 0 < b < 4096 * 256 * 4
+
+
 def test_cycle_model_regimes():
     """Eq. 9/10: deep-input layers are input-dominated; wide-output layers
     output-dominated."""
