@@ -434,6 +434,80 @@ def bench_llm_engine(steps=8):
     }
 
 
+def bench_autotune(devices=(1, 4)):
+    """Schedule-autotuner gate (ISSUE 9): tuned cost <= heuristic cost on
+    every zoo model x precision point, and tuned programs bit-exact.
+
+    The cost sweep is pure plan-time geometry (repro.tuner.tune_layer on
+    the LeNet conv chain and the olmo-1b projection GEMMs across the full
+    r_in x r_w grid, at 1 and 4 modeled devices — no fake-device mesh
+    needed, the roofline model only reads the partition arithmetic).  One
+    compiled point then checks the integrated path: a
+    compile_program(tune="analytic") program must serve bit-identically
+    to the untuned one."""
+    from repro.configs import get_smoke_config
+    from repro.core.cim_layers import CIMConfig, _engine_config
+    from repro.core.mapping import LayerSpec
+    from repro.models.cnn import lenet_engine_specs
+    from repro.runtime.engine import EngineConfig
+    from repro.runtime.program import compile_program
+    from repro.tuner import SEARCH_COUNT, tune_layer
+
+    def llm_specs(arch, r_in, r_w, m=8):
+        # the decoder projection GEMMs, same shapes scripts/cimcheck.py
+        # sweeps (fused QKV, O, fused gate_up, down)
+        c = get_smoke_config(arch)
+        hd = c.resolved_head_dim
+        shapes = [(c.d_model, (c.n_heads + 2 * c.n_kv_heads) * hd),
+                  (c.n_heads * hd, c.d_model),
+                  (c.d_model, 2 * c.d_ff), (c.d_ff, c.d_model)]
+        return [LayerSpec(m=m, k=k, n=n, r_in=r_in, r_w=r_w)
+                for k, n in shapes]
+
+    points = 0
+    wins = 0
+    ratio_sum = 0.0
+    all_le = True
+    n0 = SEARCH_COUNT["n"]
+    for r_in, r_w in PRECISIONS:
+        zoo = []
+        specs, _, _ = lenet_engine_specs(
+            8, cim=CIMConfig(r_in=r_in, r_w=r_w))
+        zoo.append(("lenet", specs, _engine_config(
+            CIMConfig(r_in=r_in, r_w=r_w))))
+        zoo.append(("olmo-1b", llm_specs("olmo-1b", r_in, r_w),
+                    EngineConfig()))
+        for _, specs, cfg in zoo:
+            for d in devices:
+                heur_s = tuned_s = 0.0
+                for spec in specs:
+                    _, rep = tune_layer(spec, cfg, d, cache=None)
+                    heur_s += rep["heuristic_s"]
+                    tuned_s += rep["predicted_s"]
+                points += 1
+                all_le &= tuned_s <= heur_s * (1 + 1e-12)
+                wins += tuned_s < heur_s
+                ratio_sum += tuned_s / max(heur_s, 1e-30)
+
+    spec = [LayerSpec(m=16, k=300, n=48, r_in=4, r_w=2)]
+    p0 = compile_program(spec, EngineConfig())
+    pt = compile_program(spec, EngineConfig(), tune="analytic",
+                         tune_cache="")
+    params = p0.init_params(jax.random.PRNGKey(0))
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(1), (6, 300)))
+    y0 = p0.bind(params).serve(x)
+    yt = pt.bind(params).serve(x)
+    match = bool(jnp.all(y0 == yt))
+    return {
+        "zoo_points": points,
+        "layers_searched": SEARCH_COUNT["n"] - n0,
+        "tuned_le_heuristic": bool(all_le),
+        "points_improved": int(wins),
+        "mean_cost_ratio": ratio_sum / max(points, 1),
+        "match": match,
+    }
+
+
 def _serving_row(out_json="BENCH_serving.json"):
     """Run bench_serving plus the in-flight arrival-rate sweep, merge both
     into one BENCH_serving.json, print the CSV rows, and return whether
@@ -460,6 +534,12 @@ def _serving_row(out_json="BENCH_serving.json"):
           f"hit{llm['program_cache_hit_rate']:.2f}_"
           f"reuse{llm['serve_reuse_factor']:.1f}x_match{llm['match']}")
     row["llm_engine"] = llm
+    at = bench_autotune()
+    print(f"serving_autotune,{at['zoo_points']},"
+          f"ratio{at['mean_cost_ratio']:.3f}_"
+          f"improved{at['points_improved']}_"
+          f"le{at['tuned_le_heuristic']}_match{at['match']}")
+    row["autotune"] = at
     vo = bench_verify_overhead()
     print(f"serving_verify_strict,{vo['verify_s'] * 1e3:.0f}ms,"
           f"plan{vo['plan_warmup_s'] * 1e3:.0f}ms_"
@@ -469,6 +549,7 @@ def _serving_row(out_json="BENCH_serving.json"):
         with open(out_json, "w") as fh:
             json.dump(row, fh, indent=2)
     return (row["match"] and llm["match"]
+            and at["match"] and at["tuned_le_heuristic"]
             and all(r["isolation_match"] for r in sweep))
 
 

@@ -17,12 +17,8 @@ from typing import Dict, List, Optional
 
 from repro.configs import all_archs, get_config
 from repro.configs.base import SHAPES
-from repro.core.hw import TPU_V5E
+from repro.core.hw import EFFECTIVE_LINKS, TPU_V5E
 from repro.models import transformer as tf
-
-# ICI links per chip used by our meshes: 2D torus -> ~4 usable links, but we
-# conservatively model 3 effective links for mixed AG/AR traffic patterns.
-EFFECTIVE_LINKS = 3.0
 
 
 def model_flops(arch_mod: str, shape_name: str) -> float:

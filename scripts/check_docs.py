@@ -42,6 +42,10 @@ API_MODULES = (
     "repro.analysis.noise_keys",
     "repro.analysis.recompile",
     "repro.analysis.plan_checks",
+    "repro.tuner",
+    "repro.tuner.cost",
+    "repro.tuner.search",
+    "repro.tuner.cache",
 )
 
 # markdown inline links, skipping images; target group up to the first ')'

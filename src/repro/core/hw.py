@@ -118,3 +118,8 @@ class TPUSpec:
 
 DEFAULT_MACRO = CIMMacroConfig()
 TPU_V5E = TPUSpec()
+
+# ICI links per chip used by our meshes: 2D torus -> ~4 usable links, but we
+# conservatively model 3 effective links for mixed AG/AR traffic patterns.
+# Shared by benchmarks/roofline.py and repro.tuner (one hardware table).
+EFFECTIVE_LINKS = 3.0

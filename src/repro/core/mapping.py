@@ -254,32 +254,43 @@ class LayerShard:
 
 
 def shard_layer(spec: LayerSpec, mp: MacroMapping,
-                devices: int) -> LayerShard:
+                devices: int, kind: Optional[str] = None) -> LayerShard:
     """Partition one mapped layer across a bank of `devices` macros.
 
     Col tiles are the natural parallel axis (they share inputs but touch
-    disjoint output channels); a layer offering at least one col tile per
-    device shards those.  Otherwise the schedule falls back to sharding the
-    GEMM-row dimension M (every device runs the full tile schedule on an
-    M/devices row block — bit-identical because GEMM rows are independent
-    through the elementwise ADC epilogue).
+    disjoint output channels); by default a layer offering at least one col
+    tile per device shards those.  Otherwise the schedule falls back to
+    sharding the GEMM-row dimension M (every device runs the full tile
+    schedule on an M/devices row block — bit-identical because GEMM rows
+    are independent through the elementwise ADC epilogue).
 
     Args:
       spec: the layer (spec.m supplies the GEMM-row extent for "rows").
-      mp:   its macro mapping (col_tiles decides the kind).
+      mp:   its macro mapping (col_tiles decides the default kind).
       devices: number of macros/devices (>= 1).
+      kind: None selects the >=D-col-tiles heuristic; an explicit "col" or
+        "rows" overrides it (the schedule autotuner scores both).  Both
+        overrides are always legal: "col" with fewer col tiles than
+        devices pads the tile count up with all-zero dummy tiles (the
+        efficiency reflects the idle devices), and "rows" merely splits
+        M.  Either way the single-macro numerics are untouched — columns
+        and GEMM rows never interact before the digital recombination.
     Returns:
       LayerShard; devices=1 degenerates to a single-device "col" plan with
       every tile on the one device.
     """
     if devices < 1:
         raise ValueError(f"devices must be >= 1, got {devices}")
-    if mp.col_tiles >= devices:
-        tiles_per_device = math.ceil(mp.col_tiles / devices)
+    if kind is None:
+        kind = "col" if mp.col_tiles >= devices else "rows"
+    if kind == "col":
+        tiles_per_device = max(1, math.ceil(mp.col_tiles / devices))
         eff = mp.col_tiles / (devices * tiles_per_device)
         return LayerShard(devices=devices, kind="col",
                           tiles_per_device=tiles_per_device,
                           rows_per_device=0, efficiency=eff)
+    if kind != "rows":
+        raise ValueError(f"shard kind must be 'col' or 'rows', got {kind!r}")
     rows_per_device = math.ceil(spec.m / devices)
     eff = spec.m / (devices * rows_per_device) if spec.m else 1.0
     return LayerShard(devices=devices, kind="rows", tiles_per_device=0,

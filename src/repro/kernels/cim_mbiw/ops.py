@@ -126,6 +126,41 @@ def _clamp_block(pref: int, dim: int, align: int = 8) -> int:
     return max(align, min(pref, -(-dim // align) * align))
 
 
+# preferred block-size palette the schedule autotuner (repro.tuner) searches;
+# every entry is clamped per tile, so the palette over-covers small tiles
+# harmlessly (duplicates collapse after clamping)
+BM_PALETTE = (32, 64, 128, 256)
+BN_PALETTE = (32, 64, 128, 256)
+BK_PALETTE = (128, 256, 512, 1024)
+
+
+def block_candidates(rows: int, k: int, n: int,
+                     bms: Tuple[int, ...] = BM_PALETTE,
+                     bns: Tuple[int, ...] = BN_PALETTE,
+                     bks: Tuple[int, ...] = BK_PALETTE
+                     ) -> Tuple[Tuple[int, int, int], ...]:
+    """Deduplicated legal (bm, bn, bk) block choices for one dispatched
+    tile of GEMM shape (rows, k) x (k, n).
+
+    Each palette entry is clamped to the tile geometry exactly like
+    `kernel_variant_for_tile` clamps its preferred blocks, so every
+    returned choice names a real compiled variant — and because the kernel
+    is numerically identical at any block size (exact int32 accumulation +
+    elementwise epilogue), choosing among them can never change a bit.
+    The schedule autotuner enumerates this set per layer."""
+    out: list = []
+    seen = set()
+    for bm in bms:
+        for bn in bns:
+            for bk in bks:
+                c = (_clamp_block(bm, rows), _clamp_block(bn, n),
+                     _clamp_block(bk, k))
+                if c not in seen:
+                    seen.add(c)
+                    out.append(c)
+    return tuple(out)
+
+
 def kernel_variant_for_tile(prec: KernelPrecision, rows: int, k: int, n: int,
                             *, bm: int = 256, bn: int = 256, bk: int = 512,
                             interpret: bool = True,

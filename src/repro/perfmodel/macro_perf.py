@@ -154,6 +154,11 @@ def schedule_report(plan, *, clock_ns: float = 10.0, pipelined: bool = True,
     macro invocations one device performs) and `parallel_efficiency`
     (useful work / devices x per-device work — 1.0 for an even split);
     the report totals gain the same two columns plus a "sharding" echo.
+
+    Autotuned plans (layers with `lp.blocks` set or a non-automatic shard
+    kind — see repro.tuner) additionally carry `rep["tune"]`: the chosen
+    (bm, bn, bk) blocks and shard kind, plus the roofline model's
+    predicted cost next to the heuristic schedule's cost.
     """
     noise = getattr(getattr(plan, "cfg", None), "noise", None)
     if noise is not None and noise.enabled:
@@ -186,6 +191,36 @@ def schedule_report(plan, *, clock_ns: float = 10.0, pipelined: bool = True,
                 "parallel_efficiency": shard.efficiency,
             }
             tot_evals_dev += evals_dev
+        blocks = getattr(lp, "blocks", None)
+        tuned_kind = None
+        if shard is not None and hasattr(lp, "mp"):
+            auto = "col" if lp.mp.col_tiles >= shard.devices else "rows"
+            if shard.kind != auto:
+                tuned_kind = shard.kind
+        if blocks is not None or tuned_kind is not None:
+            # this layer carries an autotuned schedule: echo the chosen
+            # blocks/kind and the roofline model's predicted-vs-heuristic
+            # cost.  Lazy import — repro.tuner imports this module, so a
+            # top-level import would cycle.
+            from repro.tuner import cost as _tc
+            from repro.tuner import search as _ts
+            cfg = getattr(plan, "cfg", None)
+            macro_cfg = getattr(cfg, "macro", DEFAULT_MACRO)
+            devices = shard.devices if shard is not None else 1
+            heur = _ts.heuristic_choice(lp.spec, cfg, macro_cfg)
+            chosen = _tc.ScheduleChoice(*(blocks or heur.blocks),
+                                        shard_kind=tuned_kind)
+            rep["tune"] = {
+                "blocks": tuple(blocks) if blocks is not None
+                else heur.blocks,
+                "shard_kind": shard.kind if shard is not None else None,
+                "predicted_s": _tc.layer_cost(
+                    lp.spec, chosen, devices=devices,
+                    macro=macro_cfg).total_s,
+                "heuristic_s": _tc.layer_cost(
+                    lp.spec, heur, devices=devices,
+                    macro=macro_cfg).total_s,
+            }
         if noise_echo["enabled"]:
             rep["noise"] = dict(noise_echo)   # per-layer copy, no aliasing
         layers.append(rep)

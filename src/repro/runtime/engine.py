@@ -209,7 +209,11 @@ class LayerPlan:
     spec.n — execution pads the column arrays and discards the excess.
     Uniformity is what lets col tiles dispatch SPMD across devices and
     keeps noise draws device-count independent.  `shard` is the layer's
-    device partition (None on single-device plans)."""
+    device partition (None on single-device plans).  `blocks` is an
+    optional per-layer (bm, bn, bk) kernel block-size override (the
+    schedule autotuner's knob); None uses the EngineConfig defaults —
+    either way the kernel is numerically identical at any block size, so
+    `blocks` only moves DMA traffic, never bits."""
     spec: mapping.LayerSpec
     mp: mapping.MacroMapping
     precision: kops.KernelPrecision
@@ -219,6 +223,7 @@ class LayerPlan:
     activation: str = "none"             # "none" | "relu"
     pool: int = 1                        # max-pool window/stride epilogue
     shard: Optional[mapping.LayerShard] = None
+    blocks: Optional[Tuple[int, int, int]] = None  # tuned (bm, bn, bk)
 
     @property
     def macro_evals(self) -> int:
@@ -277,7 +282,9 @@ def _layer_g0(spec: mapping.LayerSpec, mp: mapping.MacroMapping,
 
 
 def plan_layer(spec: mapping.LayerSpec, cfg: EngineConfig = EngineConfig(),
-               activation: str = "none", pool: int = 1) -> LayerPlan:
+               activation: str = "none", pool: int = 1, *,
+               blocks: Optional[Tuple[int, int, int]] = None,
+               shard_kind: Optional[str] = None) -> LayerPlan:
     """Plan one layer: macro mapping, uniform col tiles, device partition.
 
     Args:
@@ -286,11 +293,22 @@ def plan_layer(spec: mapping.LayerSpec, cfg: EngineConfig = EngineConfig(),
         LayerShard for cfg.sharding.resolve_devices() macros.
       activation: "none" | "relu" epilogue.
       pool: max-pool window/stride (conv layers only, 1 = none).
+      blocks: optional per-layer (bm, bn, bk) kernel block override (the
+        schedule autotuner's winner); None keeps cfg.bm/bn/bk.  Numerics-
+        neutral at any value (exact int32 accumulation).
+      shard_kind: optional explicit "col"/"rows" shard kind (requires
+        cfg.sharding); None keeps mapping.shard_layer's heuristic.
     Returns:
       LayerPlan (hashable; part of the jit-static NetworkPlan).
     """
     if pool < 1:
         raise ValueError(f"pool must be >= 1, got {pool}")
+    if blocks is not None:
+        blocks = tuple(int(b) for b in blocks)
+        if len(blocks) != 3 or min(blocks) < 1:
+            raise ValueError(f"blocks must be 3 positive ints, got {blocks}")
+    if shard_kind is not None and cfg.sharding is None:
+        raise ValueError("shard_kind override requires cfg.sharding")
     if pool > 1 and spec.conv is None:
         raise ValueError("pooling epilogue requires a conv layer")
     if spec.conv is not None:
@@ -306,12 +324,13 @@ def plan_layer(spec: mapping.LayerSpec, cfg: EngineConfig = EngineConfig(),
     prec = kops.KernelPrecision(spec.r_in, spec.r_w, spec.r_out)
     shard = None
     if cfg.sharding is not None:
-        shard = mapping.shard_layer(spec, mp, cfg.sharding.resolve_devices())
+        shard = mapping.shard_layer(spec, mp, cfg.sharding.resolve_devices(),
+                                    kind=shard_kind)
     return LayerPlan(
         spec=spec, mp=mp, precision=prec, g0=_layer_g0(spec, mp, cfg),
         k_slices=tuple(mapping.split_k_slices(spec.k, mp.row_tiles)),
         n_slices=tuple(mapping.split_even_slices(spec.n, mp.col_tiles)),
-        activation=activation, pool=pool, shard=shard)
+        activation=activation, pool=pool, shard=shard, blocks=blocks)
 
 
 def _check_chain(layers: Sequence[LayerPlan]) -> None:
@@ -352,7 +371,8 @@ def _check_chain(layers: Sequence[LayerPlan]) -> None:
 def plan_network(specs: Sequence[mapping.LayerSpec],
                  cfg: EngineConfig = EngineConfig(),
                  activations: Optional[Sequence[str]] = None,
-                 pools: Optional[Sequence[int]] = None) -> NetworkPlan:
+                 pools: Optional[Sequence[int]] = None, *,
+                 schedule: Optional[Sequence] = None) -> NetworkPlan:
     """Plan a feed-forward network of dense and conv-tagged LayerSpecs.
 
     `activations`: per-layer epilogue nonlinearity; defaults to relu between
@@ -360,6 +380,11 @@ def plan_network(specs: Sequence[mapping.LayerSpec],
     `pools`: per-layer max-pool window/stride (1 = none, conv layers only),
     applied after the activation — together with the automatic conv -> dense
     flatten this covers the paper's LeNet-class CNNs.
+    `schedule`: optional per-layer schedule overrides from the autotuner —
+    one `None` (heuristic) or `(blocks, shard_kind)` pair per layer, where
+    `blocks` is a (bm, bn, bk) tuple or None and `shard_kind` an explicit
+    "col"/"rows" or None.  Overrides never change numerics, only which
+    compiled kernel variants and device partition execute the same math.
     """
     specs = list(specs)
     if activations is None:
@@ -370,8 +395,16 @@ def plan_network(specs: Sequence[mapping.LayerSpec],
         pools = [1] * len(specs)
     if len(pools) != len(specs):
         raise ValueError("one pool factor per layer required")
-    layers = tuple(plan_layer(s, cfg, act, pool)
-                   for s, act, pool in zip(specs, activations, pools))
+    if schedule is None:
+        schedule = [None] * len(specs)
+    if len(schedule) != len(specs):
+        raise ValueError("one schedule override (or None) per layer "
+                         "required")
+    layers = tuple(plan_layer(
+        s, cfg, act, pool,
+        blocks=None if sc is None else sc[0],
+        shard_kind=None if sc is None else sc[1])
+        for s, act, pool, sc in zip(specs, activations, pools, schedule))
     _check_chain(layers)
     PLAN_COUNT["n"] += 1
     return NetworkPlan(layers=layers, cfg=cfg)
@@ -822,6 +855,10 @@ def _kernel_matmul(lp: LayerPlan, cfg: EngineConfig):
     # under noise the kernel dispatches in raw-dp mode; the noise ADC
     # epilogue in _tile_schedule owns the conversion
     fuse = not cfg.noise.enabled
+    # per-layer tuned blocks (autotuner winners) override the config-wide
+    # defaults; the kernel is bit-identical at any block size
+    bm, bn, bk = lp.blocks if lp.blocks is not None \
+        else (cfg.bm, cfg.bn, cfg.bk)
 
     def matmul(xq, wqt, gamma_t, beta_t, g0):
         # variant cache keyed on the dispatched tile geometry: per-device
@@ -829,7 +866,7 @@ def _kernel_matmul(lp: LayerPlan, cfg: EngineConfig):
         # full-macro padding
         fn = kops.kernel_variant_for_tile(
             lp.precision, xq.shape[0], xq.shape[1], wqt.shape[1],
-            bm=cfg.bm, bn=cfg.bn, bk=cfg.bk, interpret=cfg.interpret,
+            bm=bm, bn=bn, bk=bk, interpret=cfg.interpret,
             fuse_adc=fuse)
         return fn(xq, wqt, gamma_t, beta_t, g0)
     return matmul

@@ -661,14 +661,16 @@ def compile_program(specs: Sequence[mapping.LayerSpec],
                     activations: Optional[Sequence[str]] = None,
                     pools: Optional[Sequence[int]] = None,
                     buckets: BatchBuckets = DEFAULT_BUCKETS,
-                    verify: str = "off") -> CIMProgram:
+                    verify: str = "off", tune: str = "off",
+                    tune_cache: Optional[str] = None) -> CIMProgram:
     """Compile (or fetch from the global cache) the program for a network.
 
     The cache key is (specs, cfg, activations, pools, buckets) — all
-    hashable plan inputs — so every caller of an equal network shares one
-    NetworkPlan (planned once; engine.PLAN_COUNT counts) and one
-    executable cache.  This is the single entry point the model-facing
-    layers (cim_layers engine mode, models/cnn, launch/serve) go through.
+    hashable plan inputs — plus, when tuning, (tune mode, resolved cache
+    path) — so every caller of an equal network shares one NetworkPlan
+    (planned once; engine.PLAN_COUNT counts) and one executable cache.
+    This is the single entry point the model-facing layers (cim_layers
+    engine mode, models/cnn, launch/serve) go through.
 
     Args:
       specs: the network's (conv-tagged) LayerSpecs, in order.
@@ -680,18 +682,42 @@ def compile_program(specs: Sequence[mapping.LayerSpec],
         finding, "warn" prints findings to stderr, "off" (default) skips.
         Cache hits skip verification (the program was already checked or
         deliberately not).
+      tune: schedule autotuning — "off" (default) plans with the
+        EngineConfig heuristics; "analytic" searches block sizes and
+        shard kinds with the repro.tuner roofline model; "measure"
+        additionally wall-clock times the analytic top-k.  Tuning is
+        numerics-neutral: the tuned program's outputs are bit-identical
+        to tune="off" (tests/test_tuner.py fuzzes this), and a layer
+        whose search keeps the heuristic produces the *same* plan object
+        (hash-equal), sharing its executables.
+      tune_cache: autotune cache file; None uses
+        repro.tuner.default_cache_path(), "" disables persistence for
+        this compile.  Corrupt/stale caches degrade to heuristic
+        schedules with a TuneCacheWarning — never an error.
     Returns:
       The cached (or freshly planned) CIMProgram.
     """
+    if tune not in ("off", "analytic", "measure"):
+        raise ValueError(
+            f'tune must be "off", "analytic" or "measure", got {tune!r}')
     specs = tuple(specs)
     acts, pls = _canonical_epilogues(len(specs), activations, pools)
     key = (specs, cfg, acts, pls, buckets)
+    if tune != "off":
+        from repro import tuner
+        resolved = (tuner.default_cache_path() if tune_cache is None
+                    else tune_cache)
+        key = key + (tune, resolved)
     _CACHE_STATS["lookups"] += 1
     prog = _PROGRAM_CACHE.get(key)
     if prog is not None:
         _CACHE_STATS["hits"] += 1
         return prog
-    plan = rt.plan_network(specs, cfg, acts, pls)
+    if tune != "off":
+        plan, _ = tuner.tune_network(specs, cfg, acts, pls, mode=tune,
+                                     cache_path=resolved)
+    else:
+        plan = rt.plan_network(specs, cfg, acts, pls)
     prog = _PLAN_PROGRAMS.get((plan, buckets))
     if prog is None:
         prog = CIMProgram(plan, buckets)

@@ -1,0 +1,33 @@
+"""Roofline-driven schedule autotuner for compiled CIM programs.
+
+Three pieces, one invariant:
+
+  * `cost` — the analytic per-layer roofline model (macro evals, kernel
+    DMA bytes, collective bytes) on the shared `core.hw` tables.
+  * `search` — the plan-time candidate scan (`tune_network`), heuristic
+    candidate scored first so tuned cost <= heuristic cost always.
+  * `cache` — the versioned on-disk winner store; corrupt or stale files
+    degrade to the heuristic with a warning, never a crash.
+
+The invariant: tuning NEVER changes numerics.  Block sizes only move DMA
+traffic (exact int32 accumulation), shard kinds are bit-exact partitions,
+and noise draws are keyed per global row block — so a tuned program's
+outputs are bit-identical to the heuristic program's, fuzzed and gated by
+tests/test_tuner.py.
+
+Entry points: `runtime.program.compile_program(..., tune="analytic")`
+for the integrated path, or `search.tune_network` directly.
+"""
+from repro.tuner.cache import (SCHEMA_VERSION, TuneCache, TuneCacheWarning,
+                               cache_key, default_cache_path)
+from repro.tuner.cost import (LayerCost, ScheduleChoice, kernel_dma_bytes,
+                              layer_cost)
+from repro.tuner.search import (SEARCH_COUNT, heuristic_choice,
+                                layer_candidates, tune_layer, tune_network)
+
+__all__ = [
+    "SCHEMA_VERSION", "TuneCache", "TuneCacheWarning", "cache_key",
+    "default_cache_path", "LayerCost", "ScheduleChoice", "kernel_dma_bytes",
+    "layer_cost", "SEARCH_COUNT", "heuristic_choice", "layer_candidates",
+    "tune_layer", "tune_network",
+]

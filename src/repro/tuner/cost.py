@@ -1,0 +1,168 @@
+"""Analytic roofline cost model for CIM schedule candidates.
+
+One `ScheduleChoice` — a (bm, bn, bk) kernel block triple plus an optional
+explicit shard kind — is scored per layer with the same hardware tables the
+rest of the repo uses (one source of truth each):
+
+  * macro time: per-device macro evaluations x `macro_perf.cim_eval_time_ns`
+    (the Sec. III.C/D phase sequence).  The eval counts agree EXACTLY with
+    `macro_perf.AcceleratorPerfModel.layer_report["macro_evals"]` and with
+    `schedule_report`'s per-device shard counts — tested, not assumed.
+  * DMA time: the host-side HBM<->VMEM bytes the Pallas kernel's BlockSpecs
+    declare, divided by `hw.TPU_V5E.hbm_bw`.  The byte model mirrors the
+    kernel's grid (M/bm, N/bn, P*K/bk): the x tile re-streams once per
+    column block, the w tile once per row block and per input plane, the
+    int32 out tile writes once — the same dynamic-slice/DUS traffic
+    `launch/hlo_analysis.hbm_bytes` counts on the lowered module.  This is
+    the only term the block sizes move, which is exactly why tuning them is
+    numerics-neutral.
+  * collective time: the all-gather bytes a sharded layer exchanges
+    (output columns under "col", output rows under "rows"), divided by
+    `hw.EFFECTIVE_LINKS * hw.TPU_V5E.ici_bw_per_link` — the identical
+    expression `benchmarks/roofline.py` uses.
+
+The score is the roofline bound max(t_macro, t_dma, t_collective); ties
+break toward lower DMA traffic and then toward the heuristic choice (the
+search guarantees tuned cost <= heuristic cost by always scoring the
+heuristic candidate itself).
+
+Everything here is pure integer/float geometry — no jax, no arrays — so
+plan-time search over a few hundred candidates costs microseconds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+from repro.core import mapping
+from repro.core.hw import (CIMMacroConfig, DEFAULT_MACRO, EFFECTIVE_LINKS,
+                           TPU_V5E, TPUSpec)
+from repro.kernels.cim_mbiw.kernel import plane_layout
+from repro.perfmodel.macro_perf import cim_eval_time_ns
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleChoice:
+    """One candidate schedule for a layer: kernel blocks + shard kind.
+
+    `shard_kind` is None for unsharded plans (and for "keep the heuristic
+    kind" on sharded ones); "col"/"rows" forces the partition.  Choices
+    are hashable — they key the autotune cache entries."""
+    bm: int
+    bn: int
+    bk: int
+    shard_kind: Optional[str] = None
+
+    @property
+    def blocks(self) -> Tuple[int, int, int]:
+        """The (bm, bn, bk) triple, the kernel-variant knob."""
+        return (self.bm, self.bn, self.bk)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerCost:
+    """Analytic cost of one (layer, ScheduleChoice, device count) point.
+
+    Counts are exact geometry (macro_evals matches macro_perf's
+    layer_report bit for bit); times are roofline terms on the shared
+    hardware tables.  `total_s` is the roofline bound max(macro, dma,
+    collective) — the scalar the search minimizes."""
+    macro_evals: int              # total macro invocations (all devices)
+    macro_evals_per_device: int   # critical-path invocations on one device
+    adc_conversions: int          # column conversions (evals x tile chans)
+    dma_bytes: int                # per-device kernel HBM<->VMEM traffic
+    collective_bytes: int         # per-device all-gather bytes received
+    t_macro_s: float
+    t_dma_s: float
+    t_collective_s: float
+    total_s: float
+
+    def score(self) -> Tuple[float, float, int]:
+        """Lexicographic comparison key: roofline bound, then DMA time,
+        then raw DMA bytes (stable tie-breaking across candidates)."""
+        return (self.total_s, self.t_dma_s, self.dma_bytes)
+
+
+def _pad_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def kernel_dma_bytes(rows: int, k: int, n: int, bm: int, bn: int, bk: int,
+                     n_planes: int) -> int:
+    """HBM<->VMEM bytes one kernel dispatch of a (rows, k) x (k, n) tile
+    moves at the given block sizes.
+
+    Mirrors the kernel's BlockSpecs on the padded operands (grid
+    (M/bm, N/bn, P*K/bk), plane-major K innermost): the int8 x tile is
+    re-fetched for every column block, the int8 w tile for every row block
+    and every plane (the kernel's documented P-redundant w traffic), the
+    (1, bn) gamma/beta rows per (i, j) step, and the int32 out tile is
+    written once per (i, j) — its block index is constant across the
+    innermost K axis, so it stays resident in VMEM."""
+    mp_ = _pad_up(max(rows, 1), bm)
+    kp = _pad_up(max(k, 1), bk)          # per-plane padded K
+    np_ = _pad_up(max(n, 1), bn)
+    x_bytes = mp_ * n_planes * kp * (np_ // bn)          # int8
+    w_bytes = (mp_ // bm) * n_planes * kp * np_          # int8
+    out_bytes = mp_ * np_ * 4                            # int32, one write
+    gb_bytes = 2 * (mp_ // bm) * np_ * 4                 # gamma + beta rows
+    return x_bytes + w_bytes + out_bytes + gb_bytes
+
+
+def layer_cost(spec: mapping.LayerSpec, choice: ScheduleChoice, *,
+               devices: int = 1, macro: CIMMacroConfig = DEFAULT_MACRO,
+               tpu: TPUSpec = TPU_V5E) -> LayerCost:
+    """Score one layer under one schedule choice on `devices` macros.
+
+    The macro term uses the per-device critical-path eval count (the same
+    shard arithmetic `macro_perf.schedule_report` reports); the DMA term
+    sums the per-device kernel dispatches' declared traffic; the
+    collective term charges the output all-gather of the chosen shard
+    kind.  devices=1 has no collective and the full schedule on the one
+    device, whatever `choice.shard_kind` says."""
+    if devices < 1:
+        raise ValueError(f"devices must be >= 1, got {devices}")
+    mp = mapping.map_layer(spec, macro)
+    kt, nt = mp.row_tiles, mp.col_tiles
+    tile_n = math.ceil(spec.n / nt)      # uniform col-tile width
+    _, n_planes = plane_layout(spec.r_in)
+    evals_total = mp.macro_evals * spec.m
+    if devices == 1:
+        rows_local, nt_local = spec.m, nt
+        evals_dev = evals_total
+        coll_bytes = 0
+    else:
+        shard = mapping.shard_layer(spec, mp, devices,
+                                    kind=choice.shard_kind)
+        if shard.kind == "col":
+            rows_local = spec.m
+            nt_local = shard.tiles_per_device
+            evals_dev = kt * nt_local * spec.m
+            # all-gather of the output columns: each device receives the
+            # other devices' (m, tiles_per_device * tile_n) int32 slabs
+            n_tot = shard.devices * nt_local * tile_n
+            coll_bytes = spec.m * (n_tot - nt_local * tile_n) * 4
+        else:
+            rows_local = shard.rows_per_device
+            nt_local = nt
+            evals_dev = mp.macro_evals * rows_local
+            # all-gather of the output rows (padded col extent)
+            m_tot = shard.devices * rows_local
+            coll_bytes = (m_tot - rows_local) * nt * tile_n * 4
+    t_eval_ns = cim_eval_time_ns(spec.r_in, spec.r_w, spec.r_out, macro)
+    t_macro = evals_dev * t_eval_ns * 1e-9
+    # per-device DMA: one kernel dispatch per (row tile, local col tile);
+    # every row tile spans mp.rows_per_tile rows (the last may be smaller —
+    # charging it full keeps the model monotone and upper-bounding)
+    dma = nt_local * kt * kernel_dma_bytes(
+        rows_local, mp.rows_per_tile, tile_n, choice.bm, choice.bn,
+        choice.bk, n_planes)
+    t_dma = dma / tpu.hbm_bw
+    t_coll = coll_bytes / (EFFECTIVE_LINKS * tpu.ici_bw_per_link)
+    return LayerCost(
+        macro_evals=evals_total, macro_evals_per_device=evals_dev,
+        adc_conversions=evals_dev * min(tile_n, spec.n),
+        dma_bytes=dma, collective_bytes=coll_bytes,
+        t_macro_s=t_macro, t_dma_s=t_dma, t_collective_s=t_coll,
+        total_s=max(t_macro, t_dma, t_coll))
