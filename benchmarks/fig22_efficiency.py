@@ -81,6 +81,29 @@ def run_engine_precision_sweep(m=32, iters=2):
     return rows
 
 
+def run_precision_ladder(n_trials=2, batch=4):
+    """Fig. 22 through the accuracy-budget planner: calibrate a per-layer
+    sensitivity profile on a small chain, plan the quality/balanced/
+    throughput operating points, and report each point's projected
+    efficiency next to its predicted quality delta — the workload-
+    adaptive serving trade-off curve (repro.precision)."""
+    from repro.precision import calibrate, plan_ladder
+    from repro.runtime.engine import EngineConfig
+
+    specs = (LayerSpec(m=8, k=128, n=64, r_in=8, r_w=4),
+             LayerSpec(m=8, k=64, n=32, r_in=8, r_w=4),
+             LayerSpec(m=8, k=32, n=16, r_in=8, r_w=4))
+    cfg = EngineConfig()
+    prof = calibrate(specs, cfg, n_trials=n_trials, batch=batch,
+                     label="fig22-ladder")
+    ladder = plan_ladder(prof, specs, cfg)
+    rows = []
+    for name, rep in ladder.report().items():
+        rows.append((name, rep["assignment"], rep["predicted_delta"],
+                     rep["tops_per_w"]))
+    return rows
+
+
 def main():
     t0 = time.time()
     for r_in, r_out, pops, tops in run_fig22a():
@@ -94,6 +117,10 @@ def main():
     for r_in, r_w, us, tops, tpw, exact in run_engine_precision_sweep():
         print(f"fig22_engine_rin{r_in}_rw{r_w},{us:.0f},"
               f"{tops:.2f}TOPS_{tpw:.1f}TOPSpW_exact{exact}")
+    for name, asg, delta, tpw in run_precision_ladder():
+        tag = "-".join(f"{ri}x{rw}" for ri, rw in asg)
+        print(f"fig22_ladder_{name},0,"
+              f"{tag}_{tpw:.2f}TOPSpW_delta{delta:.4f}")
     us = (time.time() - t0) * 1e6
     print(f"fig22_23_total,{us:.0f},done")
 

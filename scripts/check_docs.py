@@ -46,6 +46,9 @@ API_MODULES = (
     "repro.tuner.cost",
     "repro.tuner.search",
     "repro.tuner.cache",
+    "repro.precision",
+    "repro.precision.sensitivity",
+    "repro.precision.planner",
 )
 
 # markdown inline links, skipping images; target group up to the first ')'

@@ -5,9 +5,11 @@ Compiles every zoo workload (LeNet conv chain, the olmo-1b and
 phi3.5-moe projection GEMMs) across the precision grid and runs every
 `repro.analysis` pass over the resulting programs: numerics-barrier lint,
 noise-key injectivity, recompile-hazard budget, plan validation.  A
-noise-enabled LeNet point and (when more than one device is visible) a
-sharded LeNet point ride along, plus an optional scheduled-HLO
-cross-check on a small dense probe.
+noise-enabled LeNet point, (when more than one device is visible) a
+sharded LeNet point, and a mixed-precision-per-layer ladder point (the
+program shape the repro.precision planner emits, recompile-budgeted
+across the full operating-point tag set) ride along, plus an optional
+scheduled-HLO cross-check on a small dense probe.
 
 Exit status: nonzero under --strict when any ERROR finding survives the
 suppressions.  --json writes the machine-readable findings (the CI
@@ -38,6 +40,10 @@ from repro.runtime.program import compile_program
 R_IN_GRID = (1, 2, 4, 8)
 R_W_GRID = (1, 2, 4)
 ARCHS = ("lenet", "olmo-1b", "phi3.5-moe-42b-a6.6b")
+
+# the operating-point tags a full precision ladder serves under: RC001
+# budgets the executable-key set they multiply into (recompile pass)
+LADDER_POINTS = ("", "quality", "balanced", "throughput")
 
 
 def _llm_specs(arch: str, r_in: int, r_w: int, m: int = 8
@@ -77,18 +83,34 @@ def _programs_for(arch: str, r_in: int, r_w: int):
     return out
 
 
-def _extra_points() -> List[Tuple[str, object]]:
-    """Noise-enabled and (if the mesh allows) sharded LeNet points."""
+def _extra_points() -> List[Tuple[str, object, Tuple[str, ...]]]:
+    """Noise-enabled, sharded, and mixed-precision-ladder points.
+
+    Each entry is (label, program, points): `points` is the serving
+    operating-point tag set the recompile pass budgets the program's
+    executable keys against (("",) except for the ladder point, which
+    sweeps the full `LADDER_POINTS` key multiplication)."""
     from repro.models.cnn import lenet_engine_specs
     out = []
     specs, acts, pools = lenet_engine_specs(8)
     out.append(("lenet+noise", compile_program(
         specs, EngineConfig(noise=NoiseConfig(enabled=True)),
-        activations=acts, pools=pools)))
+        activations=acts, pools=pools), ("",)))
     if jax.device_count() > 1:
         out.append((f"lenet+shard{jax.device_count()}", compile_program(
             specs, EngineConfig(sharding=ShardingConfig(devices=0)),
-            activations=acts, pools=pools)))
+            activations=acts, pools=pools), ("",)))
+    # a mixed-precision-per-layer chain — the shape of program the
+    # accuracy-budget planner (repro.precision) emits for a ladder rung:
+    # every pass must stay clean per layer, and RC001 must bound the
+    # executable keys across the full operating-point tag set
+    mixed = [mapping.LayerSpec(m=8, k=256, n=128, r_in=8, r_w=4),
+             mapping.LayerSpec(m=8, k=128, n=64, r_in=4, r_w=2),
+             mapping.LayerSpec(m=8, k=64, n=32, r_in=2, r_w=2),
+             mapping.LayerSpec(m=8, k=32, n=16, r_in=2, r_w=1)]
+    out.append(("mixed-ladder", compile_program(
+        mixed, EngineConfig(noise=NoiseConfig(enabled=True))),
+        LADDER_POINTS))
     return out
 
 
@@ -154,8 +176,9 @@ def main(argv=None) -> int:
             tag = "clean" if rep.ok() and not rep.findings else \
                 f"{len(rep.findings)} finding(s)"
             print(f"cimcheck: {label} r_in={r_in} r_w={r_w}: {tag}")
-    for label, prog in _extra_points():
-        rep = check_program(prog, max_m=args.max_m, suppressions=sups)
+    for label, prog, pts in _extra_points():
+        rep = check_program(prog, max_m=args.max_m, suppressions=sups,
+                            points=pts)
         merged.merge(rep)
         per_config.append({"config": label, "r_in": None, "r_w": None,
                            "findings": [f.to_dict() for f in rep.findings]})

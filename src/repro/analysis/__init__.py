@@ -124,7 +124,9 @@ def _traced_graphs(program, graphs: str = "all"):
 def check_program(program, *, max_m: int = 1024,
                   suppressions: Tuple[Suppression, ...] = (),
                   lint_graphs: bool = True, graphs: str = "all",
-                  key_budget: int = recompile.DEFAULT_KEY_BUDGET) -> Report:
+                  key_budget: int = recompile.DEFAULT_KEY_BUDGET,
+                  points: Tuple[str, ...] = recompile.DEFAULT_POINTS
+                  ) -> Report:
     """Run every cimcheck pass over one compiled `CIMProgram`.
 
     Args:
@@ -138,6 +140,8 @@ def check_program(program, *, max_m: int = 1024,
         serve path, whose trace jit warmup then reuses, so inline
         verification stays a few percent of one-time plan cost.
       key_budget: RC001 executable-key budget.
+      points: serving operating-point tags the program dispatches under
+        (precision-ladder rungs; ("",) is the single-point default).
     Returns:
       A `Report`; call `.raise_if(mode)` or inspect `.findings`.
     """
@@ -146,7 +150,8 @@ def check_program(program, *, max_m: int = 1024,
     report.merge(plan_checks.run(plan))
     m = program.buckets.bucket_for(1)
     report.merge(noise_keys.run(plan, m))
-    report.merge(recompile.run(program, max_m=max_m, budget=key_budget))
+    report.merge(recompile.run(program, max_m=max_m, budget=key_budget,
+                               points=points))
     if lint_graphs:
         for label, closed in _traced_graphs(program, graphs):
             report.extend(barriers.lint_jaxpr(closed, where_prefix=label))

@@ -27,8 +27,10 @@ PASS_ID = "recompile"
 
 # a noise-enabled program reaches 24 flag combinations per ladder rung
 # (noise x bound x reference x segmented x identity, key tied to noise);
-# an 11-rung ladder (max_m=1024) is 264 keys — budget leaves ~2x headroom
-DEFAULT_KEY_BUDGET = 512
+# an 11-rung ladder (max_m=1024) is 264 keys per operating point, and a
+# full precision ladder (base + quality/balanced/throughput) serves 4
+# points = 1056 keys — budget leaves ~2x headroom over that
+DEFAULT_KEY_BUDGET = 2048
 
 # representative perturbation per EXEC_KEY_FIELDS field: (base, altered)
 _FIELD_PROBES = {
@@ -41,16 +43,24 @@ _FIELD_PROBES = {
     "reference": (False, True),
     "segmented": (False, True),
     "identity": (False, True),
+    "point": ("", "throughput"),
 }
+
+# the operating points a single-point program serves ("" = base); ladder
+# checks pass the ladder's names explicitly
+DEFAULT_POINTS = ("",)
 
 
 def reachable_keys(buckets, max_m: int, *, devices: int,
-                   noise_enabled: bool) -> Set[tuple]:
+                   noise_enabled: bool,
+                   points: Sequence[str] = DEFAULT_POINTS) -> Set[tuple]:
     """Every executable key requests of extent 1..max_m can reach.
 
     Flag combinations follow the dispatch rules: a PRNG key travels with
     noise, identity ids only matter under noise, and bound/reference/
-    segmented are free axes.
+    segmented are free axes.  `points` enumerates the serving
+    operating-point tags in play (the precision ladder multiplies the
+    key set by its rung count; "" alone is the single-point default).
     """
     from repro.runtime.program import executable_key
     keys: Set[tuple] = set()
@@ -60,16 +70,20 @@ def reachable_keys(buckets, max_m: int, *, devices: int,
                 noise_opts, (False, True), (False, True), (False, True)):
             id_opts = (False, True) if noise else (False,)
             for identity in id_opts:
-                keys.add(executable_key(
-                    "bucket", m, noise=noise, keyed=noise, devices=devices,
-                    bound=bound, reference=reference, segmented=segmented,
-                    identity=identity))
+                for point in points:
+                    keys.add(executable_key(
+                        "bucket", m, noise=noise, keyed=noise,
+                        devices=devices, bound=bound, reference=reference,
+                        segmented=segmented, identity=identity,
+                        point=point))
     return keys
 
 
 def check_key_budget(buckets, max_m: int, *, devices: int,
                      noise_enabled: bool,
-                     budget: int = DEFAULT_KEY_BUDGET) -> List[Finding]:
+                     budget: int = DEFAULT_KEY_BUDGET,
+                     points: Sequence[str] = DEFAULT_POINTS
+                     ) -> List[Finding]:
     """RC001: the reachable key set must be finite and within budget."""
     findings: List[Finding] = []
     ladder = buckets.ladder(max_m)
@@ -91,7 +105,7 @@ def check_key_budget(buckets, max_m: int, *, devices: int,
                     f"max_m={max_m} (expected <= {bound}); the ladder is "
                     "not bounding the compile count"))
     n = len(reachable_keys(buckets, max_m, devices=devices,
-                           noise_enabled=noise_enabled))
+                           noise_enabled=noise_enabled, points=points))
     if n > budget:
         findings.append(Finding(
             pass_id=PASS_ID, code="RC001", severity=Severity.ERROR,
@@ -147,14 +161,20 @@ def check_key_sensitivity(key_fn: Optional[Callable] = None, *,
 
 
 def run(program, *, max_m: int = 1024,
-        budget: int = DEFAULT_KEY_BUDGET) -> Report:
-    """Run both recompile checks against a compiled `CIMProgram`."""
+        budget: int = DEFAULT_KEY_BUDGET,
+        points: Sequence[str] = DEFAULT_POINTS) -> Report:
+    """Run both recompile checks against a compiled `CIMProgram`.
+
+    `points` lists the serving operating-point tags the program will be
+    dispatched under (the precision ladder's names plus "" for the base
+    point) — RC001 budgets the key set they multiply into."""
     report = Report()
     plan = program.plan
     devices = (plan.cfg.sharding.resolve_devices()
                if plan.cfg.sharding is not None else 1)
     report.extend(check_key_budget(
         program.buckets, max_m, devices=devices,
-        noise_enabled=plan.cfg.noise.enabled, budget=budget))
+        noise_enabled=plan.cfg.noise.enabled, budget=budget,
+        points=points))
     report.extend(check_key_sensitivity())
     return report

@@ -25,6 +25,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import pallas as pl
 from jax.sharding import PartitionSpec as P
 
 from repro.jax_compat import get_abstract_mesh, shard_map
@@ -158,3 +159,66 @@ def flash_attention_sharded(q, k, v, causal: bool = True, window: int = 0,
     return shard_map(body, mesh=mesh,
                      in_specs=(q_spec, kv_spec, kv_spec),
                      out_specs=q_spec, check_vma=False)(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# ring-buffer decode attention (the CIMDecodeLM serving step)
+# ---------------------------------------------------------------------------
+#
+# Decode-time attention over per-row ring-buffer KV state is a different
+# shape class from the prefill kernel above: one query per row, each row
+# attending only to its OWN (L, H, hd) ring, with ring-slot validity
+# expressed as a precomputed additive bias (slots the row has not written
+# yet sit out of positional order, so the index-generated causal/window
+# masks of `flash_attention` cannot describe them).  The whole working set
+# is tiny (R <= slot capacity, L = KV window), so the kernel holds it in
+# one VMEM-resident block — no online softmax, no KV grid — and performs
+# literally the op sequence of the digital reference, which keeps it
+# bit-exact with `ring_decode_attention_ref` (tests/test_scheduler.py
+# asserts equality, not closeness).
+
+
+@jax.jit
+def ring_decode_attention_ref(q, k, v, bias) -> jnp.ndarray:
+    """Pure-jnp digital oracle of ring-buffer decode attention.
+
+    q (R, H, hd); k/v (R, L, H, hd) — each row's own KV ring; bias (R, L)
+    additive scores mask (0 for valid ring slots, -1e9 for unwritten).
+    Returns (R, H, hd).  The op sequence is exactly the digital path
+    CIMDecodeLM computed inline before the kernel existed; oracle and
+    kernel are both jitted as one unit so their graphs fuse identically
+    and the bit-exactness contract is equality, not closeness."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("rhd,rlhd->rhl", q, k) / np.sqrt(hd)
+    probs = jax.nn.softmax(scores + bias[:, None, :], axis=-1)
+    return jnp.einsum("rhl,rlhd->rhd", probs, v)
+
+
+def _ring_decode_kernel(q_ref, k_ref, v_ref, b_ref, o_ref, *,
+                        scale: float):
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    bias = b_ref[...]
+    scores = jnp.einsum("rhd,rlhd->rhl", q, k) / scale
+    probs = jax.nn.softmax(scores + bias[:, None, :], axis=-1)
+    o_ref[...] = jnp.einsum("rhl,rlhd->rhd", probs, v)
+
+
+@jax.jit
+def ring_decode_attention(q, k, v, bias) -> jnp.ndarray:
+    """Pallas ring-buffer decode attention (bit-exact with
+    `ring_decode_attention_ref`).
+
+    Same shapes as the ref: q (R, H, hd), k/v (R, L, H, hd), bias (R, L).
+    One pallas_call over the whole (VMEM-resident) decode working set;
+    the kernel body is the identical einsum/softmax/einsum sequence, so
+    interpretation executes the same graph and the outputs match the
+    digital path bit for bit."""
+    scale = float(np.sqrt(q.shape[-1]))
+    with jax.named_scope("vmem_kernel"):
+        return pl.pallas_call(
+            functools.partial(_ring_decode_kernel, scale=scale),
+            out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+            interpret=True,
+        )(q, k, v, bias)

@@ -128,7 +128,8 @@ class EnergyModel:
 
 
 def schedule_report(plan, *, clock_ns: float = 10.0, pipelined: bool = True,
-                    gamma: float = 1.0, program=None) -> Dict[str, object]:
+                    gamma: float = 1.0, program=None,
+                    point=None) -> Dict[str, object]:
     """Cycle/energy estimates for a runtime engine schedule.
 
     `plan` is a runtime.engine.NetworkPlan (duck-typed: only
@@ -159,6 +160,13 @@ def schedule_report(plan, *, clock_ns: float = 10.0, pipelined: bool = True,
     kind — see repro.tuner) additionally carry `rep["tune"]`: the chosen
     (bm, bn, bk) blocks and shard kind, plus the roofline model's
     predicted cost next to the heuristic schedule's cost.
+
+    `point` (optional) names the serving operating point the schedule was
+    taken at (a precision-ladder rung such as "quality"/"throughput");
+    when given, report["operating_point"] echoes the name next to the
+    schedule totals so downstream serving telemetry
+    (`InflightScheduler.point_report`, Fig. 22 rows) always carries the
+    projected TOPS/W of the point it dispatched.
     """
     noise = getattr(getattr(plan, "cfg", None), "noise", None)
     if noise is not None and noise.enabled:
@@ -255,6 +263,14 @@ def schedule_report(plan, *, clock_ns: float = 10.0, pipelined: bool = True,
         "noise": noise_echo,
         "total": total,
     }
+    if point is not None:
+        report["operating_point"] = {
+            "name": str(point),
+            "tops_per_w": total["tops_per_w"],
+            "tops": total["tops"],
+            "time_s": total["time_s"],
+            "energy_j": total["energy_j"],
+        }
     if program is not None:
         prog_echo: Dict[str, object] = dict(program.stats())
         buckets = getattr(program, "buckets", None)

@@ -41,8 +41,10 @@ no numerics of its own.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
+import os
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -140,21 +142,26 @@ def request_noise_ids(request_index: int, rows: int) -> jnp.ndarray:
 # cimcheck recompile-hazard pass (analysis/recompile.py) share, so a field
 # added to the jit signature but dropped from the key is statically visible
 EXEC_KEY_FIELDS = ("kind", "extent", "noise", "keyed", "devices", "bound",
-                   "reference", "segmented", "identity")
+                   "reference", "segmented", "identity", "point")
 
 
 def executable_key(kind: str, extent: int, *, noise: bool, keyed: bool,
                    devices: int, bound: bool, reference: bool,
-                   segmented: bool, identity: bool) -> tuple:
+                   segmented: bool, identity: bool,
+                   point: str = "") -> tuple:
     """The cache key of one executable trace signature.
 
     Mirrors the jit static/presence signature of `_exec_jit`: dispatch
     kind ("exact"/"bucket") and batch extent, plus every operand-presence
     flag that changes the traced graph (noise operands, PRNG key, device
     mesh, bound params, reference oracle, segment ids, noise-identity
-    ids).  Keep in sync with EXEC_KEY_FIELDS."""
+    ids), plus the serving operating-point tag (`point`, "" for the base
+    point) — distinct precision-ladder rungs execute distinct plans, so
+    the point must discriminate or the key would report a hit while jit
+    retraces.  Keep in sync with EXEC_KEY_FIELDS."""
     return (kind, int(extent), bool(noise), bool(keyed), int(devices),
-            bool(bound), bool(reference), bool(segmented), bool(identity))
+            bool(bound), bool(reference), bool(segmented), bool(identity),
+            str(point))
 
 
 @functools.partial(jax.jit, static_argnames=("plan",))
@@ -311,16 +318,20 @@ class CIMProgram:
               noise: Optional[NoiseConfig] = None, *,
               segments: Optional[jnp.ndarray] = None,
               noise_ids: Optional[jnp.ndarray] = None,
-              reference: bool = False) -> jnp.ndarray:
+              reference: bool = False, point: str = "") -> jnp.ndarray:
         """Batch-bucketed dispatch with per-call params (weight binding
         stays in the jitted graph — use bind(params).serve(...) to hoist
-        it).  Bit-exact with `run` on the same inputs."""
+        it).  Bit-exact with `run` on the same inputs.  `point` tags the
+        dispatch with a serving operating-point name (joins the
+        executable key; "" is the base point)."""
         return self._serve_padded(list(params), False, x, key, noise,
-                                  bool(reference), segments, noise_ids)
+                                  bool(reference), segments, noise_ids,
+                                  point)
 
     def _serve_padded(self, payload, bound: bool, x: jnp.ndarray,
                       key, noise, reference: bool,
-                      segments=None, noise_ids=None) -> jnp.ndarray:
+                      segments=None, noise_ids=None,
+                      point: str = "") -> jnp.ndarray:
         nz = rt._dispatch_noise(self._plan, noise)
         xc, lead = self._canon(x)
         m = xc.shape[0]
@@ -346,7 +357,8 @@ class CIMProgram:
                            keyed=key is not None, devices=self._devices(),
                            bound=bound, reference=reference,
                            segmented=seg is not None,
-                           identity=nid is not None), bucketed=True)
+                           identity=nid is not None,
+                           point=str(point)), bucketed=True)
         y = rt._exec_jit(self._plan, payload, xc,
                          jnp.asarray(m, jnp.int32), key, nz, seg, nid,
                          bound, reference)
@@ -403,7 +415,7 @@ class BoundProgram:
               noise: Optional[NoiseConfig] = None, *,
               segments: Optional[jnp.ndarray] = None,
               noise_ids: Optional[jnp.ndarray] = None,
-              reference: bool = False) -> jnp.ndarray:
+              reference: bool = False, point: str = "") -> jnp.ndarray:
         """Bucketed dispatch of one request through the bound weights
         (bit-exact with the unbucketed engine on the same inputs, clean
         and under a fixed noise key).
@@ -414,20 +426,24 @@ class BoundProgram:
         each segment alone.  `noise_ids` ((B,) int32, optional) keys the
         noise model's thermal draws by sample identity instead of batch
         position (see request_noise_ids) — together they make noisy fused
-        serving bit-exact with solo serving under one key."""
+        serving bit-exact with solo serving under one key.  `point` tags
+        the dispatch with the serving operating-point name ("" = base):
+        it joins the executable key so precision-ladder rungs never alias
+        one cache entry."""
         return self.program._serve_padded(list(self._binds), True, x, key,
                                           noise, bool(reference),
-                                          segments, noise_ids)
+                                          segments, noise_ids, point)
 
     __call__ = serve
 
     def reference(self, x: jnp.ndarray, key: Optional[jax.Array] = None,
                   noise: Optional[NoiseConfig] = None, *,
                   segments: Optional[jnp.ndarray] = None,
-                  noise_ids: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+                  noise_ids: Optional[jnp.ndarray] = None,
+                  point: str = "") -> jnp.ndarray:
         """The pure-jnp digital oracle of serve (bit-exact with it)."""
         return self.serve(x, key, noise, segments=segments,
-                          noise_ids=noise_ids, reference=True)
+                          noise_ids=noise_ids, reference=True, point=point)
 
     def serve_batch(self, requests: Sequence[jnp.ndarray],
                     key: Optional[jax.Array] = None,
@@ -617,13 +633,16 @@ class SharedInputBind:
               noise: Optional[NoiseConfig] = None, *,
               segments: Optional[jnp.ndarray] = None,
               noise_ids: Optional[jnp.ndarray] = None,
-              reference: bool = False) -> Dict[str, jnp.ndarray]:
+              reference: bool = False,
+              point: str = "") -> Dict[str, jnp.ndarray]:
         """One bucketed dispatch of the shared input; the result splits
         along the output axis into {head name: (..., n_i)}.  Isolation
-        arguments (`segments`/`noise_ids`) pass through unchanged — a
-        fused-head serve isolates rows exactly like any other program."""
+        arguments (`segments`/`noise_ids`) and the operating-point tag
+        (`point`) pass through unchanged — a fused-head serve isolates
+        rows exactly like any other program."""
         y = self.bound.serve(x, key, noise, segments=segments,
-                             noise_ids=noise_ids, reference=reference)
+                             noise_ids=noise_ids, reference=reference,
+                             point=point)
         return {name: y[..., s:e]
                 for (name, _), (s, e) in zip(self.shared.heads,
                                              self.shared._offsets)}
@@ -639,9 +658,61 @@ class SharedInputBind:
 # the global program cache
 # ---------------------------------------------------------------------------
 
-_PROGRAM_CACHE: Dict[tuple, CIMProgram] = {}
-_PLAN_PROGRAMS: Dict[tuple, CIMProgram] = {}
-_CACHE_STATS = {"programs_built": 0, "lookups": 0, "hits": 0}
+_PROGRAM_CACHE: "collections.OrderedDict[tuple, CIMProgram]" = \
+    collections.OrderedDict()
+_PLAN_PROGRAMS: "collections.OrderedDict[tuple, CIMProgram]" = \
+    collections.OrderedDict()
+_CACHE_STATS = {"programs_built": 0, "lookups": 0, "hits": 0,
+                "evictions": 0}
+
+
+def _env_capacity() -> int:
+    try:
+        cap = int(os.environ.get("REPRO_PROGRAM_CACHE_CAP", "512"))
+    except ValueError:
+        cap = 512
+    return max(cap, 1)
+
+
+# LRU bound on BOTH module-level caches (the precision ladder times model
+# churn would otherwise grow them without limit); mutable holder so tests
+# can shrink it without monkeypatching the module global
+_CACHE_CAPACITY = [_env_capacity()]
+
+
+def set_program_cache_capacity(capacity: int) -> int:
+    """Set the program-cache LRU capacity (entries per cache table) and
+    return the previous value.  Shrinking evicts least-recently-used
+    entries immediately; evicted programs keep working wherever they are
+    already held — eviction only means an equal future compile_program
+    call re-plans.  The startup default is $REPRO_PROGRAM_CACHE_CAP
+    (512)."""
+    if capacity < 1:
+        raise ValueError(f"capacity must be >= 1, got {capacity}")
+    old = _CACHE_CAPACITY[0]
+    _CACHE_CAPACITY[0] = int(capacity)
+    for cache in (_PROGRAM_CACHE, _PLAN_PROGRAMS):
+        _trim_cache(cache)
+    return old
+
+
+def _trim_cache(cache) -> None:
+    while len(cache) > _CACHE_CAPACITY[0]:
+        cache.popitem(last=False)
+        _CACHE_STATS["evictions"] += 1
+
+
+def _cache_get(cache, key):
+    prog = cache.get(key)
+    if prog is not None:
+        cache.move_to_end(key)
+    return prog
+
+
+def _cache_put(cache, key, prog) -> None:
+    cache[key] = prog
+    cache.move_to_end(key)
+    _trim_cache(cache)
 
 
 def _canonical_epilogues(n_layers: int,
@@ -709,7 +780,7 @@ def compile_program(specs: Sequence[mapping.LayerSpec],
                     else tune_cache)
         key = key + (tune, resolved)
     _CACHE_STATS["lookups"] += 1
-    prog = _PROGRAM_CACHE.get(key)
+    prog = _cache_get(_PROGRAM_CACHE, key)
     if prog is not None:
         _CACHE_STATS["hits"] += 1
         return prog
@@ -718,12 +789,12 @@ def compile_program(specs: Sequence[mapping.LayerSpec],
                                      cache_path=resolved)
     else:
         plan = rt.plan_network(specs, cfg, acts, pls)
-    prog = _PLAN_PROGRAMS.get((plan, buckets))
+    prog = _cache_get(_PLAN_PROGRAMS, (plan, buckets))
     if prog is None:
         prog = CIMProgram(plan, buckets)
-        _PLAN_PROGRAMS[(plan, buckets)] = prog
+        _cache_put(_PLAN_PROGRAMS, (plan, buckets), prog)
         _CACHE_STATS["programs_built"] += 1
-    _PROGRAM_CACHE[key] = prog
+    _cache_put(_PROGRAM_CACHE, key, prog)
     if verify != "off":
         # inline verification lints the serving graphs (the trace is
         # reused by jit warmup); the exhaustive variant sweep is
@@ -739,18 +810,21 @@ def program_for_plan(plan: rt.NetworkPlan,
     legacy run_network/run_network_reference entry points dispatch
     through); creates and caches one on first sight of the plan."""
     key = (plan, buckets)
-    prog = _PLAN_PROGRAMS.get(key)
+    prog = _cache_get(_PLAN_PROGRAMS, key)
     if prog is None:
         prog = CIMProgram(plan, buckets)
-        _PLAN_PROGRAMS[key] = prog
+        _cache_put(_PLAN_PROGRAMS, key, prog)
         _CACHE_STATS["programs_built"] += 1
     return prog
 
 
 def program_cache_stats() -> Dict[str, int]:
     """Global program-cache counters: programs (live cached programs),
-    programs_built, lookups, hits (compile_program key hits)."""
-    return dict(_CACHE_STATS, programs=len(_PLAN_PROGRAMS))
+    programs_built, lookups, hits (compile_program key hits), evictions
+    (LRU drops across both cache tables) and capacity (the LRU bound —
+    set_program_cache_capacity / $REPRO_PROGRAM_CACHE_CAP)."""
+    return dict(_CACHE_STATS, programs=len(_PLAN_PROGRAMS),
+                capacity=_CACHE_CAPACITY[0])
 
 
 def clear_program_cache() -> None:

@@ -32,6 +32,16 @@ the macro mapping in docs/ARCHITECTURE.md §8).  Its per-slot state is a
 pytree (KV rings + position), and the scheduler treats state generically
 through `init_state`/`step_rows`, so the isolation property tests fuzz
 the real serving datapath, not a toy d->d stand-in.
+
+PR 10 adds workload-adaptive precision serving on top: a `CIMDecodeLM`
+can carry `variants` — alternative block stacks serving the SAME weights
+at other precision points (the `repro.precision.plan_ladder` rungs) —
+and every `Request` carries an operating-point tag.  The scheduler fuses
+only same-point requests per decode step (round-robin across live
+points), the point joins the executable cache key, and per-request
+bit-exactness vs `decode_sequential` holds at every point.  Attention
+runs through the `kernels.flash_attn.ops.ring_decode_attention` Pallas
+kernel, bit-exact with the digital reference.
 """
 from __future__ import annotations
 
@@ -46,6 +56,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import mapping
+from repro.kernels.flash_attn.ops import ring_decode_attention
 from repro.runtime import engine as rt
 from repro.runtime.program import (DEFAULT_BUCKETS, NOISE_ID_STRIDE,
                                    BatchBuckets, BoundProgram,
@@ -59,16 +70,25 @@ class Request:
 
     `uid` must be unique among in-flight requests — it seeds the request's
     noise identity (noise_id(uid, call)), so two live requests sharing a
-    uid would also share thermal draws."""
+    uid would also share thermal draws.
+
+    `point` tags the serving operating point (a precision-ladder rung
+    such as "quality"/"throughput"; "" is the model's base point): the
+    scheduler decodes the request through the model's blocks for that
+    point and only ever fuses it with same-point batchmates."""
     uid: int
     prompt: Tuple[int, ...]
     max_new_tokens: int
+    point: str = ""
 
     def __post_init__(self):
         if len(self.prompt) < 1:
             raise ValueError("request needs a non-empty prompt")
         if self.max_new_tokens < 1:
             raise ValueError("request needs max_new_tokens >= 1")
+        if not isinstance(self.point, str):
+            raise ValueError("operating point must be a str tag, got "
+                             f"{self.point!r}")
 
 
 @dataclasses.dataclass
@@ -182,11 +202,18 @@ class CIMDecodeLM:
     state is a pytree — KV rings (depth, window, H, hd) plus the absolute
     position — and everything outside the programs is strictly per-row,
     so program-level request isolation (per-row quantization segments +
-    identity-keyed noise) makes fused rows bit-identical to solo rows."""
+    identity-keyed noise) makes fused rows bit-identical to solo rows.
+
+    `variants` (optional) maps operating-point tags to alternative block
+    stacks serving the SAME weights at other precision points (the
+    precision-ladder rungs `repro.precision.plan_ladder` emits): point
+    "" is always the base `blocks`.  State shape is precision-independent,
+    so a request's KV rings survive whatever point it decodes at."""
 
     def __init__(self, embed: jnp.ndarray, blocks: Sequence[DecodeBlock],
                  *, n_heads: int, window: int = 16,
-                 rope_theta: float = 10000.0):
+                 rope_theta: float = 10000.0,
+                 variants: Optional[Dict[str, Sequence[DecodeBlock]]] = None):
         embed = jnp.asarray(embed, jnp.float32)
         if embed.ndim != 2:
             raise ValueError(f"embed must be (vocab, d), got {embed.shape}")
@@ -198,11 +225,26 @@ class CIMDecodeLM:
         blocks = tuple(blocks)
         if not blocks:
             raise ValueError("need at least one DecodeBlock")
-        for i, blk in enumerate(blocks):
-            if blk.qkv.shared.k != d or blk.o.plan.layers[-1].spec.n != d:
-                raise ValueError(f"block {i} is not d->d at d={d}")
+        vmap: Dict[str, Tuple[DecodeBlock, ...]] = {"": blocks}
+        for name, vblocks in (variants or {}).items():
+            name = str(name)
+            if not name:
+                raise ValueError('"" names the base point; variant tags '
+                                 "must be non-empty")
+            vblocks = tuple(vblocks)
+            if len(vblocks) != len(blocks):
+                raise ValueError(
+                    f"variant {name!r} has {len(vblocks)} blocks, base "
+                    f"has {len(blocks)}")
+            vmap[name] = vblocks
+        for name, blks in vmap.items():
+            for i, blk in enumerate(blks):
+                if blk.qkv.shared.k != d or blk.o.plan.layers[-1].spec.n != d:
+                    raise ValueError(
+                        f"block {i} of point {name!r} is not d->d at d={d}")
         self.embed = embed
         self.blocks = blocks
+        self.variants = vmap
         self.n_heads = n_heads
         self.window = window
         self.rope_theta = rope_theta
@@ -229,46 +271,109 @@ class CIMDecodeLM:
         handle the scheduler and tests key their checks on)."""
         return self.blocks[0].o
 
+    @property
+    def points(self) -> Tuple[str, ...]:
+        """The operating-point tags this model serves (sorted; always
+        includes "" — the base point)."""
+        return tuple(sorted(self.variants))
+
+    def blocks_for(self, point: str) -> Tuple[DecodeBlock, ...]:
+        """The block stack serving one operating point (ValueError on an
+        unknown tag — the scheduler validates requests at submit)."""
+        try:
+            return self.variants[point]
+        except KeyError:
+            raise ValueError(
+                f"unknown operating point {point!r}; this model serves "
+                f"{sorted(self.variants)}") from None
+
+    def bound_for(self, point: str) -> BoundProgram:
+        """The representative bound program of one operating point (its
+        perf_report carries the point's projected TOPS/W)."""
+        return self.blocks_for(point)[0].o
+
     @classmethod
     def toy(cls, key: jax.Array, *, d: int = 96, depth: int = 2,
             vocab: int = 61, r_in: int = 4, r_w: int = 2,
             cfg: Optional[rt.EngineConfig] = None,
             buckets: BatchBuckets = DEFAULT_BUCKETS,
             n_heads: int = 4, window: int = 16,
-            d_ff: int = 0) -> "CIMDecodeLM":
+            d_ff: int = 0,
+            points: Optional[Dict[str, Sequence]] = None) -> "CIMDecodeLM":
         """A small self-contained transformer LM (compile + init + bind in
         one call) — the workhorse of the scheduler property tests and the
         serving benchmark.  `depth` counts transformer blocks; all blocks
         share the same four programs (program-cache reuse is depth-fold),
-        each with its own bind."""
+        each with its own bind.
+
+        `points` (optional) maps operating-point tags to precision
+        assignments: either one (r_in, r_w) pair applied to all four
+        projections, or four pairs in (qkv, o, gate_up, down) order —
+        the per-layer assignment `repro.precision.assign` emits.  Every
+        point binds the SAME fp32 masters (initialized once from the
+        base programs), so points differ only in serving precision."""
         cfg = cfg or rt.EngineConfig()
         if d % n_heads:
             n_heads = 1
         d_ff = d_ff or 2 * d
-        qkv_p = SharedInputProgram.compile(
-            d, (("q", d), ("k", d), ("v", d)), cfg,
-            r_in=r_in, r_w=r_w, buckets=buckets)
-        o_p = compile_program(
-            (mapping.LayerSpec(m=8, k=d, n=d, r_in=r_in, r_w=r_w),), cfg,
-            activations=("none",), buckets=buckets)
-        gu_p = SharedInputProgram.compile(
-            d, (("gate", d_ff), ("up", d_ff)), cfg,
-            r_in=r_in, r_w=r_w, buckets=buckets)
-        dn_p = compile_program(
-            (mapping.LayerSpec(m=8, k=d_ff, n=d, r_in=r_in, r_w=r_w),),
-            cfg, activations=("none",), buckets=buckets)
-        blocks = []
+
+        def _norm(rs):
+            rs = tuple(tuple(r) if isinstance(r, (tuple, list)) else r
+                       for r in rs)
+            if len(rs) == 2 and all(isinstance(r, int) for r in rs):
+                rs = (rs,) * 4
+            if len(rs) != 4:
+                raise ValueError(
+                    "a point is one (r_in, r_w) pair or four pairs in "
+                    f"(qkv, o, gate_up, down) order, got {rs!r}")
+            return tuple((int(a), int(b)) for a, b in rs)
+
+        def _progs(rs):
+            (qi, qw), (oi, ow), (gi, gw), (zi, zw) = rs
+            return (
+                SharedInputProgram.compile(
+                    d, (("q", d), ("k", d), ("v", d)), cfg,
+                    r_in=qi, r_w=qw, buckets=buckets),
+                compile_program(
+                    (mapping.LayerSpec(m=8, k=d, n=d, r_in=oi, r_w=ow),),
+                    cfg, activations=("none",), buckets=buckets),
+                SharedInputProgram.compile(
+                    d, (("gate", d_ff), ("up", d_ff)), cfg,
+                    r_in=gi, r_w=gw, buckets=buckets),
+                compile_program(
+                    (mapping.LayerSpec(m=8, k=d_ff, n=d, r_in=zi,
+                                       r_w=zw),),
+                    cfg, activations=("none",), buckets=buckets))
+
+        base_progs = _progs(_norm((r_in, r_w)))
+        point_progs = {str(name): _progs(_norm(rs))
+                       for name, rs in (points or {}).items()}
+        qkv_p, o_p, gu_p, dn_p = base_progs
+        blocks: List[DecodeBlock] = []
+        variants: Dict[str, List[DecodeBlock]] = {n: []
+                                                  for n in point_progs}
         for b in range(depth):
             kb = jax.random.fold_in(key, 100 + b)
-            blocks.append(DecodeBlock(
-                qkv=qkv_p.bind(qkv_p.init_params(jax.random.fold_in(kb, 0))),
-                o=o_p.bind(o_p.init_params(jax.random.fold_in(kb, 1))),
-                gate_up=gu_p.bind(
-                    gu_p.init_params(jax.random.fold_in(kb, 2))),
-                down=dn_p.bind(dn_p.init_params(jax.random.fold_in(kb, 3)))))
+            # one set of fp32 masters per block, shared by every point
+            # (init_params of a CIMProgram may be lazy — materialize once)
+            qkv_w = qkv_p.init_params(jax.random.fold_in(kb, 0))
+            o_w = list(o_p.init_params(jax.random.fold_in(kb, 1)))
+            gu_w = gu_p.init_params(jax.random.fold_in(kb, 2))
+            dn_w = list(dn_p.init_params(jax.random.fold_in(kb, 3)))
+
+            def _block(progs):
+                q, o, g, z = progs
+                return DecodeBlock(qkv=q.bind(qkv_w), o=o.bind(o_w),
+                                   gate_up=g.bind(gu_w), down=z.bind(dn_w))
+
+            blocks.append(_block(base_progs))
+            for name, progs in point_progs.items():
+                variants[name].append(_block(progs))
         embed = 0.25 * jax.random.normal(jax.random.fold_in(key, 1),
                                          (vocab, d), jnp.float32)
-        return cls(embed, blocks, n_heads=n_heads, window=window)
+        return cls(embed, blocks, n_heads=n_heads, window=window,
+                   variants={n: tuple(v) for n, v in variants.items()}
+                   or None)
 
     @staticmethod
     def noise_id(uid: int, call: int) -> int:
@@ -303,12 +408,15 @@ class CIMDecodeLM:
 
     def step_rows(self, state: Dict[str, jnp.ndarray], tokens: jnp.ndarray,
                   noise_ids: Optional[jnp.ndarray],
-                  key: Optional[jax.Array]
+                  key: Optional[jax.Array], *, point: str = ""
                   ) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray]:
         """One fused decode step over R state rows: returns the updated
         state rows and the (R,) greedy next tokens.  Every row is its own
         quantization segment in every program dispatch, and attention only
-        reads the row's own KV ring, so the rows never interact."""
+        reads the row's own KV ring, so the rows never interact.  `point`
+        selects the operating point's block stack and travels into every
+        program dispatch (the executable-key point axis)."""
+        blocks = self.blocks_for(point)
         rows = tokens.shape[0]
         hd = self.d // self.n_heads
         seg = jnp.arange(rows, dtype=jnp.int32)
@@ -321,11 +429,11 @@ class CIMDecodeLM:
         src = pos[:, None] - ((pos[:, None] - j[None, :]) % self.window)
         bias = jnp.where(src < 0, -1e9, 0.0)                 # (R, L)
         new_k, new_v = state["k"], state["v"]
-        for b, blk in enumerate(self.blocks):
+        for b, blk in enumerate(blocks):
             h1 = _rms_norm(x)
             qkv = blk.qkv.serve(
                 h1, key, segments=seg,
-                noise_ids=self._proj_ids(noise_ids, 4 * b))
+                noise_ids=self._proj_ids(noise_ids, 4 * b), point=point)
             q = _rope(qkv["q"].reshape(rows, self.n_heads, hd), pos,
                       self.rope_theta)
             kk = _rope(qkv["k"].reshape(rows, self.n_heads, hd), pos,
@@ -334,19 +442,20 @@ class CIMDecodeLM:
             new_k = new_k.at[jnp.arange(rows), b, idx].set(kk)
             new_v = new_v.at[jnp.arange(rows), b, idx].set(vv)
             kr, vr = new_k[:rows, b], new_v[:rows, b]        # (R, L, H, hd)
-            scores = jnp.einsum("rhd,rlhd->rhl", q, kr) / np.sqrt(hd)
-            probs = jax.nn.softmax(scores + bias[:, None, :], axis=-1)
-            attn = jnp.einsum("rhl,rlhd->rhd", probs, vr)
+            attn = ring_decode_attention(q, kr, vr, bias)
             x = x + blk.o.serve(
                 attn.reshape(rows, self.d), key, segments=seg,
-                noise_ids=self._proj_ids(noise_ids, 4 * b + 1))
+                noise_ids=self._proj_ids(noise_ids, 4 * b + 1),
+                point=point)
             h2 = _rms_norm(x)
             gu = blk.gate_up.serve(
                 h2, key, segments=seg,
-                noise_ids=self._proj_ids(noise_ids, 4 * b + 2))
+                noise_ids=self._proj_ids(noise_ids, 4 * b + 2),
+                point=point)
             x = x + blk.down.serve(
                 jax.nn.silu(gu["gate"]) * gu["up"], key, segments=seg,
-                noise_ids=self._proj_ids(noise_ids, 4 * b + 3))
+                noise_ids=self._proj_ids(noise_ids, 4 * b + 3),
+                point=point)
         logits = _rms_norm(x) @ self.embed.T
         new_state = {"k": new_k, "v": new_v, "pos": pos + 1}
         return new_state, jnp.argmax(logits, axis=-1)
@@ -364,7 +473,8 @@ class CIMDecodeLM:
             nid = None if key is None else jnp.asarray(
                 [self.noise_id(request.uid, j)], jnp.int32)
             st, nxt = self.step_rows(
-                st, jnp.asarray([t % self.vocab], jnp.int32), nid, key)
+                st, jnp.asarray([t % self.vocab], jnp.int32), nid, key,
+                point=request.point)
             tok = int(nxt[0])
         row = jax.tree_util.tree_map(lambda a: a[0], st)
         return row, tok, len(request.prompt)
@@ -384,7 +494,8 @@ def decode_sequential(model: CIMDecodeLM, request: Request,
         nid = None if key is None else jnp.asarray(
             [model.noise_id(request.uid, calls)], jnp.int32)
         st, nxt = model.step_rows(
-            st, jnp.asarray([tokens[-1]], jnp.int32), nid, key)
+            st, jnp.asarray([tokens[-1]], jnp.int32), nid, key,
+            point=request.point)
         tokens.append(int(nxt[0]))
         calls += 1
     return tokens
@@ -403,7 +514,14 @@ class InflightScheduler:
     A single fixed PRNG key serves every step of every request: per-step
     variation comes entirely through the (uid, call) noise identities,
     which is exactly what makes fused noisy decode reproducible by
-    decode_sequential under the same key."""
+    decode_sequential under the same key.
+
+    Mixed operating points: each request carries a point tag and a fused
+    decode step only ever advances ONE point's group (round-robin over
+    the live points), because the points dispatch through different
+    compiled programs.  Live slots of other points ride along as padding
+    (their outputs are discarded, their state rows are not written), so
+    point mixing never enters the bit-exactness argument."""
 
     def __init__(self, model: CIMDecodeLM, capacity: int = 8,
                  key: Optional[jax.Array] = None):
@@ -422,10 +540,14 @@ class InflightScheduler:
         self.decode_steps = 0
         self.decode_rows = 0
         self.wall_s = 0.0
+        self.points_served: Dict[str, int] = {}
+        self._point_rr = 0
 
     def submit(self, request: Request) -> RequestRecord:
         """Queue a request (arrival stamped at the current clock); it is
-        admitted at the next step() with a free slot."""
+        admitted at the next step() with a free slot.  Raises ValueError
+        when the request's operating point is not one the model serves."""
+        self.model.blocks_for(request.point)
         rec = RequestRecord(request=request, arrival_step=self.clock)
         self.pending.append(rec)
         return rec
@@ -465,36 +587,55 @@ class InflightScheduler:
                 self._retire(rec)
 
     def step(self) -> bool:
-        """One scheduler tick: admit, fused-decode, retire.  Returns True
-        if a fused decode step ran (False on an idle tick)."""
+        """One scheduler tick: admit, fused-decode ONE operating point's
+        group (round-robin over live points), retire.  Returns True if a
+        fused decode step ran (False on an idle tick)."""
         self._admit()
-        extent = self.slots.extent()
-        if extent == 0:
+        if self.slots.extent() == 0:
             self.clock += 1
             return False
+        groups: Dict[str, List[int]] = {}
+        for s, rec in self.by_slot.items():
+            groups.setdefault(rec.request.point, []).append(s)
+        names = sorted(groups)
+        pt = names[self._point_rr % len(names)]
+        self._point_rr += 1
+        group = sorted(groups[pt])
+        extent = group[-1] + 1
         bucket = self.model.bound.program.buckets.bucket_for(extent)
         e = min(bucket, self.slots.capacity)
+        in_group = set(group)
         nids = None
         if self.key is not None:
             ids = [self.model.noise_id(self.by_slot[s].request.uid,
                                        self.by_slot[s].calls)
-                   if s in self.by_slot else -1 for s in range(e)]
+                   if s in in_group else -1 for s in range(e)]
             nids = jnp.asarray(ids, jnp.int32)
         t0 = time.perf_counter()
         rows = jax.tree_util.tree_map(lambda a: a[:e], self.state)
         h, nxt = self.model.step_rows(
             rows, jnp.asarray(self.cur_tok[:e], jnp.int32),
-            nids, self.key)
+            nids, self.key, point=pt)
         nxt = np.asarray(jax.device_get(nxt))
         self.wall_s += time.perf_counter() - t0
-        self.state = jax.tree_util.tree_map(
-            lambda a, r: a.at[:e].set(r), self.state, h)
+        # write back ONLY the group's rows: other points' live slots rode
+        # along as padding and must keep their state untouched
+        msk = np.zeros((e,), bool)
+        msk[group] = True
+        jmsk = jnp.asarray(msk)
+
+        def _wb(a, r):
+            sel = jmsk.reshape((e,) + (1,) * (r.ndim - 1))
+            return a.at[:e].set(jnp.where(sel, r, a[:e]))
+
+        self.state = jax.tree_util.tree_map(_wb, self.state, h)
         self.extents_seen.add(
             int(self.model.bound.program.buckets.bucket_for(e)))
         self.decode_steps += 1
-        self.decode_rows += len(self.by_slot)
+        self.decode_rows += len(group)
+        self.points_served[pt] = self.points_served.get(pt, 0) + 1
         self.clock += 1
-        for s in self.slots.live():
+        for s in group:
             rec = self.by_slot[s]
             tok = int(nxt[s])
             rec.tokens.append(tok)
@@ -527,10 +668,14 @@ class InflightScheduler:
     def metrics(self) -> Dict[str, float]:
         """Serving metrics over the finished requests: p50/p99 end-to-end
         latency and time-to-first-token (in scheduler steps), decode
-        throughput (tokens per fused step and per wall-second), and the
+        throughput (tokens per fused step and per wall-second), the
         distinct dispatch bucket rungs seen (the executable-bound
-        check)."""
+        check), and per-operating-point token counts."""
         recs = list(self.finished.values())
+        by_point: Dict[str, float] = {}
+        for r in recs:
+            p = r.request.point
+            by_point[p] = by_point.get(p, 0.0) + len(r.tokens)
         lat = np.asarray([r.finished_step - r.arrival_step for r in recs]
                          or [0], np.float64)
         ttft = np.asarray([r.first_token_step - r.arrival_step
@@ -551,4 +696,14 @@ class InflightScheduler:
             "tokens_per_s": float(toks / self.wall_s) if self.wall_s
             else 0.0,
             "extents_seen": sorted(int(e) for e in self.extents_seen),
+            "tokens_by_point": {k: float(v)
+                                for k, v in sorted(by_point.items())},
         }
+
+    def point_report(self, point: str = "") -> Dict[str, object]:
+        """Perf-model projection of one operating point's schedule:
+        `macro_perf.schedule_report` over the point's representative
+        program, with report["operating_point"] echoing the point's
+        projected TOPS/W (what `serve.py --precision-policy` and the
+        Fig. 22 rows print next to measured serving throughput)."""
+        return self.model.bound_for(point).program.perf_report(point=point)

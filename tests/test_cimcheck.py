@@ -184,15 +184,24 @@ def test_reachable_key_set_bounded():
                                     noise_enabled=False)
     ladder = prog.buckets.ladder(1024)
     assert len(keys) == 8 * len(ladder)       # 2^3 flag combos per rung
+    # a precision ladder multiplies the key set by its rung count, and
+    # the default budget still covers a 4-point noise-enabled ladder
+    keys3 = recompile.reachable_keys(
+        prog.buckets, 1024, devices=1, noise_enabled=False,
+        points=("", "quality", "throughput"))
+    assert len(keys3) == 3 * len(keys)
+    assert recompile.check_key_budget(
+        prog.buckets, 1024, devices=1, noise_enabled=True,
+        points=("", "quality", "balanced", "throughput")) == []
 
 
 def test_weak_cache_key_detected():
     """Seeded violation: a key function that drops the segment flag."""
     def weak_key(kind, extent, *, noise, keyed, devices, bound,
-                 reference, segmented, identity):
+                 reference, segmented, identity, point=""):
         # 'segmented' intentionally ignored
         return (kind, extent, noise, keyed, devices, bound, reference,
-                identity)
+                identity, point)
 
     findings = recompile.check_key_sensitivity(weak_key)
     assert [f.code for f in findings] == ["RC002"]

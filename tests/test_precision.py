@@ -1,0 +1,208 @@
+"""Workload-adaptive precision serving (ISSUE 10): sensitivity
+calibration, the accuracy-budget planner, and the compiled ladder.
+
+Pins the subsystem's contracts: the base point measures exactly zero
+delta (the calibration is self-consistent), profiles round-trip through
+the versioned on-disk cache (corrupt files degrade with one warning,
+never an error), greedy assignments nest monotonically across budgets,
+every compiled operating point stays bit-exact against the digital
+reference, and the program-cache LRU bound evicts without breaking
+already-held programs.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.mapping import LayerSpec
+from repro.precision import (DEFAULT_BUDGETS, PRECISION_CHAIN,
+                             SensitivityProfile, assign, calibrate,
+                             plan_ladder)
+from repro.precision.sensitivity import (BASE_POINT, CALIBRATION_RUNS,
+                                         LayerSensitivity,
+                                         ProfileCacheWarning)
+from repro.runtime import engine as rt
+from repro.runtime.program import (executable_key, program_cache_stats,
+                                   set_program_cache_capacity)
+
+# a tiny chained net and a reduced sweep keep calibration to a handful of
+# compiled programs per test
+SPECS = (LayerSpec(m=4, k=32, n=16, r_in=8, r_w=4),
+         LayerSpec(m=4, k=16, n=8, r_in=8, r_w=4))
+POINTS = ((1, 1), (2, 2))          # base (8, 4) is appended by calibrate
+CFG = rt.EngineConfig()
+
+
+def _calibrate(**kw):
+    kw.setdefault("points", POINTS)
+    kw.setdefault("n_trials", 1)
+    kw.setdefault("batch", 4)
+    kw.setdefault("cache_path", "")
+    return calibrate(SPECS, CFG, **kw)
+
+
+# ---- sensitivity profiles --------------------------------------------------
+
+def test_profile_base_zero_and_bounds():
+    """The base point is its own reference: exactly zero logit-MSE delta
+    and full top-1 agreement; every swept delta is finite and >= 0."""
+    prof = _calibrate()
+    assert prof.points[-1] == BASE_POINT
+    for i in range(len(SPECS)):
+        assert prof.delta(i, BASE_POINT) == 0.0
+        assert prof.agreement(i, BASE_POINT) == 1.0
+        for p in prof.points:
+            assert prof.delta(i, p) >= 0.0
+    assert prof.max_total_delta() == sum(
+        prof.delta(i, prof.points[0]) for i in range(len(SPECS)))
+    with pytest.raises(ValueError, match="not calibrated"):
+        prof.delta(0, (3, 3))
+
+
+def test_profile_cache_roundtrip(tmp_path):
+    """Identical calibrations hit the on-disk cache: one measured run,
+    byte-identical profile on re-load."""
+    path = str(tmp_path / "profiles.json")
+    n0 = CALIBRATION_RUNS["n"]
+    prof = _calibrate(cache_path=path, label="roundtrip")
+    assert CALIBRATION_RUNS["n"] == n0 + 1
+    again = _calibrate(cache_path=path, label="roundtrip")
+    assert CALIBRATION_RUNS["n"] == n0 + 1, "cache hit must not re-run"
+    assert again.to_dict() == prof.to_dict()
+    # a different label is a different key -> fresh calibration
+    _calibrate(cache_path=path, label="other")
+    assert CALIBRATION_RUNS["n"] == n0 + 2
+
+
+def test_profile_cache_corrupt_degrades(tmp_path):
+    """A corrupt cache file warns once, re-calibrates, and refuses to
+    write — the bad file neither crashes the call nor grows."""
+    path = tmp_path / "profiles.json"
+    path.write_text("{not json", encoding="utf-8")
+    n0 = CALIBRATION_RUNS["n"]
+    with pytest.warns(ProfileCacheWarning):
+        prof = _calibrate(cache_path=str(path), label="corrupt")
+    assert CALIBRATION_RUNS["n"] == n0 + 1
+    assert prof.layers and prof.delta(0, BASE_POINT) == 0.0
+    assert path.read_text(encoding="utf-8") == "{not json"
+    # schema mismatch degrades the same way
+    path.write_text(json.dumps({"schema": -1, "entries": {}}),
+                    encoding="utf-8")
+    with pytest.warns(ProfileCacheWarning):
+        _calibrate(cache_path=str(path), label="corrupt")
+    assert CALIBRATION_RUNS["n"] == n0 + 2
+
+
+# ---- the budget planner ----------------------------------------------------
+
+def _fake_profile():
+    # hand-built deltas: layer 0 is twice as sensitive as layer 1
+    points = ((1, 1), (2, 2), (8, 4))
+    return SensitivityProfile(
+        base=(8, 4), points=points, n_trials=1, chained=True,
+        layers=(LayerSensitivity(0, ((1, 1, 8.0, 0.5), (2, 2, 2.0, 0.9),
+                                     (8, 4, 0.0, 1.0))),
+                LayerSensitivity(1, ((1, 1, 4.0, 0.6), (2, 2, 1.0, 0.95),
+                                     (8, 4, 0.0, 1.0)))))
+
+
+def test_assign_budget_extremes():
+    prof = _fake_profile()
+    all_base, d0 = assign(prof, SPECS, 0.0)
+    assert all_base == ((8, 4), (8, 4)) and d0 == 0.0
+    cheapest, d1 = assign(prof, SPECS, 1.0)
+    assert cheapest == ((1, 1), (1, 1))
+    assert d1 == pytest.approx(prof.max_total_delta())
+    with pytest.raises(ValueError, match=">= 0"):
+        assign(prof, SPECS, -0.1)
+    with pytest.raises(ValueError, match="covers 2 layers"):
+        assign(prof, SPECS[:1], 0.5)
+
+
+def test_assign_nests_across_budgets():
+    """Stricter budgets only ever upgrade: for f1 <= f2, every layer's
+    point under f1 sits at or above its point under f2 on the chain
+    (the trajectory is budget-independent; only the stop moves)."""
+    prof = _fake_profile()
+    rank = {p: i for i, p in enumerate(prof.points)}
+    prev = None
+    for frac in (1.0, 0.5, 0.25, 0.1, 0.0):
+        asg, delta = assign(prof, SPECS, frac)
+        assert delta <= frac * prof.max_total_delta() + 1e-12
+        if prev is not None:
+            for a, b in zip(asg, prev):
+                assert rank[a] >= rank[b], (frac, asg, prev)
+        prev = asg
+
+
+# ---- the compiled ladder ---------------------------------------------------
+
+def test_plan_ladder_points_and_bit_exactness():
+    """Every named point compiles, orders strictest-first, projects
+    monotone efficiency, and serves bit-exactly against the digital
+    reference."""
+    prof = _calibrate()
+    ladder = plan_ladder(prof, SPECS, CFG)
+    assert ladder.names() == tuple(DEFAULT_BUDGETS)
+    rep = ladder.report()
+    assert (rep["throughput"]["tops_per_w"]
+            >= rep["quality"]["tops_per_w"])
+    for name in ladder.names():
+        op = ladder.point(name)
+        assert op.predicted_delta <= op.allowance + 1e-12 or \
+            op.assignment == (BASE_POINT,) * len(SPECS)
+        prog = ladder.program(name)
+        params = prog.init_params(jax.random.PRNGKey(3))
+        x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(4),
+                                          (4, SPECS[0].k))) + 0.1
+        out = prog.serve(params, x, point=name)
+        ref = prog.serve(params, x, reference=True, point=name)
+        assert bool(jnp.all(out == ref)), name
+    with pytest.raises(ValueError, match="unknown operating point"):
+        ladder.point("nope")
+
+
+def test_ladder_specs_follow_assignment():
+    prof = _calibrate()
+    ladder = plan_ladder(prof, SPECS, CFG)
+    for name in ladder.names():
+        op = ladder.point(name)
+        for spec, (ri, rw) in zip(ladder.specs_for(name), op.assignment):
+            assert (spec.r_in, spec.r_w) == (ri, rw)
+            assert (ri, rw) in PRECISION_CHAIN
+
+
+# ---- program-cache bounds (ISSUE 10 satellite) -----------------------------
+
+def test_executable_key_point_axis():
+    base = dict(noise=False, keyed=False, devices=1, bound=True,
+                reference=False, segmented=True, identity=True)
+    k0 = executable_key("bucket", 4, **base)
+    k1 = executable_key("bucket", 4, point="throughput", **base)
+    assert k0 != k1
+    assert k1 == executable_key("bucket", 4, point="throughput", **base)
+
+
+def test_program_cache_lru_eviction():
+    """Shrinking the LRU capacity evicts immediately (counted in stats),
+    and an evicted program keeps serving wherever it is still held —
+    eviction only means an equal future compile re-plans."""
+    from repro.runtime.program import compile_program
+    cap0 = set_program_cache_capacity(2)
+    try:
+        progs = [compile_program(
+            (LayerSpec(m=2, k=16, n=8 + 8 * i, r_in=2, r_w=1),), CFG)
+            for i in range(4)]
+        stats = program_cache_stats()
+        assert stats["capacity"] == 2
+        assert stats["programs"] <= 2
+        assert stats["evictions"] >= 2
+        # the first (evicted) program still works
+        p = progs[0]
+        params = p.init_params(jax.random.PRNGKey(0))
+        x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(1), (2, 16)))
+        assert bool(jnp.all(p.serve(params, x)
+                            == p.serve(params, x, reference=True)))
+    finally:
+        set_program_cache_capacity(cap0)

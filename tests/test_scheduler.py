@@ -62,31 +62,34 @@ _SOLO = {}
 
 def _solo(model, req: Request, noisy: bool):
     # sequential-decode oracle, cached on everything the stream depends on
-    k = (id(model), req.uid, req.prompt, req.max_new_tokens, noisy)
+    k = (id(model), req.uid, req.prompt, req.max_new_tokens, req.point,
+         noisy)
     if k not in _SOLO:
         _SOLO[k] = decode_sequential(model, req,
                                      NOISE_KEY if noisy else None)
     return _SOLO[k]
 
 
-def _schedule(seed: int, n_req: int, capacity: int):
+def _schedule(seed: int, n_req: int, capacity: int, points=("",)):
     """A deterministic fuzzed schedule: requests with random prompts,
-    generation budgets and arrival times (same seed -> same schedule)."""
+    generation budgets, arrival times, and (when more than one point is
+    offered) operating-point tags (same seed -> same schedule)."""
     rng = np.random.default_rng(seed)
     arrivals = []
     for uid in range(n_req):
         prompt = tuple(int(t) for t in
                        rng.integers(0, 23, size=int(rng.integers(1, 5))))
         req = Request(uid=uid, prompt=prompt,
-                      max_new_tokens=int(rng.integers(1, 6)))
+                      max_new_tokens=int(rng.integers(1, 6)),
+                      point=points[int(rng.integers(0, len(points)))])
         arrivals.append((int(rng.integers(0, 7)), req))
     return arrivals
 
 
 def _check_schedule(noisy: bool, seed: int, n_req: int, capacity: int,
-                    devices: int = 0):
-    model = _model(noisy, devices)
-    arrivals = _schedule(seed, n_req, capacity)
+                    devices: int = 0, model=None, points=("",)):
+    model = model or _model(noisy, devices)
+    arrivals = _schedule(seed, n_req, capacity, points)
     sched = InflightScheduler(model, capacity=capacity,
                               key=NOISE_KEY if noisy else None)
     fused = sched.run(arrivals)
@@ -217,3 +220,120 @@ def test_queueing_beyond_capacity_preserves_isolation():
     for r in reqs:
         assert out[r.uid] == _solo(model, r, False)
     assert max(sched.metrics()["extents_seen"]) <= 2
+
+
+# ---- decode attention kernel -----------------------------------------------
+
+def test_ring_decode_attention_bit_exact():
+    """The Pallas ring-decode attention kernel must equal the jitted
+    digital reference bit for bit at ragged ring states (partially
+    written rings via the additive bias)."""
+    import jax.numpy as jnp
+    from repro.kernels.flash_attn.ops import (ring_decode_attention,
+                                              ring_decode_attention_ref)
+    rng = np.random.default_rng(0)
+    for r, l, h, hd in ((1, 4, 2, 8), (5, 16, 4, 12), (8, 16, 1, 16)):
+        q = jnp.asarray(rng.standard_normal((r, h, hd)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((r, l, h, hd)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((r, l, h, hd)), jnp.float32)
+        valid = rng.integers(1, l + 1, size=r)
+        bias = jnp.asarray(
+            np.where(np.arange(l)[None, :] < valid[:, None], 0.0, -1e9),
+            jnp.float32)
+        out = ring_decode_attention(q, k, v, bias)
+        ref = ring_decode_attention_ref(q, k, v, bias)
+        assert bool(jnp.all(out == ref)), (r, l, h, hd)
+
+
+# ---- mixed operating points (ISSUE 10) -------------------------------------
+
+_POINTS = ("", "throughput", "quality")
+
+
+def _mixed_model(noisy: bool = False, devices: int = 0) -> CIMDecodeLM:
+    # a precision ladder over the SAME weights: per-projection mixed
+    # assignment for "quality", uniform low precision for "throughput"
+    k = ("mixed", noisy, devices)
+    if k not in _MODELS:
+        cfg = rt.EngineConfig(noise=NoiseConfig()) if noisy \
+            else rt.EngineConfig()
+        if devices:
+            cfg = cfg.replace(
+                sharding=rt.ShardingConfig(devices=devices))
+        _MODELS[k] = CIMDecodeLM.toy(
+            KEY, d=48, depth=2, vocab=23, r_in=4, r_w=2, cfg=cfg,
+            points={"throughput": (2, 1),
+                    "quality": ((4, 2), (4, 4), (2, 2), (4, 2))})
+    return _MODELS[k]
+
+
+def test_point_validation():
+    model = _mixed_model(False)
+    assert model.points == ("", "quality", "throughput")
+    with pytest.raises(ValueError, match="unknown operating point"):
+        model.blocks_for("no-such-point")
+    with pytest.raises(ValueError, match="unknown operating point"):
+        InflightScheduler(model, capacity=2).submit(
+            Request(uid=0, prompt=(1,), max_new_tokens=1, point="nope"))
+    with pytest.raises(ValueError, match="str tag"):
+        Request(uid=0, prompt=(1,), max_new_tokens=1, point=3)
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 6), st.sampled_from([2, 3, 4]))
+def test_mixed_points_fused_equals_sequential_clean(seed, n_req, capacity):
+    """Any schedule mixing base/quality/throughput requests: every fused
+    request is bit-identical to its solo decode at the same point."""
+    _check_schedule(False, seed, n_req, capacity,
+                    model=_mixed_model(False), points=_POINTS)
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 5), st.sampled_from([2, 4]))
+def test_mixed_points_fused_equals_sequential_noise(seed, n_req, capacity):
+    """Mixed-point schedules under one fixed noise key: per-request
+    isolation holds whatever point a batchmate decodes at."""
+    _check_schedule(True, seed, n_req, capacity,
+                    model=_mixed_model(True), points=_POINTS)
+
+
+@pytest.mark.parametrize("noisy", [False, True])
+def test_mixed_points_8dev(noisy):
+    """Mixed-point isolation across the sharded 8-macro mesh."""
+    _need(8)
+    _check_schedule(noisy, seed=99, n_req=4, capacity=3, devices=8,
+                    model=_mixed_model(noisy, 8), points=_POINTS)
+
+
+def test_mixed_points_zero_postwarmup_recompiles():
+    """After one schedule covering every operating point, further mixed
+    schedules trigger zero re-traces/re-plans: the point axis enlarges
+    the executable set but the bucket ladder still bounds it."""
+    model = _mixed_model(False)
+    for seed in (12, 13):                                 # warmup pass
+        InflightScheduler(model, capacity=4).run(
+            _schedule(seed, 6, 4, _POINTS))
+    t0, p0 = rt.TRACE_COUNT["n"], rt.PLAN_COUNT["n"]
+    for seed in (12, 13):                                 # measured pass
+        InflightScheduler(model, capacity=4).run(
+            _schedule(seed, 6, 4, _POINTS))
+    assert rt.TRACE_COUNT["n"] == t0, "post-warmup retrace"
+    assert rt.PLAN_COUNT["n"] == p0, "post-warmup replan"
+
+
+def test_mixed_points_metrics_and_report():
+    """tokens_by_point accounts every finished request's stream, and
+    point_report echoes the operating point next to its projected
+    efficiency."""
+    model = _mixed_model(False)
+    reqs = [Request(uid=u, prompt=(u % 23, 1), max_new_tokens=2,
+                    point=_POINTS[u % 3]) for u in range(6)]
+    sched = InflightScheduler(model, capacity=4)
+    out = sched.run([(0, r) for r in reqs])
+    m = sched.metrics()
+    for p in _POINTS:
+        want = sum(len(out[r.uid]) for r in reqs if r.point == p)
+        assert m["tokens_by_point"][p] == want
+    rep = sched.point_report("throughput")
+    assert rep["operating_point"]["name"] == "throughput"
+    assert rep["operating_point"]["tops_per_w"] > 0
